@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(name: str):
+    """Decorator: time the benchmark body; it returns the derived string."""
+    def deco(fn: Callable[[], str]):
+        def run():
+            t0 = time.time()
+            derived = fn()
+            record(name, (time.time() - t0) * 1e6, derived)
+        run.__name__ = f"bench_{name}"
+        return run
+    return deco

@@ -1,0 +1,49 @@
+"""Figure 5: dynamic energy is linear in instruction count
+(base / +mul / 2x-base microbenchmark triple)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import measure, microbench, opcount
+from repro.hw.device import Program
+from repro.hw.systems import get_device
+
+
+def _variant(n_mul: int, n_add: int):
+    # register-resident working set: the energy delta is purely the added
+    # instructions (Fig. 5's loop executes on register values)
+    def fn(c0):
+        def body(c, _):
+            for _ in range(n_mul):
+                c = c * 1.0001
+            for _ in range(n_add):
+                c = c + 0.5
+            return c, ()
+        c, _ = jax.lax.scan(body, c0, None, length=64)
+        return c
+    return opcount.count_fn(fn, jax.ShapeDtypeStruct((128, 1024),
+                                                     jnp.float32))
+
+
+@timed("fig5_linearity")
+def linearity():
+    dev = get_device("sim-v5e-air")
+    p_const = measure.constant_power(dev.idle(30.0))
+    ns = microbench._nanosleep_counts()
+    p_static = measure.static_power(
+        dev.run(Program("ns", ns, iters=dev.iters_for_duration(ns, 60.0),
+                        is_nanosleep=True)), p_const)
+    iters = dev.iters_for_duration(_variant(16, 16), 60.0)
+    e = {}
+    for name, (m, a) in {"base": (16, 16), "add_mul": (32, 16),
+                         "x2": (32, 32)}.items():
+        rec = dev.run(Program("lin", _variant(m, a), iters=iters))
+        e[name] = measure.dynamic_energy(rec, p_const, p_static) / rec.iters
+    ratio = e["x2"] / e["base"]
+    return (f"Edyn base={e['base']:.3e}J|+mul={e['add_mul']:.3e}J"
+            f"|2x={e['x2']:.3e}J|2x/base={ratio:.3f}")
+
+
+ALL = [linearity]

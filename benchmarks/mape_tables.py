@@ -1,0 +1,58 @@
+"""Tables 4-7 + Figures 6-9: MAPE of every model on every system, with
+Direct/Pred coverage, plus the AccelWattch self-consistency check (Fig. 1:
+accurate on its own reference environment, brittle on the deployment)."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core.evaluate import evaluate_system
+
+
+@timed("table4_air_v5e_mape")
+def table4():
+    rep = evaluate_system("sim-v5e-air")
+    t = rep.mape_table()
+    return ("AW={accelwattch:.1f}%|Guser={guser:.1f}%"
+            "|Direct={wattchmen_direct:.1f}%|Pred={wattchmen_pred:.1f}%"
+            .format(**t))
+
+
+@timed("table5_liquid_v5e_mape")
+def table5():
+    rep = evaluate_system("sim-v5e-liquid", with_guser=False)
+    t = rep.mape_table()
+    return ("AW={accelwattch:.1f}%|Direct={wattchmen_direct:.1f}%"
+            "|Pred={wattchmen_pred:.1f}%".format(**t))
+
+
+@timed("table6_v5p_mape_coverage")
+def table6():
+    rep = evaluate_system("sim-v5p-air", with_accelwattch=False,
+                          with_guser=False)
+    t = rep.mape_table()
+    return (f"Direct={t['wattchmen_direct']:.1f}%"
+            f"|Pred={t['wattchmen_pred']:.1f}%"
+            f"|covDirect={rep.mean_coverage('direct'):.0%}"
+            f"|covPred={rep.mean_coverage('pred'):.0%}")
+
+
+@timed("table7_v6e_mape_coverage")
+def table7():
+    rep = evaluate_system("sim-v6e-air", with_accelwattch=False,
+                          with_guser=False)
+    t = rep.mape_table()
+    return (f"Direct={t['wattchmen_direct']:.1f}%"
+            f"|Pred={t['wattchmen_pred']:.1f}%"
+            f"|covDirect={rep.mean_coverage('direct'):.0%}"
+            f"|covPred={rep.mean_coverage('pred'):.0%}")
+
+
+@timed("fig1_accelwattch_selfcheck")
+def fig1():
+    """AccelWattch on its own calibration environment vs the deployment."""
+    own = evaluate_system("sim-v5e-ref", with_guser=False)
+    dep = evaluate_system("sim-v5e-air", with_guser=False)
+    return (f"own_env={own.mape_table()['accelwattch']:.1f}%"
+            f"|deployment={dep.mape_table()['accelwattch']:.1f}%")
+
+
+ALL = [table4, table5, table6, table7, fig1]

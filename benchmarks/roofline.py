@@ -1,0 +1,64 @@
+"""§Roofline: per (arch x shape) three-term roofline from the dry-run
+artifacts (results/dryrun_all.json, produced by repro.launch.dryrun), plus
+per-cell energy/step predictions from the Wattchmen table — the fleet-level
+integration of the paper."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import record, timed
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _load(name="dryrun_final.json"):
+    for cand in (name, "dryrun_all.json"):
+        p = RESULTS / cand
+        if p.exists():
+            return json.loads(p.read_text())
+    return []
+
+
+@timed("roofline_summary")
+def summary():
+    rows = [r for r in _load() if r.get("mesh") == "16x16"]
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        return "no dryrun results (run: python -m repro.launch.dryrun --all)"
+    bounds = {}
+    for r in ok:
+        bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+    worst = min(ok, key=lambda r: r.get("roofline_fraction", 0))
+    most_coll = max(ok, key=lambda r: r["collective_s"])
+    return (f"cells={len(rows)}|ok={len(ok)}|bounds={bounds}"
+            f"|worst_fraction={worst['arch']}/{worst['shape']}"
+            f"={worst.get('roofline_fraction', 0):.3f}"
+            f"|most_collective={most_coll['arch']}/{most_coll['shape']}"
+            f"={most_coll['collective_s']:.2e}s")
+
+
+def per_cell_rows():
+    for r in _load():
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        record(
+            f"roofline_{r['arch']}_{r['shape']}",
+            r.get("compile_s", 0.0) * 1e6,
+            (f"bound={r['bound']}|compute={r['compute_s']:.3e}s"
+             f"|memory={r['memory_s']:.3e}s"
+             f"|collective={r['collective_s']:.3e}s"
+             f"|useful_flops={r['useful_flops_ratio']:.2f}"
+             f"|roofline_frac={r.get('roofline_fraction', 0):.3f}"))
+
+
+@timed("multipod_coherence")
+def multipod():
+    rows = [r for r in _load() if r.get("mesh") == "2x16x16"]
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skipped")
+    err = sum(1 for r in rows if r["status"] == "error")
+    return f"cells={len(rows)}|ok={ok}|skipped={skip}|errors={err}"
+
+
+ALL = [summary, multipod, per_cell_rows]

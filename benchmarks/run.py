@@ -1,0 +1,31 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  - table4..table7 / fig1: MAPE reproductions (paper Tables 4-7, Fig. 1)
+  - fig5: dynamic-energy linearity
+  - fig14: cross-system table transfer
+  - case_*: the two §5.3 case studies
+  - roofline_*: §Roofline terms per (arch x shape) from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (case_backprop, case_qmc, linearity, mape_tables,
+                            roofline, transfer_fig14)
+    for mod in (mape_tables, linearity, transfer_fig14, case_backprop,
+                case_qmc, roofline):
+        for bench in mod.ALL:
+            try:
+                bench()
+            except Exception as e:   # noqa: BLE001 — report, keep going
+                from benchmarks.common import record
+                record(getattr(bench, "__name__", "bench"), 0.0,
+                       f"ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Figure 14: cross-system affine transfer of the energy table.
+
+Fit air->liquid on a random 10% / 50% subset of classes, predict the rest,
+and show workload MAPE stays at the fully-profiled level (plus the R² of
+the underlying linear relationship, paper: 0.988)."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import transfer
+from repro.core.evaluate import evaluate_system
+from repro.core.trainer import cached_table
+from repro.hw.systems import get_device
+
+
+@timed("fig14_transfer")
+def fig14():
+    air = cached_table("sim-v5e-air")
+    liq = cached_table("sim-v5e-liquid")
+    r2 = transfer.r2_between(air, liq)
+    chip = get_device("sim-v5e-liquid").chip
+    out = [f"R2={r2:.3f}"]
+    for frac in (0.1, 0.5):
+        hybrid, _ = transfer.transfer_table(air, liq, frac, seed=3, chip=chip)
+        rep = evaluate_system("sim-v5e-liquid", table=hybrid,
+                              with_accelwattch=False, with_guser=False)
+        out.append(f"{int(frac*100)}%={rep.mape_table()['wattchmen_pred']:.1f}%")
+    rep_full = evaluate_system("sim-v5e-liquid", with_accelwattch=False,
+                               with_guser=False)
+    out.append(f"100%={rep_full.mape_table()['wattchmen_pred']:.1f}%")
+    return "|".join(out)
+
+
+ALL = [fig14]

@@ -1,0 +1,65 @@
+"""Energy audit — the paper's Backprop case study (§5.3.1) as a workflow.
+
+A training kernel accidentally runs in f32 because one constant was created
+with the "system default" dtype (the paper's ``#define``-double bug, TPU
+edition: a strong-typed f32 scalar upcasts the whole bf16 graph).
+Wattchmen's per-class breakdown points straight at ``dot.f32`` +
+``convert.bf16.f32``; one line later the kernel is ~30% cheaper.
+
+    PYTHONPATH=src python examples/energy_audit.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import opcount, predict
+from repro.core.trainer import cached_table
+from repro.hw import Program, get_device
+
+SCALE_BUGGY = jnp.float32(0.125)      # strong f32: silently upcasts bf16!
+SCALE_FIXED = 0.125                   # weak python float: stays bf16
+
+
+def make_backprop(scale):
+    def backprop_k2(x, w1, w2, y):
+        def loss(w1, w2):
+            h = jnp.tanh((x @ w1) * scale)
+            o = jax.nn.sigmoid(h @ w2)
+            return jnp.mean((o - y) ** 2)
+        g1, g2 = jax.grad(loss, argnums=(0, 1))(w1, w2)
+        return g1.sum() + g2.sum()
+    return backprop_k2
+
+
+def audit(fn, iters=None):
+    """Profile + measure + predict one variant.  Both variants are the same
+    application on the same inputs, so they share the Program name and run
+    the same iteration count (energy for equal work, as in the paper)."""
+    args = (jax.ShapeDtypeStruct((65536, 512), jnp.bfloat16),
+            jax.ShapeDtypeStruct((512, 2048), jnp.bfloat16),
+            jax.ShapeDtypeStruct((2048, 64), jnp.bfloat16),
+            jax.ShapeDtypeStruct((65536, 64), jnp.bfloat16))
+    counts = opcount.count_fn(fn, *args)
+    dev = get_device("sim-v5e-air")
+    iters = iters or dev.iters_for_duration(counts, 30.0)
+    rec = dev.run(Program("backprop_k2", counts, iters=iters))
+    pred = predict.predict(cached_table("sim-v5e-air"),
+                           counts.scaled(rec.iters), rec.duration_s,
+                           counters=rec.counters)
+    return rec, pred, iters
+
+
+rec_bug, pred_bug, n_iters = audit(make_backprop(SCALE_BUGGY))
+print("=== buggy kernel: Wattchmen breakdown ===")
+for cls, e in pred_bug.top_classes(6):
+    print(f"  {cls:22s} {e:10.2f} J")
+flagged = [c for c, _ in pred_bug.top_classes(6)
+           if c.endswith(".f32") and c.startswith(("dot", "convert"))]
+print(f"\n-> f32 compute in a bf16 model: {flagged} — precision bug!\n")
+
+rec_fix, pred_fix, _ = audit(make_backprop(SCALE_FIXED), iters=n_iters)
+saved_meas = 1 - rec_fix.energy_counter_j / rec_bug.energy_counter_j
+saved_pred = 1 - pred_fix.total_j / pred_bug.total_j
+print(f"measured  energy: {rec_bug.energy_counter_j:9.0f} J -> "
+      f"{rec_fix.energy_counter_j:9.0f} J  ({saved_meas:+.1%} saved)")
+print(f"predicted energy: {pred_bug.total_j:9.0f} J -> "
+      f"{pred_fix.total_j:9.0f} J  ({saved_pred:+.1%} saved)")

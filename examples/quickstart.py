@@ -1,0 +1,48 @@
+"""Quickstart: the paper in one page.
+
+Train a per-op energy table on the simulated v5e (microbenchmarks +
+steady-state measurement + non-negative solve), then predict and attribute
+the energy of a workload it has never seen.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import opcount, predict
+from repro.core.trainer import train_table
+from repro.hw import Program, get_device
+
+# --- training phase (paper Fig. 2 top): ~76 microbenchmarks, solved jointly
+table = train_table("sim-v5e-air")
+print(f"table: {len(table.direct)} direct classes, "
+      f"P_const={table.p_const:.1f}W P_static={table.p_static:.1f}W "
+      f"residual={table.meta['residual_rel']:.4f}")
+
+# --- an application the table has never seen
+def my_app(x, w1, w2):
+    h = jax.nn.gelu(x @ w1)
+    return jnp.sum(jax.nn.softmax(h @ w2, axis=-1))
+
+args = (jax.ShapeDtypeStruct((8192, 1024), jnp.bfloat16),
+        jax.ShapeDtypeStruct((1024, 4096), jnp.bfloat16),
+        jax.ShapeDtypeStruct((4096, 1024), jnp.bfloat16))
+counts = opcount.count_fn(my_app, *args)
+
+# --- ground truth from the device (NVML analogue) vs Wattchmen prediction
+dev = get_device("sim-v5e-air")
+rec = dev.run(Program("my_app", counts,
+                      iters=dev.iters_for_duration(counts, 30.0)))
+pred = predict.predict(table, counts.scaled(rec.iters), rec.duration_s,
+                       counters=rec.counters)
+
+print(f"\nmeasured : {rec.energy_counter_j:10.1f} J")
+print(f"predicted: {pred.total_j:10.1f} J "
+      f"({100 * (pred.total_j / rec.energy_counter_j - 1):+.1f}%)")
+print(f"coverage : {pred.coverage:.1%} of dynamic energy from direct entries")
+print("\ntop energy consumers:")
+for cls, e in pred.top_classes(6):
+    print(f"  {cls:20s} {e:10.2f} J")
+print("\nby bucket:")
+for b, e in sorted(pred.by_bucket.items(), key=lambda kv: -kv[1]):
+    print(f"  {b:12s} {e:10.2f} J")

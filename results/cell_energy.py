@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-cell energy predictions: the Wattchmen table applied to every
+(arch x shape) step program — pod-level J/step and J/token on 256 chips.
+
+    PYTHONPATH=src python results/cell_energy.py > results/cell_energy.md
+"""
+import json       # noqa: E402
+import pathlib    # noqa: E402
+
+import jax        # noqa: E402
+
+from repro import configs as cfgs                     # noqa: E402
+from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
+from repro.core.opcount import count_fn               # noqa: E402
+from repro.core.predict import predict                # noqa: E402
+from repro.core.trainer import cached_table           # noqa: E402
+from repro.launch.dryrun import build_cell            # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+
+N_CHIPS = 256
+
+
+def main():
+    rows = json.loads((pathlib.Path(__file__).parent
+                       / "dryrun_final.json").read_text())
+    step_lb = {(r["arch"], r["shape"]): max(r["compute_s"], r["memory_s"],
+                                            r["collective_s"])
+               for r in rows if r["status"] == "ok" and r["mesh"] == "16x16"}
+    table = cached_table("sim-v5e-air")
+    mesh = make_production_mesh()
+    print("| arch | shape | step LB (s) | pod energy/step (J) | "
+          "J/token | dominant bucket |")
+    print("|---|---|---|---|---|---|")
+    for arch in cfgs.ARCHS:
+        for shape_name in SHAPES:
+            cfg = cfgs.get_config(arch)
+            shape = SHAPES[shape_name]
+            if not shape_applicable(cfg, shape)[0]:
+                continue
+            fn, args, _ = build_cell(arch, shape_name, mesh)
+            counts = count_fn(fn, *args)
+            t = step_lb.get((arch, shape_name), 1.0)
+            # per-chip share of the program + per-chip static/const x time
+            pred = predict(table, counts.scaled(1.0 / N_CHIPS), t)
+            pod_j = pred.total_j * N_CHIPS
+            tokens = (shape.global_batch * shape.seq_len
+                      if shape.kind != "decode" else shape.global_batch)
+            dom = max(((b, e) for b, e in pred.by_bucket.items()),
+                      key=lambda kv: kv[1])[0]
+            print(f"| {arch} | {shape_name} | {t:.3e} | {pod_j:.3e} "
+                  f"| {pod_j / tokens:.3e} | {dom} |")
+
+
+if __name__ == "__main__":
+    main()

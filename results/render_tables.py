@@ -1,0 +1,39 @@
+"""Render the EXPERIMENTS.md roofline table from dryrun_final.json."""
+import json
+import pathlib
+import sys
+
+rows = json.loads((pathlib.Path(__file__).parent / "dryrun_final.json")
+                  .read_text())
+
+
+def fmt(mesh):
+    out = []
+    out.append("| arch | shape | bound | compute (s) | memory (s) | "
+               "collective (s) | wire GiB/chip | bytes/dev GiB | "
+               "useful FLOPs | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — |"
+                       f" — | — | skipped (long-context inapplicable) |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['bound']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} "
+            f"| {r['wire_bytes_per_device']/2**30:.2f} "
+            f"| {r['total_bytes_per_device']/2**30:.2f} "
+            f"| {min(r['useful_flops_ratio'], 1.0):.2f} "
+            f"| {r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(fmt(mesh))

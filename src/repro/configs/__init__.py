@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_config(arch_id)`` + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, input_specs  # noqa: F401
+from repro.configs import (arctic_480b, gemma2_27b, h2o_danube3_4b,
+                           llama4_scout_17b_a16e, mamba2_2_7b, minicpm3_4b,
+                           qwen2_0_5b, qwen2_vl_7b, whisper_small, zamba2_2_7b)
+
+_MODULES = {
+    "whisper-small": whisper_small,
+    "arctic-480b": arctic_480b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "gemma2-27b": gemma2_27b,
+    "h2o-danube-3-4b": h2o_danube3_4b,
+    "minicpm3-4b": minicpm3_4b,
+    "qwen2-0.5b": qwen2_0_5b,
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "mamba2-2.7b": mamba2_2_7b,
+    "zamba2-2.7b": zamba2_2_7b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,19 @@
+"""arctic-480b — dense-residual MoE [hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) dense d_ff=4864, MoE 128 experts top-2
+(expert d_ff=4864) with a dense residual MLP, vocab=32000.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab=32000, n_experts=128, moe_top_k=2, moe_dense_residual=True,
+    optimizer_dtype="bfloat16",   # 480B params: bf16 m/v to fit HBM
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="arctic-480b-smoke", n_layers=2, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=128, vocab=256, n_experts=8, moe_top_k=2,
+    remat=False)

@@ -1,0 +1,21 @@
+"""gemma2-27b — local/global alternating attention + logit softcaps
+[arXiv:2408.00118].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000; head_dim=128,
+attn softcap 50, final softcap 30, local window 4096 on even layers.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b", family="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, d_ff=36864,
+    vocab=256000, head_dim=128, local_global=True, local_window=4096,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    mlp_act="gelu", post_norms=True, tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="gemma2-27b-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=256, head_dim=16, local_window=16,
+    remat=False)

@@ -1,0 +1,19 @@
+"""llama4-scout-17b-a16e — MoE w/ early fusion [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192, MoE 16 experts top-1 + shared
+expert, vocab=202048.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab=202048, n_experts=16, moe_top_k=1, moe_dense_residual=True,
+    rope_theta=500000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llama4-scout-smoke", n_layers=2, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=128, vocab=256, n_experts=4, moe_top_k=1,
+    remat=False)

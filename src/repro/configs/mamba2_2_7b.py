@@ -1,0 +1,17 @@
+"""mamba2-2.7b — SSD state-space model, attention-free [arXiv:2405.21060].
+
+64L d_model=2560 vocab=50280; ssm_state=128, head_dim=64, expand=2.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="mamba2-smoke", n_layers=2, d_model=64, vocab=256,
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=8, remat=False)

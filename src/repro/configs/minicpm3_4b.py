@@ -1,0 +1,19 @@
+"""minicpm3-4b — multi-head latent attention (MLA) [hf:openbmb/MiniCPM3-4B].
+
+62L d_model=2560 40H d_ff=6400 vocab=73448; q_lora 768, kv_lora 256,
+rope_head_dim 32, nope_head_dim 64.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_ff=6400,
+    vocab=73448, mla=True, q_lora_rank=768, kv_lora_rank=256,
+    rope_head_dim=32, nope_head_dim=64, tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="minicpm3-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=256, q_lora_rank=32, kv_lora_rank=16,
+    rope_head_dim=8, nope_head_dim=16, remat=False)

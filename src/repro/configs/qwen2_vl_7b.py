@@ -1,0 +1,18 @@
+"""qwen2-vl-7b — M-RoPE VLM backbone [arXiv:2409.12191].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064; vision frontend is
+a stub (``input_specs`` supplies patch embeddings + 3D position ids).
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab=152064, qkv_bias=True, mrope=True, n_vision_tokens=1024,
+    rope_theta=1000000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="qwen2-vl-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=256, n_vision_tokens=8, remat=False)

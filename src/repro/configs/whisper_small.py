@@ -1,0 +1,19 @@
+"""whisper-small — enc-dec audio backbone [arXiv:2212.04356].
+
+12L d_model=768 12H (kv=12, i.e. MHA) d_ff=3072 vocab=51865; conv frontend
+is a stub (``input_specs`` supplies precomputed frame embeddings).
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab=51865, encoder_layers=12, n_audio_frames=1500,
+    mlp_act="gelu", mlp_gated=False, tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="whisper-small-smoke", n_layers=2, encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+    n_audio_frames=32, remat=False)

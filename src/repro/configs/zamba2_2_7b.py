@@ -1,0 +1,19 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+54L d_model=2560 32H (MHA kv=32) d_ff=10240 vocab=32000; ssm_state=64;
+one shared attention block applied every 6 layers.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240,
+    vocab=32000, ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    shared_attn_every=6,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="zamba2-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=256, ssm_state=16, ssm_head_dim=16,
+    ssm_chunk=8, shared_attn_every=2, remat=False)

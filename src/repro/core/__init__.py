@@ -1,0 +1,6 @@
+"""Wattchmen core: the paper's contribution as a composable library.
+
+Training phase:  ``trainer.train_table(system)`` -> ``EnergyTable``
+Prediction:      ``predict.predict(table, counts, duration, counters)``
+Profiler:        ``opcount.count_fn`` (jaxpr) + ``repro.hlo`` (compiled HLO)
+"""

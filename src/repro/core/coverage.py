@@ -1,0 +1,49 @@
+"""Coverage extension: scaling, grouping, bucketing — paper §3.4.
+
+*Grouping* happens upstream in ``isa.group_class`` (modifier folding).
+*Scaling* derives unmeasured memory-hierarchy entries from measured ratios.
+*Bucketing* averages known energies per micro-architectural bucket and uses
+the average for any class without a direct or scaled entry.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.table import EnergyTable
+from repro.hw.spec import ChipSpec
+
+
+def apply_scaling(table: EnergyTable, chip: Optional[ChipSpec] = None) -> None:
+    """Scaling rules (paper: e(LDG@L2) = e(LDG@L1) * e(STG@L2)/e(STG@L1)).
+
+    - ``vmem.write`` from the measured read/write ratio at the HBM level.
+    - ``dcn.transfer`` from the ICI energy scaled by the public
+      link-bandwidth ratio (no cross-pod microbenchmark in the suite).
+    """
+    d = table.direct
+    if ("vmem.write" not in d and "vmem.read" in d
+            and d.get("hbm.read", 0) > 0 and "hbm.write" in d):
+        table.scaled["vmem.write"] = (
+            d["vmem.read"] * d["hbm.write"] / d["hbm.read"])
+    if "dcn.transfer" not in d and "ici.all_to_all" in d and chip is not None:
+        ratio = chip.ici_link_bandwidth / max(chip.dcn_bandwidth, 1.0)
+        table.scaled["dcn.transfer"] = d["ici.all_to_all"] * ratio
+
+
+def compute_bucket_means(table: EnergyTable) -> None:
+    """Per-bucket averages over *known* energies (direct + scaled)."""
+    groups: Dict[str, list] = defaultdict(list)
+    for cls, e in {**table.direct, **table.scaled}.items():
+        b = isa.bucket_of(cls)
+        if b is not None and e > 0:
+            groups[b].append(e)
+    table.bucket_means = {b: float(np.mean(v)) for b, v in groups.items() if v}
+
+
+def extend_table(table: EnergyTable, chip: Optional[ChipSpec] = None) -> None:
+    apply_scaling(table, chip)
+    compute_bucket_means(table)

@@ -1,0 +1,87 @@
+"""End-to-end evaluation: run workloads, predict with every model, MAPE.
+
+Reproduces the paper's Figures 6-9 / Tables 4-7 pipeline: for each workload,
+ground truth is the device's NVML-style energy counter; predictions come from
+AccelWattch-style (A), Guser-style (G), Wattchmen-Direct (B) and
+Wattchmen-Pred (C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import baselines, predict as predict_mod
+from repro.core.table import EnergyTable
+from repro.core.trainer import cached_table
+from repro.hw.device import Program
+from repro.hw.systems import get_device
+from repro.workloads.suite import Workload, build_workloads
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    name: str
+    family: str
+    duration_s: float
+    measured_j: float
+    predictions: Dict[str, float]          # model label -> J
+    coverage_direct: float
+    coverage_pred: float
+    breakdown: Dict[str, float]            # Wattchmen-Pred bucket breakdown
+
+
+@dataclasses.dataclass
+class EvalReport:
+    system: str
+    results: List[WorkloadResult]
+
+    def mape(self, model: str) -> float:
+        return predict_mod.mape(
+            [(r.predictions[model], r.measured_j) for r in self.results])
+
+    def mape_table(self) -> Dict[str, float]:
+        models = self.results[0].predictions.keys() if self.results else []
+        return {m: self.mape(m) for m in models}
+
+    def mean_coverage(self, mode: str = "direct") -> float:
+        vals = [r.coverage_direct if mode == "direct" else r.coverage_pred
+                for r in self.results]
+        return sum(vals) / max(len(vals), 1)
+
+
+def evaluate_system(system: str,
+                    table: Optional[EnergyTable] = None,
+                    workloads: Optional[Sequence[Workload]] = None,
+                    with_accelwattch: bool = True,
+                    with_guser: bool = True) -> EvalReport:
+    dev = get_device(system)
+    table = table or cached_table(system)
+    wls = list(workloads) if workloads is not None else build_workloads(
+        isa_gen=dev.chip.isa_gen)
+    aw = baselines.train_accelwattch() if with_accelwattch else None
+    gu = baselines.train_guser(system) if with_guser else None
+
+    results = []
+    for wl in wls:
+        iters = dev.iters_for_duration(wl.counts, wl.target_seconds)
+        rec = dev.run(Program(wl.name, wl.counts, iters=iters))
+        total = wl.counts.scaled(rec.iters)
+        preds: Dict[str, float] = {}
+        p_direct = predict_mod.predict(table, total, rec.duration_s,
+                                       counters=rec.counters, mode="direct")
+        p_pred = predict_mod.predict(table, total, rec.duration_s,
+                                     counters=rec.counters, mode="pred")
+        preds["wattchmen_direct"] = p_direct.total_j
+        preds["wattchmen_pred"] = p_pred.total_j
+        if aw is not None:
+            preds["accelwattch"] = aw.predict_energy(total, rec.duration_s,
+                                                     rec.counters)
+        if gu is not None:
+            preds["guser"] = gu.predict_energy(total, rec.duration_s,
+                                               rec.counters)
+        results.append(WorkloadResult(
+            name=wl.name, family=wl.family, duration_s=rec.duration_s,
+            measured_j=rec.energy_counter_j, predictions=preds,
+            coverage_direct=p_direct.coverage, coverage_pred=p_pred.coverage,
+            breakdown=p_pred.by_bucket))
+    return EvalReport(system=system, results=results)

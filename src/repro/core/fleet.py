@@ -1,0 +1,93 @@
+"""Fleet monitoring — "watching the wattchers" in production.
+
+This is the machinery behind the QMCPACK case study (§5.3.2): Wattchmen is
+integrated into a monitoring workflow; per-step energy predictions and
+breakdowns are streamed, and anomalies (a class whose energy share spikes
+versus its rolling baseline) are flagged for the developer.  In this repo
+the same monitor wraps the training/serving loops of ``repro.launch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core.opcount import OpCounts
+from repro.core.predict import Prediction, predict
+from repro.core.table import EnergyTable
+
+
+@dataclasses.dataclass
+class Anomaly:
+    step: int
+    cls: str
+    share: float
+    baseline_share: float
+    message: str
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    prediction: Prediction
+    joules_per_unit_work: float
+
+
+class EnergyMonitor:
+    """Streaming per-step energy attribution with spike detection."""
+
+    def __init__(self, table: EnergyTable, window: int = 16,
+                 spike_ratio: float = 1.75, min_share: float = 0.04):
+        self.table = table
+        self.window = window
+        self.spike_ratio = spike_ratio
+        self.min_share = min_share
+        self._hist: Dict[str, Deque[float]] = defaultdict(
+            lambda: deque(maxlen=window))
+        self.records: List[StepRecord] = []
+        self.anomalies: List[Anomaly] = []
+
+    def observe(self, step: int, counts: OpCounts, duration_s: float,
+                counters: Optional[dict] = None,
+                work_units: float = 1.0) -> StepRecord:
+        pred = predict(self.table, counts, duration_s, counters=counters)
+        rec = StepRecord(step=step, prediction=pred,
+                         joules_per_unit_work=pred.total_j / max(work_units, 1e-12))
+        self.records.append(rec)
+        # step-level energy spike (uniform regressions move no class share —
+        # the paper's QMCPACK "unusual DMC spikes")
+        ehist = self._hist["__step_energy__"]
+        if len(ehist) >= self.window // 2:
+            base = sum(ehist) / len(ehist)
+            if base > 0 and rec.joules_per_unit_work > self.spike_ratio * base:
+                self.anomalies.append(Anomaly(
+                    step=step, cls="__step_energy__",
+                    share=rec.joules_per_unit_work, baseline_share=base,
+                    message=(f"step {step}: energy/work "
+                             f"{rec.joules_per_unit_work:.3e} J vs baseline "
+                             f"{base:.3e} J "
+                             f"(x{rec.joules_per_unit_work / base:.2f})")))
+        ehist.append(rec.joules_per_unit_work)
+        dyn = max(pred.dynamic_j, 1e-12)
+        for cls, e in pred.by_class.items():
+            share = e / dyn
+            hist = self._hist[cls]
+            if len(hist) >= self.window // 2:
+                base = sum(hist) / len(hist)
+                if share > self.min_share and base > 1e-6 \
+                        and share > self.spike_ratio * base:
+                    self.anomalies.append(Anomaly(
+                        step=step, cls=cls, share=share, baseline_share=base,
+                        message=(f"step {step}: class '{cls}' energy share "
+                                 f"{share:.1%} vs baseline {base:.1%} "
+                                 f"(x{share / base:.2f})")))
+            hist.append(share)
+        return rec
+
+    def top_consumers(self, k: int = 10):
+        """Aggregate per-class energy over all observed steps (Fig. 10)."""
+        agg: Dict[str, float] = defaultdict(float)
+        for r in self.records:
+            for cls, e in r.prediction.by_class.items():
+                agg[cls] += e
+        return sorted(agg.items(), key=lambda kv: -kv[1])[:k]

@@ -1,0 +1,112 @@
+"""Prediction & attribution phase — paper §3.5.
+
+Inputs per application: profiled op counts (``core.opcount``), execution
+time, and memory counters (HBM/VMEM bytes — the cache-hit-rate analogue).
+Output: total energy plus a fine-grained breakdown by op class and by
+micro-architectural bucket, with const/static separated — the artifact the
+case studies (§5.3) consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Mapping, Optional
+
+from repro.core import isa
+from repro.core.opcount import OpCounts
+from repro.core.table import DIRECT, EnergyTable
+
+# How predicted traffic is split when no profiled counters are available
+# (pure static prediction from a lowered program).
+_DEFAULT_HBM_BOUNDARY_FRAC = 0.85
+_DEFAULT_FUSED_LEAK = 0.05
+
+
+@dataclasses.dataclass
+class Prediction:
+    total_j: float
+    const_j: float
+    static_j: float
+    dynamic_j: float
+    by_class: Dict[str, float]
+    by_bucket: Dict[str, float]
+    coverage: float            # energy-weighted fraction attributed directly
+    duration_s: float
+
+    def top_classes(self, k: int = 10):
+        return sorted(self.by_class.items(), key=lambda kv: -kv[1])[:k]
+
+
+def traffic_from_counts(counts: OpCounts) -> Dict[str, float]:
+    """Static traffic estimate when no profiled counters exist (dry-run path)."""
+    f = _DEFAULT_HBM_BOUNDARY_FRAC
+    leak = counts.fused_bytes * _DEFAULT_FUSED_LEAK
+    return {
+        "hbm_read_bytes": counts.boundary_read_bytes * f + 0.5 * leak,
+        "hbm_write_bytes": counts.boundary_write_bytes * f + 0.5 * leak,
+        "vmem_read_bytes": counts.boundary_read_bytes * (1 - f),
+        "vmem_write_bytes": counts.boundary_write_bytes * (1 - f),
+    }
+
+
+_COUNTER_TO_CLASS = {
+    "hbm_read_bytes": "hbm.read",
+    "hbm_write_bytes": "hbm.write",
+    "vmem_read_bytes": "vmem.read",
+    "vmem_write_bytes": "vmem.write",
+}
+
+
+def predict(table: EnergyTable, counts: OpCounts, duration_s: float,
+            counters: Optional[Mapping[str, float]] = None,
+            mode: str = "pred") -> Prediction:
+    """Predict energy for a profiled application run.
+
+    ``mode``: "direct" = Wattchmen-Direct, "pred" = Wattchmen-Pred (§3.4).
+    ``counters``: profiled memory counters; fall back to the static traffic
+    model when absent (e.g. predicting from a dry-run compile).
+    """
+    const_j = table.p_const * duration_s
+    static_j = table.p_static * duration_s
+    by_class: Dict[str, float] = defaultdict(float)
+    direct_j = 0.0     # coverage numerator (pred-mode energy of direct hits)
+    cover_j = 0.0      # coverage denominator (pred-mode energy of all work)
+    dyn_j = 0.0
+
+    def _account(cls: str, n: float) -> None:
+        nonlocal direct_j, cover_j, dyn_j
+        e, how = table.lookup(cls, mode=mode)
+        v = n * e
+        by_class[cls] += v
+        dyn_j += v
+        e_pred, how_pred = table.lookup(cls, mode="pred")
+        cover_j += n * e_pred
+        if how_pred == DIRECT:
+            direct_j += n * e_pred
+
+    for cls, units in counts.units.items():
+        if cls in _COUNTER_TO_CLASS.values():
+            continue
+        _account(cls, units)
+
+    mem = dict(counters) if counters is not None else traffic_from_counts(counts)
+    for key, cls in _COUNTER_TO_CLASS.items():
+        _account(cls, mem.get(key, 0.0))
+
+    by_bucket: Dict[str, float] = defaultdict(float)
+    for cls, v in by_class.items():
+        by_bucket[isa.bucket_of(cls) or "unknown"] += v
+    by_bucket["static"] = static_j
+    by_bucket["const"] = const_j
+
+    coverage = direct_j / cover_j if cover_j > 0 else 1.0
+    return Prediction(total_j=const_j + static_j + dyn_j,
+                      const_j=const_j, static_j=static_j, dynamic_j=dyn_j,
+                      by_class=dict(by_class), by_bucket=dict(by_bucket),
+                      coverage=coverage, duration_s=duration_s)
+
+
+def mape(pairs) -> float:
+    """Mean absolute percent error over (predicted, actual) pairs."""
+    errs = [abs(p - a) / a for p, a in pairs if a > 0]
+    return 100.0 * sum(errs) / max(len(errs), 1)

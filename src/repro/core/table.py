@@ -1,0 +1,58 @@
+"""The per-instruction energy table artifact (training-phase output, §3.5)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Optional, Tuple
+
+from repro.core import isa
+
+DIRECT = "direct"
+SCALED = "scaled"
+BUCKET = "bucket"
+MISS = "miss"
+
+
+@dataclasses.dataclass
+class EnergyTable:
+    """Output of the training phase: powers + per-class energies."""
+
+    system: str
+    p_const: float                      # W
+    p_static: float                     # W (all-resources-active)
+    direct: Dict[str, float]            # J/unit, from the NNLS solve
+    scaled: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bucket_means: Dict[str, float] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def lookup(self, cls: str, mode: str = "pred") -> Tuple[float, str]:
+        """Energy for a class.
+
+        ``direct`` mode = Wattchmen-Direct (table hits only);
+        ``pred`` mode = Wattchmen-Pred (direct -> scaled -> bucket, §3.4).
+        """
+        v = self.direct.get(cls)
+        if v is not None:
+            return v, DIRECT
+        if mode == "direct":
+            return 0.0, MISS
+        v = self.scaled.get(cls)
+        if v is not None:
+            return v, SCALED
+        bucket = isa.bucket_of(cls)
+        if bucket is not None and bucket in self.bucket_means:
+            return self.bucket_means[bucket], BUCKET
+        return 0.0, MISS
+
+    # ------------------------------------------------------------------
+    def save(self, path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(dataclasses.asdict(self), indent=1))
+
+    @classmethod
+    def load(cls, path) -> "EnergyTable":
+        d = json.loads(pathlib.Path(path).read_text())
+        return cls(**d)

@@ -1,0 +1,72 @@
+"""Cross-system table transfer — paper §6 "Profiler Overhead" / Fig. 14.
+
+The paper observes a strong linear relationship (R² = 0.988) between the
+air- and water-cooled V100 per-instruction energy tables and exploits it:
+fit an affine map on a random subset (10% / 50%) of classes measured on the
+new system, predict the rest from the old system's table, and keep the same
+prediction accuracy while profiling a fraction of the suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import coverage
+from repro.core.table import EnergyTable
+
+
+@dataclasses.dataclass
+class TransferFit:
+    slope: float
+    intercept: float
+    r2: float
+    n_common: int
+
+
+def fit_affine(src: EnergyTable, dst: EnergyTable,
+               classes: List[str]) -> TransferFit:
+    xs = np.array([src.direct[c] for c in classes])
+    ys = np.array([dst.direct[c] for c in classes])
+    a = np.vstack([xs, np.ones_like(xs)]).T
+    (slope, intercept), *_ = np.linalg.lstsq(a, ys, rcond=None)
+    pred = slope * xs + intercept
+    ss_res = float(((ys - pred) ** 2).sum())
+    ss_tot = float(((ys - ys.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-30)
+    return TransferFit(float(slope), float(intercept), r2, len(classes))
+
+
+def r2_between(src: EnergyTable, dst: EnergyTable) -> float:
+    common = sorted(set(src.direct) & set(dst.direct))
+    common = [c for c in common if src.direct[c] > 0 and dst.direct[c] > 0]
+    return fit_affine(src, dst, common).r2
+
+
+def transfer_table(src: EnergyTable, dst: EnergyTable, fraction: float,
+                   seed: int = 0, chip=None) -> Tuple[EnergyTable, TransferFit]:
+    """Build a dst-system table measuring only ``fraction`` of its classes.
+
+    The sampled classes keep their measured (dst) energies; the rest are
+    affine-mapped from the src system's table (Fig. 14 methodology).
+    """
+    rng = np.random.default_rng(seed)
+    common = sorted(set(src.direct) & set(dst.direct))
+    nonzero = [c for c in common if src.direct[c] > 0]
+    k = max(int(round(fraction * len(common))), 2)
+    sample = list(rng.choice(nonzero, size=min(k, len(nonzero)),
+                             replace=False))
+    fit = fit_affine(src, dst, sample)
+    direct: Dict[str, float] = {}
+    for c in common:
+        if c in sample:
+            direct[c] = dst.direct[c]
+        else:
+            direct[c] = max(fit.slope * src.direct[c] + fit.intercept, 0.0)
+    out = EnergyTable(system=f"{dst.system}-transfer{int(fraction*100)}",
+                      p_const=dst.p_const, p_static=dst.p_static,
+                      direct=direct,
+                      meta={"fraction": fraction, "r2_fit": fit.r2})
+    coverage.extend_table(out, chip)
+    return out, fit

@@ -1,0 +1,7 @@
+from repro.hlo.parse import HloModule, parse_hlo_text, shape_bytes
+from repro.hlo.collectives import CollectiveStats, collective_bytes
+from repro.hlo.roofline import RooflineTerms, roofline_from_compiled
+
+__all__ = ["HloModule", "parse_hlo_text", "shape_bytes",
+           "CollectiveStats", "collective_bytes",
+           "RooflineTerms", "roofline_from_compiled"]

@@ -1,0 +1,130 @@
+"""Collective-bytes accounting from compiled (SPMD-partitioned) HLO.
+
+``cost_analysis()`` does not report collective traffic, so §Roofline's
+collective term is derived here: walk the entry computation, multiply
+through ``while`` trip counts (scan-over-layers!) and fusion calls, and sum
+wire bytes for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using replica-group sizes for the per-chip wire factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+from repro.hlo.parse import HloComputation, HloModule, parse_hlo_text, shape_bytes
+
+# opcode -> wire bytes per chip given (result_bytes, group_size)
+_WIRE = {
+    "all-gather": lambda b, n: b * (n - 1) / max(n, 1),
+    "all-gather-start": lambda b, n: b * (n - 1) / max(n, 1),
+    "all-reduce": lambda b, n: 2.0 * b * (n - 1) / max(n, 1),
+    "all-reduce-start": lambda b, n: 2.0 * b * (n - 1) / max(n, 1),
+    "reduce-scatter": lambda b, n: b * (n - 1),
+    "all-to-all": lambda b, n: b * (n - 1) / max(n, 1),
+    "ragged-all-to-all": lambda b, n: b * (n - 1) / max(n, 1),
+    "collective-permute": lambda b, n: b,
+    "collective-permute-start": lambda b, n: b,
+}
+_SKIP_DONE = {"all-gather-done", "all-reduce-done", "collective-permute-done"}
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes_per_chip: float
+    by_kind: Dict[str, float]
+    count_by_kind: Dict[str, float]
+    while_trips: Dict[str, float]
+
+    def dominant_kind(self) -> Optional[str]:
+        if not self.by_kind:
+            return None
+        return max(self.by_kind, key=self.by_kind.get)
+
+
+def _group_size(raw: str) -> int:
+    m = _GROUPS_V2_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(raw)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(members), 1)
+    return 2
+
+
+def _trip_count(module: HloModule, cond_name: str) -> float:
+    """Best-effort while trip count from the condition computation."""
+    comp = module.get(cond_name)
+    if comp is None:
+        return 1.0
+    consts = []
+    for ins in comp.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.raw)
+            if m:
+                consts.append(int(m.group(1)))
+    return float(max(consts)) if consts else 1.0
+
+
+def _walk(module: HloModule, comp: HloComputation, mult: float,
+          stats: CollectiveStats, seen_depth: int = 0) -> None:
+    if seen_depth > 32:
+        return
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in _SKIP_DONE:
+            continue
+        if op in _WIRE:
+            n = _group_size(ins.raw)
+            if n <= 1:
+                continue
+            b = ins.result_bytes
+            if op.startswith("reduce-scatter") or op == "all-to-all":
+                pass  # result is the per-shard piece
+            wire = _WIRE[op](b, n)
+            kind = op.replace("-start", "")
+            stats.by_kind[kind] += wire * mult
+            stats.count_by_kind[kind] += mult
+            stats.wire_bytes_per_chip += wire * mult
+            continue
+        if op == "while":
+            body = ins.attr("body")
+            cond = ins.attr("condition")
+            trips = _trip_count(module, cond) if cond else 1.0
+            stats.while_trips[body or "?"] = trips
+            sub = module.get(body) if body else None
+            if sub is not None:
+                _walk(module, sub, mult * trips, stats, seen_depth + 1)
+            continue
+        if op in ("fusion", "call", "async-start"):
+            callee = ins.attr("calls") or ins.attr("to_apply")
+            sub = module.get(callee) if callee else None
+            if sub is not None:
+                _walk(module, sub, mult, stats, seen_depth + 1)
+            continue
+        if op == "conditional":
+            for key in ("true_computation", "false_computation",
+                        "branch_computations"):
+                callee = ins.attr(key)
+                sub = module.get(callee) if callee else None
+                if sub is not None:
+                    _walk(module, sub, mult, stats, seen_depth + 1)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    module = parse_hlo_text(hlo_text)
+    stats = CollectiveStats(0.0, defaultdict(float), defaultdict(float), {})
+    entry = module.get(module.entry) if module.entry else None
+    if entry is None and module.computations:
+        # fall back: the computation with the most instructions
+        entry = max(module.computations.values(), key=lambda c: len(c.instrs))
+    if entry is not None:
+        _walk(module, entry, 1.0, stats)
+    stats.by_kind = dict(stats.by_kind)
+    stats.count_by_kind = dict(stats.count_by_kind)
+    return stats

@@ -1,0 +1,119 @@
+"""Minimal optimized-HLO text parser.
+
+Extracts, per computation: the instruction list (opcode, result shape,
+attributes) and the call graph (fusion ``calls=``, ``while`` body/condition,
+``call to_apply=``, conditional branches), plus best-effort ``while`` trip
+counts (scan-lowered loops compare an induction variable against an s32
+constant in the condition computation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples by summation)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dt)
+        if size is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * size
+    return total
+
+
+@dataclasses.dataclass
+class HloInstr:
+    name: str
+    opcode: str
+    type_str: str
+    raw: str
+
+    @property
+    def result_bytes(self) -> float:
+        return shape_bytes(self.type_str)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=([%\w.\-]+)", self.raw)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    instrs: List[HloInstr]
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, HloComputation]
+    entry: Optional[str]
+
+    def get(self, name: str) -> Optional[HloComputation]:
+        return self.computations.get(name.lstrip("%"))
+
+
+# `  %name = type opcode(...)` or `  ROOT %name = ...`
+# (tuple types may contain /*index=N*/ comments; they contain no parens)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\(")
+# `%name (params...) -> type {`  /  `ENTRY %name (...) -> ... {`
+# (types may contain layout braces and /*index=N*/ comments)
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _is_comp_header(line: str) -> Optional[Tuple[bool, str]]:
+    if not line.rstrip().endswith("{"):
+        return None
+    m = _COMP_HEAD_RE.match(line.lstrip())
+    if not m:
+        return None
+    head = line.split("(", 1)[0]
+    if "=" in head:          # `%x = type op(...) ... {` is an instruction
+        return None
+    return bool(m.group(1)), m.group(2)
+
+
+def parse_hlo_text(text: str) -> HloModule:
+    computations: Dict[str, HloComputation] = {}
+    entry: Optional[str] = None
+    current: Optional[HloComputation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if current is None:
+            hdr = _is_comp_header(stripped)
+            if hdr is not None:
+                is_entry, name = hdr
+                current = HloComputation(name=name, instrs=[])
+                if is_entry:
+                    entry = name
+            continue
+        if stripped.strip() == "}" or stripped.startswith("}"):
+            computations[current.name] = current
+            current = None
+            continue
+        m = _INSTR_RE.match(stripped)
+        if m:
+            current.instrs.append(HloInstr(
+                name=m.group(1), type_str=m.group(2), opcode=m.group(3),
+                raw=stripped))
+    if current is not None:
+        computations[current.name] = current
+    return HloModule(computations=computations, entry=entry)

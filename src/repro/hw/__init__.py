@@ -1,0 +1,9 @@
+from repro.hw.spec import CHIPS, V5E, V5P, V6E, ChipSpec
+from repro.hw.device import Program, RunRecord, SensorTrace, SimDevice
+from repro.hw.systems import SYSTEMS, SystemConfig, get_device
+
+__all__ = [
+    "CHIPS", "V5E", "V5P", "V6E", "ChipSpec",
+    "Program", "RunRecord", "SensorTrace", "SimDevice",
+    "SYSTEMS", "SystemConfig", "get_device",
+]

@@ -1,0 +1,444 @@
+"""Simulated TPU power/energy substrate — the "real GPU + NVML" of this repo.
+
+This container has no power sensors, so the physical device of the paper is
+replaced by a black-box simulator.  The contract mirrors real hardware:
+
+* ``SimDevice.run(program)`` executes a program (characterised by its dynamic
+  op counts) and returns *telemetry*: a sampled power trace (with sensor
+  noise, quantization and dropped samples), an NVML-style energy counter, a
+  wall-clock duration, and profiler counters (HBM read/write bytes, VMEM
+  bytes) — exactly the observables the paper's methodology consumes.
+* Everything inside ``_HiddenModel`` is ground truth the modeling code in
+  ``repro.core`` is FORBIDDEN from reading (enforced by convention + a test
+  that greps for accesses).  Its per-class energies are *not* linear in the
+  observables: utilization-dependent static power, MXU alignment penalties,
+  VPU/MXU dual-issue discounts, cooling-dependent thermal leakage drift and
+  sensor noise all create the organic gap between Wattchmen's linear model
+  and reality that produces the paper's ~11-15% MAPEs.
+
+Timing is roofline-based with the same public constants used by §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.opcount import OpCounts
+from repro.hw.spec import ChipSpec
+
+SENSOR_HZ = 10.0           # NVML-style sampling rate
+SENSOR_NOISE_W = 1.5       # gaussian sensor noise (W)
+SENSOR_QUANT_W = 1.0       # sensor quantization (W)
+SENSOR_DROP_P = 0.002      # dropped-sample probability
+
+
+# ---------------------------------------------------------------------------
+# Public telemetry containers.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SensorTrace:
+    """NVML-style sampled telemetry."""
+
+    times_s: np.ndarray
+    power_w: np.ndarray
+    util: np.ndarray
+    temp_c: np.ndarray
+
+    def duration(self) -> float:
+        return float(self.times_s[-1] - self.times_s[0]) if len(self.times_s) > 1 else 0.0
+
+
+@dataclasses.dataclass
+class RunRecord:
+    """Result of executing one program on the device."""
+
+    name: str
+    duration_s: float
+    iters: int
+    trace: SensorTrace
+    energy_counter_j: float            # NVML-style total-energy counter
+    counters: Dict[str, float]         # profiler counters (true, per run)
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.energy_counter_j / max(self.duration_s, 1e-12)
+
+
+@dataclasses.dataclass
+class Program:
+    """A workload as seen by the device: per-iteration op counts × iters."""
+
+    name: str
+    counts_per_iter: OpCounts
+    iters: int = 1
+    is_nanosleep: bool = False   # active-but-idle probe (Oles et al. analogue)
+
+
+# ---------------------------------------------------------------------------
+# Hidden ground-truth model.  *** repro.core must never touch this. ***
+# ---------------------------------------------------------------------------
+def _stable_unit(seed: int, key: str) -> float:
+    """Deterministic uniform(0,1) from (seed, key)."""
+    h = hashlib.sha256(f"{seed}:{key}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2**64
+
+
+# Base per-unit energies (J/unit) for the gen-0 chip before per-system jitter.
+_BASE_COEFF: Dict[str, float] = {
+    # MXU (per MAC)
+    "dot.bf16": 1.30e-12, "dot.f32": 5.20e-12, "dot.int8": 0.65e-12,
+    "conv.bf16": 1.55e-12, "conv.f32": 6.10e-12,
+    "dot.fp8": 0.42e-12, "sparse_dot.bf16": 0.85e-12, "dot.int4": 0.36e-12,
+    "dot_small.bf16": 1.95e-12, "dot_small.f32": 7.40e-12,
+    "dot_group.bf16": 1.08e-12, "dot_group.f32": 4.30e-12,
+    # VPU transcendental (per element)
+    "exp.f32": 34e-12, "log.f32": 38e-12, "tanh.f32": 42e-12,
+    "logistic.f32": 40e-12, "rsqrt.f32": 30e-12, "sqrt.f32": 28e-12,
+    "erf.f32": 45e-12, "sin.f32": 36e-12, "cos.f32": 36e-12, "pow.f32": 55e-12,
+    # VPU simple (per element)
+    "add.f32": 10e-12, "mul.f32": 12e-12, "sub.f32": 10e-12, "div.f32": 26e-12,
+    "max.f32": 9e-12, "min.f32": 9e-12, "cmp.f32": 8e-12, "select.f32": 9e-12,
+    "reduce.add.f32": 11e-12, "reduce.max.f32": 10e-12, "cumsum.f32": 14e-12,
+    # VPU int
+    "add.int": 6e-12, "mul.int": 9e-12, "and.int": 5e-12, "or.int": 5e-12,
+    "xor.int": 5e-12, "shift.int": 5.5e-12, "cmp.int": 6e-12,
+    "select.int": 7e-12, "rng.bits": 24e-12,
+    # Converts / moves
+    "convert.f32.bf16": 8e-12, "convert.bf16.f32": 8e-12,
+    "convert.int.float": 9e-12, "convert.float.int": 9e-12,
+    "bcast": 4e-12, "transpose": 7e-12, "concat": 5e-12, "slice": 4.5e-12,
+    "dus": 5e-12, "gather": 16e-12, "scatter": 20e-12, "iota": 2.5e-12,
+    "pad": 4e-12, "sort": 18e-12, "scatter_dma": 14e-12,
+    # Memory (per byte).  Fused intra-kernel traffic lives in VREGs and is
+    # folded into per-op energies; VMEM prices tile loads/stores.
+    "hbm.read": 45e-12, "hbm.write": 52e-12,
+    "vmem.read": 1.4e-12, "vmem.write": 1.7e-12,
+    # Collectives (per wire byte per chip)
+    "ici.all_reduce": 28e-12, "ici.all_gather": 22e-12,
+    "ici.reduce_scatter": 22e-12, "ici.all_to_all": 30e-12,
+    "ici.permute": 18e-12, "dcn.transfer": 95e-12,
+    # Control (per executed loop iteration / branch; scalar-core scale)
+    "ctl.loop": 2.0e-9, "ctl.cond": 1.0e-9,
+}
+
+# bf16 VPU variants cost ~72% of f32.
+for _op in ("exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "erf", "sin",
+            "cos", "pow", "add", "mul", "sub", "div", "max", "min", "cmp",
+            "select"):
+    _f32 = _BASE_COEFF.get(f"{_op}.f32")
+    if _f32 is not None:
+        _BASE_COEFF[f"{_op}.bf16"] = _f32 * 0.72
+
+# Process-node scaling per generation: [dynamic logic, memory, interconnect].
+# Chosen so saturated dynamic power stays inside each chip's TDP envelope.
+_GEN_SCALE = {0: (1.00, 1.00, 1.00), 1: (0.70, 0.86, 0.90),
+              2: (0.32, 0.74, 0.82)}
+
+
+class _HiddenModel:
+    """Ground-truth energy/power/thermal model.  PRIVATE to repro.hw."""
+
+    def __init__(self, chip: ChipSpec, cooling: str, seed: int,
+                 coeff_scale: float = 1.0):
+        self.chip = chip
+        self.cooling = cooling
+        self.seed = seed
+        gdyn, gmem, gici = _GEN_SCALE[chip.isa_gen]
+        self.coeffs: Dict[str, float] = {}
+        for name, base in _BASE_COEFF.items():
+            b = isa.bucket_of(name)
+            if b in (isa.BUCKET_MEM,):
+                scale = gmem
+            elif b in (isa.BUCKET_ICI, isa.BUCKET_DCN):
+                scale = gici
+            else:
+                scale = gdyn
+            jitter = 0.85 + 0.30 * _stable_unit(seed, name)
+            self.coeffs[name] = base * scale * jitter * coeff_scale
+        # Static / constant power.
+        self.p_const = chip.idle_watts * (0.95 + 0.10 * _stable_unit(seed, "pc"))
+        self.p_static_full = chip.tdp_watts * (0.20 + 0.04 * _stable_unit(seed, "ps"))
+        self.static_util_floor = 0.62      # P_static(util) = full*(floor+(1-floor)*util)
+        # Dual-issue (VPU while MXU busy) energy discount.
+        self.dual_issue_discount = 0.25
+        # MXU alignment: energy penalty + throughput hit for misaligned dots.
+        self.misaligned_energy_mult = 1.22
+        self.mxu_eff_aligned = 0.92
+        self.mxu_eff_misaligned = 0.52
+        # Bit-toggle activity: per-program data-dependent switching factor on
+        # compute/move dynamic energy.  Unknowable to any counts-based model;
+        # microbenchmark loops have their own factors (absorbed into the
+        # solved coefficients), applications have different ones — the
+        # organic per-workload over/under-predictions of the paper's Fig. 6.
+        self.toggle_spread = 0.70
+        # DRAM row-locality: random-access traffic (gather/scatter) costs
+        # more per byte than the streaming microbenchmarks measured.
+        self.random_access_mult = 0.35
+        # Power capping: programs pushing past ~92% of TDP get clock/voltage
+        # throttled — longer runtime and slightly higher energy (the
+        # microbenchmarks, each stressing one unit, never trip it).
+        self.throttle_knee = 0.92
+        self.throttle_energy_mult = 1.09
+        self.throttle_time_mult = 1.18
+        # Private fusion/residency behaviour (XLA fusion + VMEM capacity).
+        self.f_hbm_boundary = min(0.95, 0.88 * (0.95 + 0.1 * _stable_unit(seed, "fb")))
+        self.fused_leak = 0.01        # fused traffic that still spills
+        self.ws_knee_bytes = chip.vmem_capacity * 3 / 16
+        # Thermal model.  Air runs much hotter at steady state; leakage
+        # (static strongly, dynamic mildly) tracks die temperature — the
+        # source of the paper's ~12% air-vs-water energy gap (§5.2.1).
+        self.t_amb = 24.0
+        if cooling == "liquid":
+            self.tau_s, self.r_th = 8.0, 0.085    # K/W
+        else:
+            self.tau_s, self.r_th = 35.0, 0.35
+        self.leak_per_k = 0.006                   # static leakage / K
+        self.dyn_leak_per_k = 0.0025              # dynamic leakage / K
+        self.t_ref = 45.0
+        # Dispatch overheads (pipelined; small on TPU).
+        self.startup_s = 1.8
+        self.loop_lat_s = 5e-8
+        self.dispatch_lat_s = 1.2e-7
+        self.serial_frac = 0.08    # non-overlapped fraction of non-critical units
+        # Static power wobbles with the active unit mix (clock gating) —
+        # unknowable to a single-valued static model; dominates relative
+        # error for workloads with a high static+const share (paper's RNNs).
+        self.static_mix_mxu = 0.10
+        self.static_mix_hbm = -0.08
+        self.static_util_slope = 0.12
+
+    # -- per-class truth with on-demand coefficients for unknown classes ----
+    def coeff(self, cls: str) -> float:
+        c = self.coeffs.get(cls)
+        if c is not None:
+            return c
+        bucket = isa.bucket_of(cls) or isa.BUCKET_VPU_INT
+        peers = [v for k, v in self.coeffs.items() if isa.bucket_of(k) == bucket]
+        base = float(np.mean(peers)) if peers else 8e-12
+        return base * (0.7 + 0.8 * _stable_unit(self.seed, "unk:" + cls))
+
+    # -- traffic truth -------------------------------------------------------
+    def _f_hbm(self, c: OpCounts) -> float:
+        # Boundary traffic reaches HBM only when the working set exceeds
+        # VMEM residency (small benchmarks loop in VMEM; real models stream).
+        ws = max(c.max_buffer_bytes, 1.0)
+        cap = min(ws / self.ws_knee_bytes, 1.0)
+        return max(self.f_hbm_boundary * cap, 0.01)
+
+    def traffic(self, c: OpCounts):
+        """(hbm_read, hbm_write, vmem_read, vmem_write) true bytes."""
+        f = self._f_hbm(c)
+        cap = f / self.f_hbm_boundary
+        leak = c.fused_bytes * self.fused_leak * min(cap, 1.0)
+        hbm_r = c.boundary_read_bytes * f + 0.5 * leak
+        hbm_w = c.boundary_write_bytes * f + 0.5 * leak
+        # on-chip tile loads/stores; fused intermediates live in VREGs
+        vmem_r = c.boundary_read_bytes * (1.0 - f) * 0.95
+        vmem_w = c.boundary_write_bytes * (1.0 - f) * 0.95
+        return hbm_r, hbm_w, vmem_r, vmem_w
+
+    def hbm_bytes(self, c: OpCounts) -> float:
+        r, w, _, _ = self.traffic(c)
+        return r + w
+
+    # -- timing truth (roofline-based; public constants) ---------------------
+    def _mxu_rate(self, cls: str) -> float:
+        peak = self.chip.peak_bf16_macs
+        table = {
+            "dot.bf16": 1.0, "dot.f32": 0.25, "dot.int8": 2.0, "dot.fp8": 2.0,
+            "sparse_dot.bf16": 1.6, "dot.int4": 3.2,
+            "dot_small.bf16": 0.45, "dot_small.f32": 0.12,
+            "dot_group.bf16": 1.15, "dot_group.f32": 0.28,
+            "conv.bf16": 0.8, "conv.f32": 0.2,
+        }
+        return peak * table.get(cls, 1.0)
+
+    def times(self, c: OpCounts):
+        chip = self.chip
+        t_mxu = t_vpu = 0.0
+        for cls, units in c.units.items():
+            bucket = isa.bucket_of(cls)
+            if bucket == isa.BUCKET_MXU:
+                frac_aligned = (c.mxu_macs_aligned / c.mxu_macs_total
+                                if c.mxu_macs_total > 0 else 1.0)
+                eff = (frac_aligned * self.mxu_eff_aligned
+                       + (1 - frac_aligned) * self.mxu_eff_misaligned)
+                t_mxu += units / (self._mxu_rate(cls) * max(eff, 1e-3))
+            elif bucket == isa.BUCKET_VPU_TRANS:
+                t_vpu += units / (chip.vpu_throughput / 4.0)
+            elif bucket in (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_INT):
+                t_vpu += units / chip.vpu_throughput
+            elif bucket == isa.BUCKET_MOVE:
+                t_vpu += units / (chip.vpu_throughput * 1.5)
+        t_hbm = self.hbm_bytes(c) / (chip.hbm_bandwidth * 0.88)
+        ici_bytes = sum(u for k, u in c.units.items() if k.startswith("ici."))
+        t_ici = ici_bytes / (chip.ici_links * chip.ici_link_bandwidth * 0.85)
+        dcn_bytes = c.units.get("dcn.transfer", 0.0)
+        t_dcn = dcn_bytes / max(chip.dcn_bandwidth, 1.0)
+        parts = [t_mxu, t_vpu, t_hbm, t_ici, t_dcn]
+        crit = max(parts) if parts else 0.0
+        busy = crit + self.serial_frac * (sum(parts) - crit)
+        gap = (c.dispatch_count * self.dispatch_lat_s
+               + c.units.get("ctl.loop", 0.0) * self.loop_lat_s)
+        t_iter = busy + gap
+        util = busy / max(t_iter, 1e-12)
+        return t_iter, t_mxu, t_vpu, t_hbm, t_ici + t_dcn, util
+
+    # -- dynamic energy truth -------------------------------------------------
+    def toggle_factor(self, context: str) -> float:
+        lo = 1.0 - self.toggle_spread / 2.0
+        return lo + self.toggle_spread * _stable_unit(self.seed, "tg:" + context)
+
+    def random_access_frac(self, c: OpCounts) -> float:
+        rand_elems = sum(c.units.get(k, 0.0) for k in
+                         ("gather", "scatter", "scatter_dma", "dus"))
+        return min(rand_elems * 4.0 / max(c.boundary_bytes, 1.0), 1.0)
+
+    def dynamic_energy(self, c: OpCounts, context: str = "") -> float:
+        t_iter, t_mxu, t_vpu, _, _, _ = self.times(c)
+        overlap = min(t_mxu, t_vpu) / max(t_iter, 1e-12)
+        vpu_mult = 1.0 - self.dual_issue_discount * overlap
+        frac_aligned = (c.mxu_macs_aligned / c.mxu_macs_total
+                        if c.mxu_macs_total > 0 else 1.0)
+        mxu_mult = (frac_aligned * 1.0
+                    + (1 - frac_aligned) * self.misaligned_energy_mult)
+        toggle = self.toggle_factor(context)
+        e = 0.0
+        for cls, units in c.units.items():
+            bucket = isa.bucket_of(cls)
+            k = self.coeff(cls)
+            if bucket == isa.BUCKET_MXU:
+                e += units * k * mxu_mult * toggle
+            elif bucket in (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_TRANS,
+                            isa.BUCKET_VPU_INT, isa.BUCKET_MOVE):
+                e += units * k * vpu_mult * toggle
+            else:
+                e += units * k
+        hbm_r, hbm_w, vmem_r, vmem_w = self.traffic(c)
+        row_mult = 1.0 + self.random_access_mult * self.random_access_frac(c)
+        # per-program access-pattern factor (row-buffer locality, banking)
+        row_mult *= 0.85 + 0.30 * _stable_unit(self.seed, "mem:" + context)
+        e += (hbm_r * self.coeff("hbm.read")
+              + hbm_w * self.coeff("hbm.write")) * row_mult
+        e += vmem_r * self.coeff("vmem.read") + vmem_w * self.coeff("vmem.write")
+        return e
+
+    def static_power(self, util: float, temp_c: float,
+                     mix_mult: float = 1.0) -> float:
+        leak = 1.0 + self.leak_per_k * (temp_c - self.t_ref)
+        u = 1.0 + self.static_util_slope * (util - 1.0)
+        return self.p_static_full * u * mix_mult * max(leak, 0.5)
+
+    def static_mix(self, c: OpCounts, context: str = "") -> float:
+        """Unit-mix clock-gating wobble on static power (structural part)
+        plus a per-program residual (layout/placement effects)."""
+        t_iter, t_mxu, _, t_hbm, _, _ = self.times(c)
+        mxu_share = t_mxu / max(t_iter, 1e-12)
+        hbm_share = t_hbm / max(t_iter, 1e-12)
+        resid = 0.94 + 0.12 * _stable_unit(self.seed, "sm:" + context)
+        return (1.0 + self.static_mix_mxu * mxu_share
+                + self.static_mix_hbm * hbm_share) * resid
+
+
+# ---------------------------------------------------------------------------
+# The device.
+# ---------------------------------------------------------------------------
+class SimDevice:
+    """One simulated accelerator of a given system configuration."""
+
+    def __init__(self, chip: ChipSpec, cooling: str = "air", seed: int = 0,
+                 name: Optional[str] = None, coeff_scale: float = 1.0):
+        self.chip = chip
+        self.cooling = cooling
+        self.name = name or f"sim-{chip.name}-{cooling}"
+        self._hidden = _HiddenModel(chip, cooling, seed, coeff_scale)
+        self._rng = np.random.default_rng(seed ^ 0x5EED)
+
+    # -- telemetry synthesis --------------------------------------------------
+    def _sample_trace(self, duration_s: float, p_dyn: float, util: float,
+                      startup_s: float, static_mix: float = 1.0) -> SensorTrace:
+        h = self._hidden
+        n = max(int(duration_s * SENSOR_HZ), 4)
+        ts = np.arange(n) / SENSOR_HZ
+        # thermal integration
+        temp = np.empty(n)
+        t_cur = h.t_amb + 8.0
+        dt = 1.0 / SENSOR_HZ
+        power_true = np.empty(n)
+        for i, t in enumerate(ts):
+            ramp = min(t / max(startup_s, 1e-9), 1.0)
+            u = util * ramp
+            dyn_leak = 1.0 + h.dyn_leak_per_k * (t_cur - h.t_ref)
+            p_s = (h.static_power(u, t_cur, static_mix) if u > 0 else 0.0)
+            p = h.p_const + p_s + p_dyn * ramp * dyn_leak
+            t_ss = h.t_amb + h.r_th * p
+            t_cur += (t_ss - t_cur) * (dt / h.tau_s)
+            temp[i] = t_cur
+            power_true[i] = (h.p_const
+                             + (h.static_power(u, t_cur, static_mix)
+                                if u > 0 else 0.0)
+                             + p_dyn * ramp * max(dyn_leak, 0.7))
+        noise = self._rng.normal(0.0, SENSOR_NOISE_W, n)
+        power_meas = np.round((power_true + noise) / SENSOR_QUANT_W) * SENSOR_QUANT_W
+        keep = self._rng.random(n) >= SENSOR_DROP_P
+        keep[0] = keep[-1] = True
+        util_arr = np.clip(np.minimum(ts / max(startup_s, 1e-9), 1.0) * util, 0, 1)
+        trace = SensorTrace(ts[keep], power_meas[keep], util_arr[keep], temp[keep])
+        # exact energy counter (trapezoidal over the true power)
+        energy = float(np.trapezoid(power_true, ts))
+        trace._energy_true = energy  # type: ignore[attr-defined]
+        return trace
+
+    def idle(self, duration_s: float = 30.0) -> SensorTrace:
+        """Sensor samples while the device is idle (constant-power probe)."""
+        return self._sample_trace(duration_s, p_dyn=0.0, util=0.0, startup_s=1e9)
+
+    def run(self, program: Program) -> RunRecord:
+        h = self._hidden
+        c = program.counts_per_iter
+        if program.is_nanosleep:
+            # Active-but-idle: sequencer spins, static fully powered
+            # (Oles et al.'s ~80W observation, paper §3.3.1).
+            t_iter = max(c.units.get("ctl.loop", 1.0), 1.0) * h.loop_lat_s
+            e_iter = c.units.get("ctl.loop", 0.0) * h.coeff("ctl.loop")
+            util, static_mix = 1.0, 1.0
+        else:
+            t_iter, _, _, _, _, util = h.times(c)
+            e_iter = h.dynamic_energy(c, context=program.name)
+            static_mix = h.static_mix(c, context=program.name)
+            # power-cap throttling for near-TDP programs
+            p_est = (h.p_const + h.p_static_full
+                     + e_iter / max(t_iter, 1e-12))
+            if p_est > h.throttle_knee * self.chip.tdp_watts:
+                e_iter *= h.throttle_energy_mult
+                t_iter *= h.throttle_time_mult
+        duration = h.startup_s + program.iters * t_iter
+        p_dyn = (program.iters * e_iter) / max(duration - h.startup_s, 1e-9)
+        trace = self._sample_trace(duration, p_dyn, util, h.startup_s,
+                                   static_mix)
+        energy = trace._energy_true  # type: ignore[attr-defined]
+        hbm_r, hbm_w, vmem_r, vmem_w = h.traffic(c)
+        counters = {
+            "hbm_read_bytes": hbm_r * program.iters,
+            "hbm_write_bytes": hbm_w * program.iters,
+            "vmem_read_bytes": vmem_r * program.iters,
+            "vmem_write_bytes": vmem_w * program.iters,
+            "duration_s": duration,
+            "iters": program.iters,
+        }
+        return RunRecord(name=program.name, duration_s=duration,
+                         iters=program.iters, trace=trace,
+                         energy_counter_j=energy, counters=counters)
+
+    # Iteration sizing helper so microbenchmarks reach steady state (§3.3).
+    def iters_for_duration(self, counts_per_iter: OpCounts,
+                           target_s: float) -> int:
+        """Calibrate iteration count to a target runtime (in practice this is
+        a short timing pre-run; here the device answers directly)."""
+        t_iter = self._hidden.times(counts_per_iter)[0]
+        return max(int(target_s / max(t_iter, 1e-9)), 1)

@@ -1,0 +1,95 @@
+"""Hardware specs for the simulated TPU systems and the roofline constants.
+
+The v5e numbers (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI) are the
+roofline constants mandated for §Roofline; the v5p/v6e entries are the
+"newer generation" systems of the paper's A100/H100 experiments (§5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Static per-chip hardware description (public datasheet-level facts)."""
+
+    name: str
+    # Compute.
+    peak_bf16_flops: float       # FLOP/s
+    peak_f32_flops: float        # FLOP/s (MXU f32 path)
+    peak_int8_ops: float         # OP/s
+    vpu_throughput: float        # elementwise ops/s (vector unit)
+    # Memory.
+    hbm_bandwidth: float         # bytes/s
+    hbm_capacity: float          # bytes
+    vmem_capacity: float         # bytes
+    # Interconnect.
+    ici_link_bandwidth: float    # bytes/s per link
+    ici_links: int               # links per chip
+    dcn_bandwidth: float         # bytes/s per chip for cross-pod traffic
+    # Power envelope (public TDP-level facts; *not* the hidden energy model).
+    tdp_watts: float
+    idle_watts: float
+    # ISA generation tag — newer gens add op classes (fp8 / sparse dots).
+    isa_gen: int = 0
+
+    @property
+    def peak_bf16_macs(self) -> float:
+        return self.peak_bf16_flops / 2.0
+
+
+# TPU v5e — the primary target (and the mandated roofline constants).
+V5E = ChipSpec(
+    name="v5e",
+    peak_bf16_flops=197e12,
+    peak_f32_flops=49.25e12,     # 1/4 of bf16 MXU rate
+    peak_int8_ops=394e12,
+    vpu_throughput=7.9e12,       # 8 * 128 lanes * ~0.94GHz * 8 subcores-equivalent
+    hbm_bandwidth=819e9,
+    hbm_capacity=16 * 2**30,
+    vmem_capacity=128 * 2**20,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    dcn_bandwidth=12.5e9,
+    tdp_watts=215.0,
+    idle_watts=42.0,
+    isa_gen=0,
+)
+
+# TPU v5p — "next generation" system (paper's A100 role).
+V5P = ChipSpec(
+    name="v5p",
+    peak_bf16_flops=459e12,
+    peak_f32_flops=114.75e12,
+    peak_int8_ops=918e12,
+    vpu_throughput=14.7e12,
+    hbm_bandwidth=2.765e12,
+    hbm_capacity=95 * 2**30,
+    vmem_capacity=128 * 2**20,
+    ici_link_bandwidth=100e9,
+    ici_links=6,
+    dcn_bandwidth=25e9,
+    tdp_watts=350.0,
+    idle_watts=68.0,
+    isa_gen=1,
+)
+
+# TPU v6e — two generations ahead (paper's H100 role); adds fp8/sparse classes.
+V6E = ChipSpec(
+    name="v6e",
+    peak_bf16_flops=918e12,
+    peak_f32_flops=229.5e12,
+    peak_int8_ops=1836e12,
+    vpu_throughput=23.2e12,
+    hbm_bandwidth=1.64e12,
+    hbm_capacity=32 * 2**30,
+    vmem_capacity=160 * 2**20,
+    ici_link_bandwidth=90e9,
+    ici_links=4,
+    dcn_bandwidth=25e9,
+    tdp_watts=300.0,
+    idle_watts=55.0,
+    isa_gen=2,
+)
+
+CHIPS = {c.name: c for c in (V5E, V5P, V6E)}

@@ -1,0 +1,52 @@
+"""Registry of simulated systems — the paper's Table 2 analogue.
+
+| Paper cluster (GPU)        | Here                 | Role                     |
+|----------------------------|----------------------|--------------------------|
+| CloudLab  V100 (air)       | ``sim-v5e-air``      | primary modeled system   |
+| Summit    V100 (water)     | ``sim-v5e-liquid``   | cooling generalization   |
+| Lonestar6 A100 (air)       | ``sim-v5p-air``      | next-gen generalization  |
+| Lonestar6 H100 (air)       | ``sim-v6e-air``      | two-gen generalization   |
+| AccelWattch's own V100     | ``sim-v5e-ref``      | the *differently-configured*
+                                                      reference environment the
+                                                      AccelWattch-style baseline
+                                                      was calibrated on (§2.3.1) |
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.hw import spec
+from repro.hw.device import SimDevice
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    name: str
+    chip: spec.ChipSpec
+    cooling: str
+    seed: int
+    coeff_scale: float = 1.0     # binning/voltage-point scaling
+
+
+SYSTEMS: Dict[str, SystemConfig] = {
+    "sim-v5e-air": SystemConfig("sim-v5e-air", spec.V5E, "air", seed=101),
+    "sim-v5e-liquid": SystemConfig("sim-v5e-liquid", spec.V5E, "liquid", seed=101),
+    "sim-v5p-air": SystemConfig("sim-v5p-air", spec.V5P, "air", seed=202),
+    "sim-v6e-air": SystemConfig("sim-v6e-air", spec.V6E, "air", seed=303),
+    # Same chip family, *different environment*: different binning seed, a
+    # different power envelope and a lower voltage/frequency point —
+    # AccelWattch's "validated V100" that does not match the deployment V100
+    # (TDP 300 vs 250 W, 1417 vs 1530 MHz etc., paper §2.3.1).
+    "sim-v5e-ref": SystemConfig(
+        "sim-v5e-ref",
+        dataclasses.replace(spec.V5E, tdp_watts=250.0, idle_watts=34.0,
+                            name="v5e"),
+        "air", seed=777, coeff_scale=0.55),
+}
+
+
+def get_device(name: str) -> SimDevice:
+    cfg = SYSTEMS[name]
+    return SimDevice(cfg.chip, cfg.cooling, cfg.seed, name=cfg.name,
+                     coeff_scale=cfg.coeff_scale)

@@ -1,0 +1,81 @@
+"""GQA decode attention — Pallas TPU kernel.
+
+One program per (batch, kv-head): the query group [G, D] stays in VREGs,
+the KV cache streams through VMEM in [BK, D] blocks, invalid (beyond
+``length``) positions are masked.  This is the HBM-bandwidth-bound hot loop
+of serving (decode_32k / long_500k shapes): arithmetic intensity ~G MACs
+per cache byte, so the tiling goal is purely streaming efficiency.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 1024
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    g, d = q_ref.shape[-2], q_ref.shape[-1]
+    s = k_ref.shape[1]
+    length = len_ref[0]
+    q = q_ref[0, 0, :, :].astype(jnp.float32) / math.sqrt(d)    # [G, D]
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), 0, :]     # [BK, D]
+        v = v_ref[0, pl.dslice(i * block_k, block_k), 0, :]
+        scores = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # [G, BK]
+        k_pos = (i * block_k
+                 + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1))
+        scores = jnp.where(k_pos < length, scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((g, d), jnp.float32)
+    m0 = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g, 1), jnp.float32)
+    n_k = s // block_k
+    acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
+    o_ref[0, 0, :, :] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False):
+    """q [B,H,D]; caches [B,S,KV,D]; lengths [B] -> [B,H,D]."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    qg = q.reshape(b, kvh, g, d)
+    grid = (b, kvh)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, kv: (b_,)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, kv: (b_, kv, 0, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda b_, kv: (b_, 0, kv, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda b_, kv: (b_, 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, kv: (b_, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,106 @@
+"""Flash attention — Pallas TPU kernel.
+
+Blockwise online-softmax attention: the [Sq, Sk] score matrix never
+materializes in HBM (the 224 GiB/device buffer of the naive path).  Tiling
+is TPU-native: query blocks of 512 rows live in VMEM, K/V stream through
+VMEM blocks of 512, MXU-aligned [BQ, D] x [D, BK] partial products, with
+running (max, sum) rescaling in f32 VMEM scratch.
+
+Supports causal masking, sliding windows (gemma2/danube) and logit softcap
+(gemma2).  Same-kv-head layout: GQA callers broadcast kv heads in the ops
+wrapper (cheap: D is small) or pass grouped heads.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
+                  causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_k: int, q_offset_blocks: int):
+    """One (batch, head, q-block) program: stream K/V blocks."""
+    bq, d = q_ref.shape[1], q_ref.shape[3]
+    s = k_ref.shape[1]
+    q_idx = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale       # [BQ, D]
+    q_pos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    n_k = s // block_k
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), 0, :]     # [BK, D]
+        v = v_ref[0, pl.dslice(i * block_k, block_k), 0, :]
+        scores = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # [BQ, BK]
+        if softcap is not None:
+            scores = jnp.tanh(scores / softcap) * softcap
+        k_pos = (i * block_k
+                 + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1))
+        mask = jnp.ones((bq, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)         # [BQ,1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    # causal early exit: only K blocks that intersect the mask
+    if causal:
+        upper = jnp.minimum((q_idx + 1) * bq + block_k - 1, s) // block_k
+    else:
+        upper = n_k
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[0, :, 0, :] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q,k,v [B,S,H,D] (kv heads already expanded to H) -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=1.0 / math.sqrt(d), causal=causal,
+        window=window, softcap=softcap, block_k=block_k, q_offset_blocks=0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, i: (b_, i, h_, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda b_, h_, i: (b_, i, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

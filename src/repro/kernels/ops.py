@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: compiled on TPU, interpret-mode (Python
+execution of the kernel body) everywhere else — which is how the kernels
+are validated in this CPU container.  ``make_attn_fn`` adapts flash
+attention to the model layer's ``attn_fn`` hook (GQA broadcast included).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap,
+                               interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     interpret: Optional[bool] = None):
+    return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int = 256, h0=None, *,
+                interpret: Optional[bool] = None):
+    return _ssd.ssd_chunked(x, dt, a, b_mat, c_mat, chunk, h0,
+                            interpret=_auto_interpret(interpret))
+
+
+def make_attn_fn(interpret: Optional[bool] = None):
+    """Adapter for ``ModelConfig.attention_impl == 'pallas'``: the model
+    layer calls attn_fn(q, k, v, cfg) on the full-sequence path."""
+    def attn_fn(q, k, v, cfg):
+        h, kvh = q.shape[2], k.shape[2]
+        if kvh != h:
+            k = jnp.repeat(k, h // kvh, axis=2)
+            v = jnp.repeat(v, h // kvh, axis=2)
+        window = cfg.sliding_window
+        return flash_attention(q, k, v, causal=True, window=window,
+                               softcap=cfg.attn_logit_softcap,
+                               interpret=interpret)
+    return attn_fn

@@ -1,0 +1,132 @@
+"""Mamba2 SSD intra-chunk kernel — Pallas TPU.
+
+One program per (batch, chunk, head-block): computes the quadratic
+intra-chunk output and the chunk's contribution to the inter-chunk state in
+VMEM.  The [L, L] decay matrix (L = 256 chunk) is built once per head in
+f32 VREG/VMEM — ~256 KiB, well under VMEM — and both contractions are
+MXU-shaped ([L, L] x [L, P] and [L, N]^T x [L, P]).  The linear inter-chunk
+recurrence stays in XLA (tiny, bandwidth-trivial).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
+    """Blocks: x [1,L,1,P], dt [1,L,1], a [1], b/c [1,L,N];
+    outputs y [1,L,1,P], st [1,1,P,N]."""
+    l, p = x_ref.shape[1], x_ref.shape[3]
+    n = b_ref.shape[2]
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # [L]
+    a = a_ref[0]
+    bm = b_ref[0].astype(jnp.float32)                   # [L, N]
+    cm = c_ref[0].astype(jnp.float32)                   # [L, N]
+
+    da = dt * a                                         # [L]
+    da_cs = jnp.cumsum(da)                              # [L]
+    # decay[t, s] = exp(da_cs[t] - da_cs[s]) for s <= t
+    diff = da_cs[:, None] - da_cs[None, :]              # [L, L]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(ti >= si, jnp.exp(diff), 0.0)
+
+    # scores[t, s] = (C[t]·B[s]) * decay[t, s] * dt[s]
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    w = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, P]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # chunk state: sum_s exp(da_cs[-1]-da_cs[s]) dt[s] B[s] x[s] -> [P, N]
+    decay_end = jnp.exp(da_cs[-1] - da_cs) * dt         # [L]
+    st = jax.lax.dot_general(x, bm * decay_end[:, None],
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    st_ref[0, 0, :, :] = st
+
+
+def ssd_chunk(x, dt, a, b_mat, c_mat, *, interpret: bool = False):
+    """Intra-chunk SSD over independent chunks.
+
+    x [B,L,H,P], dt [B,L,H], a [H], b_mat/c_mat [B,L,N]
+    -> (y [B,L,H,P] f32, states [B,H,P,N] f32)
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    grid = (bsz, h)
+    y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, l, 1), lambda b_, h_: (b_, 0, h_)),
+            pl.BlockSpec((1,), lambda b_, h_: (h_,)),
+            pl.BlockSpec((1, l, n), lambda b_, h_: (b_, 0, 0)),
+            pl.BlockSpec((1, l, n), lambda b_, h_: (b_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda b_, h_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, st
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None, *,
+                interpret: bool = False):
+    """Drop-in for ``repro.models.ssm.ssd_chunked_ref`` using the kernel for
+    the intra-chunk part; inter-chunk recurrence in XLA."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    def per_chunk(args):
+        xi, di, bi, ci = args
+        return ssd_chunk(xi, di, a, bi, ci, interpret=interpret)
+
+    # fold chunks into the batch dim for one big kernel launch
+    xf = xc.transpose(0, 1, 2, 3, 4).reshape(bsz * nc, chunk, h, p)
+    df = dtc.reshape(bsz * nc, chunk, h)
+    bf = bc.reshape(bsz * nc, chunk, n)
+    cf = cc.reshape(bsz * nc, chunk, n)
+    y_diag, states = ssd_chunk(xf, df, a, bf, cf, interpret=interpret)
+    y_diag = y_diag.reshape(bsz, nc, chunk, h, p)
+    states = states.reshape(bsz, nc, h, p, n)
+
+    da = dtc.astype(jnp.float32) * a[None, None, None, :]
+    da_cs = jnp.cumsum(da, axis=2)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    last, prev = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(states, 1, 0),
+                        jnp.moveaxis(chunk_decay, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                     # [B,NC,H,P,N]
+    state_decay = jnp.exp(da_cs)                        # [B,NC,L,H]
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       cc.astype(jnp.float32), prev, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, last

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, prove memory/sharding coherence, and emit the roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod] [--all] [--out results.json]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); do not set it globally — smoke tests and
+benchmarks are single-device.
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax          # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs as cfgs                         # noqa: E402
+from repro.configs.base import SHAPES, input_specs, shape_applicable  # noqa: E402
+from repro.core.opcount import count_fn                   # noqa: E402
+from repro.core.predict import traffic_from_counts        # noqa: E402
+from repro.hlo.roofline import roofline_from_compiled     # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.models import model as model_mod               # noqa: E402
+from repro.models.layers import sds_from_specs            # noqa: E402
+from repro.models.transformer import model_specs as tfm_specs  # noqa: E402
+from repro.parallel import sharding as sh                 # noqa: E402
+from repro.serve.step import make_prefill_step, make_serve_step  # noqa: E402
+from repro.train import optimizer as opt_mod              # noqa: E402
+from repro.train.step import TrainState, make_train_step  # noqa: E402
+
+
+def _sharded_sds(specs, mesh):
+    shardings = sh.param_shardings(specs, mesh)
+    sds = sds_from_specs(specs)
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        sds, shardings)
+
+
+def _replicated_scalar(mesh, dtype):
+    return jax.ShapeDtypeStruct((), dtype,
+                                sharding=NamedSharding(mesh, P()))
+
+
+VARIANTS = ("baseline", "zero1", "moe-index", "serve-repl", "seqpar", "best")
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """(jit-able fn, example args as sharded SDS, model_flops) for a cell.
+
+    Variants (§Perf hillclimb knobs; combine with '+'):
+      zero1      — train: params replicated over data (TP only), optimizer
+                   state FSDP-sharded (ZeRO-1) -> no per-layer param gathers
+      moe-index  — index-based MoE dispatch (scalar scatter + wide gather)
+      serve-repl — serving: params replicated over data, sharded on model
+      seqpar     — sequence-parallel residual (AR -> AG/RS around TP dots)
+      best       — all of the above where applicable
+    """
+    cfg = cfgs.get_config(arch)
+    shape = SHAPES[shape_name]
+    parts = set(variant.split("+"))
+    if parts & {"moe-index", "best"} and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_dispatch="index")
+    # "best" excludes seqpar: §Perf A2 showed it trades wire for memory
+    if "seqpar" in parts \
+            and shape.seq_len % mesh.shape.get("model", 1) == 0:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    if "noremat" in parts:
+        cfg = dataclasses.replace(cfg, remat=False)
+    if "savecoll" in parts:
+        cfg = dataclasses.replace(cfg, remat_policy="save_collectives")
+    specs = model_mod.model_specs(cfg)
+    zero1 = bool(parts & {"zero1", "best"})
+    serve_repl = bool(parts & {"serve-repl", "best"})
+    inputs = sh.input_shardings(input_specs(cfg, shape_name), mesh,
+                                batch_dim_overrides={"positions": 1})
+
+    if shape.kind == "train":
+        # ZeRO-1 only when the TP-sharded params fit comfortably in HBM
+        params_fit = (cfg.param_count() * 2 / mesh.shape.get("model", 1)
+                      < 8 * 2**30)
+        fsdp_params = not (zero1 and params_fit)
+        params_sds = _sharded_sds(specs, mesh) if fsdp_params else \
+            jax.tree.map(
+                lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=ns),
+                sds_from_specs(specs),
+                sh.param_shardings(specs, mesh, fsdp=False))
+        opt_cfg = opt_mod.OptConfig(
+            mv_dtype=cfg.optimizer_dtype,
+            master_fp32=(cfg.optimizer_dtype == "float32"))
+        opt_specs = opt_mod.opt_state_specs(specs, opt_cfg)
+        opt_sds = _sharded_sds(opt_specs, mesh)     # always FSDP (ZeRO-1)
+        state = TrainState(params=params_sds, opt=opt_sds)
+        fn = make_train_step(cfg, opt_cfg)
+        args = (state, inputs)
+        # 6·N·D (dense) / 6·N_active·D (MoE) useful training flops
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        params_sds = _sharded_sds(specs, mesh) if not serve_repl else \
+            jax.tree.map(
+                lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=ns),
+                sds_from_specs(specs),
+                sh.param_shardings(specs, mesh, fsdp=False))
+        fn = make_prefill_step(cfg)
+        args = (params_sds, inputs)
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:   # decode
+        params_sds = _sharded_sds(specs, mesh) if not serve_repl else \
+            jax.tree.map(
+                lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=ns),
+                sds_from_specs(specs),
+                sh.param_shardings(specs, mesh, fsdp=False))
+        fn = make_serve_step(cfg)
+        cache_sds = sh.cache_shardings(
+            model_mod.init_cache_specs(cfg, shape.global_batch,
+                                       shape.seq_len), mesh)
+        args = (params_sds, cache_sds, inputs["tokens"])
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+    return fn, args, model_flops
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, donate: bool = True, variant: str = "baseline") -> Dict:
+    cfg = cfgs.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "variant": variant, "status": "skipped", "reason": reason}
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, model_flops = build_cell(arch, shape_name, mesh,
+                                           variant=variant)
+        # jaxpr-exact dynamic counts (XLA cost_analysis counts loop bodies
+        # once): program FLOPs + an HBM-traffic estimate for the roofline
+        counts = count_fn(fn, *args)
+        traffic = traffic_from_counts(counts)
+        program_hbm = (traffic["hbm_read_bytes"]
+                       + traffic["hbm_write_bytes"])
+        with mesh:
+            donate_argnums = (0,) if shape.kind != "prefill" and donate else ()
+            jitted = jax.jit(fn, donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            hlo_text = compiled.as_text()
+            rt = roofline_from_compiled(
+                compiled, arch=arch, shape=shape_name, mesh=mesh_name,
+                model_flops_total=model_flops,
+                n_devices=mesh.devices.size, hlo_text=hlo_text,
+                program_flops_total=counts.flops,
+                program_hbm_bytes_total=program_hbm)
+        row = rt.as_row()
+        row.update({
+            "status": "ok",
+            "variant": variant,
+            "compile_s": round(time.time() - t0, 1),
+            "arg_bytes_per_device": ma.argument_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "total_bytes_per_device": (ma.argument_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+            "collective_counts": dict(rt.collectives.count_by_kind),
+            "collective_bytes_by_kind": {
+                k: float(v) for k, v in rt.collectives.by_kind.items()},
+        })
+        row.pop("collectives", None)
+        return row
+    except Exception as e:  # noqa: BLE001 — a failed cell IS the signal
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "variant": variant,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = list(cfgs.ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape_name in shapes:
+                row = run_cell(arch, shape_name, multi_pod=mp, mesh=mesh,
+                               variant=args.variant)
+                results.append(row)
+                status = row["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"bound={row['bound']} "
+                             f"comp={row['compute_s']:.3e}s "
+                             f"mem={row['memory_s']:.3e}s "
+                             f"coll={row['collective_s']:.3e}s "
+                             f"bytes/dev={row['total_bytes_per_device']/2**30:.2f}GiB "
+                             f"compile={row['compile_s']}s")
+                elif status == "error":
+                    extra = row["error"]
+                else:
+                    extra = row["reason"][:60]
+                print(f"[{row['mesh']}] {arch:24s} {shape_name:12s} "
+                      f"{status:7s} {extra}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells: {len(results) - len(bad)} ok/skipped, "
+          f"{len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Activation sharding constraints (ambient-mesh aware, divisibility-safe).
+
+GSPMD propagation into scanned layer bodies is weak; without explicit
+constraints the attention scores / MLP hidden / logits can materialize
+replicated (a 224 GiB/device buffer on the first qwen2 dry-run).  Model code
+calls ``constrain(x, prefs)`` with *preferences*; outside a mesh context (or
+when a dim is not divisible) it degrades to a no-op, so single-device smoke
+tests and odd configs are unaffected.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH = "batch"        # -> ("pod", "data") (whichever exist & divide)
+MODEL = "model"        # -> "model" if divisible
+MODEL_OR_SKIP = MODEL  # alias
+
+
+def ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover — jax internals moved
+        return None
+
+
+def _batch_axes(mesh, dim: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes and dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+        axes.pop(0)
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def constrain(x, prefs: Sequence[Optional[str]]):
+    """Apply a best-effort sharding constraint.
+
+    ``prefs``: one of None / "batch" / "model" per dim.  The first "model"
+    preference whose dim divides the model-axis extent wins; the rest
+    degrade to None (so callers can list fallbacks, e.g. kv-heads then
+    q-groups then seq).
+    """
+    mesh = ambient_mesh()
+    if mesh is None or x.ndim != len(prefs):
+        return x
+    model_n = int(mesh.shape.get("model", 1))
+    spec = []
+    model_used = False
+    for dim, pref in zip(x.shape, prefs):
+        if pref == BATCH:
+            spec.append(_batch_axes(mesh, dim))
+        elif pref == MODEL and not model_used and model_n > 1 \
+                and dim % model_n == 0:
+            spec.append("model")
+            model_used = True
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

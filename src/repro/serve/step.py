@@ -1,0 +1,50 @@
+"""Serving steps: batched prefill + decode against a KV/state cache."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+
+def make_prefill_step(cfg: ModelConfig, attn_fn=None):
+    """prefill(params, batch) -> (last-token logits, aux).
+
+    Lowered for the ``prefill_*`` shapes: the full-sequence forward is the
+    dominant cost; cache materialization is the decode path's first update.
+    """
+    def prefill(params, batch):
+        logits, aux = model_mod.forward(params, batch, cfg, attn_fn=attn_fn)
+        return logits[:, -1:], aux
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens[B,1]) -> (next token ids, cache)."""
+    def serve_step(params, cache, tokens):
+        logits, cache = model_mod.decode_step(params, cache, tokens, cfg)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                    max_new: int, max_seq: int):
+    """Greedy decode loop (example/serving driver path)."""
+    b = prompt.shape[0]
+    cache = model_mod.init_cache(cfg, b, max_seq)
+    step = jax.jit(make_serve_step(cfg))
+    # teacher-force the prompt through the decode path
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(prompt.shape[1] - 1):
+        _, cache = step(params, cache, prompt[:, i:i + 1])
+        out.append(prompt[:, i + 1:i + 2])
+    tok = prompt[:, -1:]
+    for _ in range(max_new):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,79 @@
+"""Elastic scaling + failure handling.
+
+On a node failure the job restarts on a smaller (or repaired) mesh:
+``reshard`` moves a checkpointed state onto the new mesh's shardings, and
+``scale_batch`` adjusts the per-device batch so the global batch is
+preserved when possible (or reduced to the nearest divisible size).
+``StragglerMonitor`` implements the step-time-based mitigation policy:
+persistent stragglers trigger a rebalance event (in production: reassign
+the slow host's data shard and exclude it at the next elastic restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel import sharding as sh
+
+
+def reshard(tree, specs, new_mesh: Mesh, *, fsdp: bool = True):
+    """Re-place a (host-resident or differently-sharded) pytree onto a new
+    mesh according to the logical rules."""
+    shardings = sh.param_shardings(specs, new_mesh, fsdp=fsdp)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def scale_batch(global_batch: int, old_devices: int, new_devices: int) -> int:
+    """Keep the global batch if divisible on the new mesh, else round down."""
+    if global_batch % new_devices == 0:
+        return global_batch
+    per = max(global_batch // new_devices, 1)
+    return per * new_devices
+
+
+@dataclasses.dataclass
+class RebalanceEvent:
+    step: int
+    reason: str
+    slow_factor: float
+
+
+class StragglerMonitor:
+    """Detects persistent stragglers from step times.
+
+    On real multi-host deployments each host reports its step time; a host
+    whose time exceeds ``threshold`` x the fleet median for ``patience``
+    consecutive windows triggers a rebalance event.
+    """
+
+    def __init__(self, threshold: float = 1.35, patience: int = 3,
+                 window: int = 8):
+        self.threshold = threshold
+        self.patience = patience
+        self.window = window
+        self._times: List[float] = []
+        self._strikes = 0
+        self.events: List[RebalanceEvent] = []
+
+    def record(self, step: int, step_time_s: float) -> Optional[RebalanceEvent]:
+        self._times.append(step_time_s)
+        hist = self._times[-self.window:]
+        if len(hist) < self.window:
+            return None
+        med = float(np.median(hist[:-1]))
+        if med > 0 and hist[-1] > self.threshold * med:
+            self._strikes += 1
+        else:
+            self._strikes = 0
+        if self._strikes >= self.patience:
+            ev = RebalanceEvent(step=step, reason="persistent straggler",
+                                slow_factor=hist[-1] / med)
+            self.events.append(ev)
+            self._strikes = 0
+            return ev
+        return None

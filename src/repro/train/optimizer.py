@@ -1,0 +1,115 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and configurable
+moment dtype (bf16 moments for the 480B-parameter MoE to fit HBM)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    mv_dtype: str = "float32"
+    master_fp32: bool = True       # keep fp32 master copy of bf16 params
+
+
+def schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    mv = jnp.dtype(cfg.mv_dtype)
+    state = {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mv), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, mv), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        # copy=True: f32 params would otherwise alias their master copy and
+        # break argument donation (same buffer donated twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return state
+
+
+def opt_state_specs(param_specs, cfg: OptConfig):
+    """PSpec tree for the optimizer state (for sharded dry-run init)."""
+    from repro.models.layers import PSpec
+    mv = cfg.mv_dtype
+
+    def mom(sp):
+        return PSpec(sp.shape, sp.axes, mv, init="zeros")
+
+    state = {
+        "mu": jax.tree.map(mom, param_specs,
+                           is_leaf=lambda x: isinstance(x, PSpec)),
+        "nu": jax.tree.map(mom, param_specs,
+                           is_leaf=lambda x: isinstance(x, PSpec)),
+        "step": PSpec((), (), "int32", init="zeros"),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda sp: PSpec(sp.shape, sp.axes, "float32", init=sp.init),
+            param_specs, is_leaf=lambda x: isinstance(x, PSpec))
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, opt_state, cfg: OptConfig):
+    """One AdamW step -> (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    mv = jnp.dtype(cfg.mv_dtype)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    base = opt_state.get("master", params)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu32 / b1c
+        vhat = nu32 / b2c
+        p32 = p.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        return p32 - lr * delta, mu32.astype(mv), nu32.astype(mv)
+
+    out = jax.tree.map(upd, base, grads, opt_state["mu"], opt_state["nu"])
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                              new_master, params)
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    if "master" in opt_state:
+        new_state["master"] = new_master
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

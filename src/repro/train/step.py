@@ -1,0 +1,83 @@
+"""Train-step builder: loss + grad + AdamW, with optional gradient
+accumulation (microbatching) and a gradient-compression hook."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.train import optimizer as opt_mod
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(params=c[0], opt=c[1]))
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptConfig,
+                    *, microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    attn_fn=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_transform``: hook applied to the averaged grads before the
+    optimizer (gradient compression, custom all-reduce schedules...).
+    ``microbatches``: gradient accumulation over the leading batch split.
+    """
+
+    def loss(params, batch):
+        return model_mod.loss_fn(params, batch, cfg, attn_fn=attn_fn)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_fn(carry, mb):
+                (l, aux), g = grad_fn(state.params, mb)
+                carry = jax.tree.map(jnp.add, carry, g)
+                return carry, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, losses = jax.lax.scan(acc_fn, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss_val = jnp.mean(losses)
+        else:
+            (loss_val, aux), grads = grad_fn(state.params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        new_params, new_opt, om = opt_mod.apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss_val, **om}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_state(cfg: ModelConfig, opt_cfg: opt_mod.OptConfig,
+               key: jax.Array) -> TrainState:
+    params = model_mod.init_params(cfg, key)
+    return TrainState(params=params, opt=opt_mod.init_opt_state(params, opt_cfg))

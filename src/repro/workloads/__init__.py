@@ -1,0 +1,3 @@
+from repro.workloads.suite import WORKLOADS, Workload, build_workloads
+
+__all__ = ["WORKLOADS", "Workload", "build_workloads"]

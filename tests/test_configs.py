@@ -1,0 +1,69 @@
+"""Config fidelity: analytic parameter counts match the published sizes."""
+import pytest
+
+from repro import configs as cfgs
+from repro.configs.base import SHAPES, shape_applicable
+
+# (arch, expected params, rel tolerance).  MoE models use total params.
+EXPECTED = {
+    "qwen2-0.5b": (0.49e9, 0.30),
+    "gemma2-27b": (27e9, 0.25),
+    "h2o-danube-3-4b": (4.0e9, 0.30),
+    "minicpm3-4b": (4.0e9, 0.35),
+    "mamba2-2.7b": (2.7e9, 0.30),
+    "zamba2-2.7b": (2.7e9, 0.35),
+    "qwen2-vl-7b": (7.6e9, 0.30),
+    "whisper-small": (0.24e9, 0.45),
+    "arctic-480b": (480e9, 0.25),
+    "llama4-scout-17b-a16e": (109e9, 0.35),
+}
+
+
+@pytest.mark.parametrize("arch", cfgs.ARCHS)
+def test_param_count_matches_published(arch):
+    cfg = cfgs.get_config(arch)
+    n = cfg.param_count()
+    want, tol = EXPECTED[arch]
+    assert abs(n - want) / want < tol, f"{arch}: {n/1e9:.2f}B vs {want/1e9}B"
+
+
+def test_llama4_active_params_about_17b():
+    cfg = cfgs.get_config("llama4-scout-17b-a16e")
+    active = cfg.active_param_count()
+    assert 10e9 < active < 25e9
+
+
+def test_arctic_active_much_smaller_than_total():
+    cfg = cfgs.get_config("arctic-480b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()
+
+
+def test_long_context_applicability():
+    """DESIGN.md §Arch-applicability: exactly these run long_500k."""
+    runs = {a for a in cfgs.ARCHS
+            if shape_applicable(cfgs.get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == {"gemma2-27b", "h2o-danube-3-4b", "mamba2-2.7b",
+                    "zamba2-2.7b"}
+
+
+def test_smoke_configs_are_small():
+    for arch in cfgs.ARCHS:
+        cfg = cfgs.get_smoke_config(arch)
+        assert cfg.param_count() < 5e7, arch
+        assert cfg.family == cfgs.get_config(arch).family
+
+
+def test_exact_published_dims():
+    c = cfgs.get_config("gemma2-27b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (46, 4608, 32, 16, 36864, 256000)
+    c = cfgs.get_config("arctic-480b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.n_experts, c.moe_top_k) == (35, 7168, 56, 8, 4864,
+                                                   32000, 128, 2)
+    c = cfgs.get_config("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == (64, 2560,
+                                                             50280, 128)
+    c = cfgs.get_config("qwen2-0.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (24, 896, 14, 2, 4864, 151936, True)

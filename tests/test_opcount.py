@@ -1,0 +1,119 @@
+"""Unit tests for the jaxpr op counter (the profiler)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isa, opcount
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_scan_multiplies_counts():
+    def fn(x):
+        def body(c, _):
+            return c + 1.0, ()
+        c, _ = jax.lax.scan(body, x, None, length=37)
+        return c
+    c = opcount.count_fn(fn, _sds((8, 16)))
+    assert c.units["add.f32"] == 37 * 8 * 16
+    assert c.units["ctl.loop"] == 37
+
+
+def test_dot_macs_and_alignment():
+    def fn(a, b):
+        return a @ b
+    c = opcount.count_fn(fn, _sds((256, 512)), _sds((512, 128)))
+    assert c.units["dot.f32"] == 256 * 512 * 128
+    assert c.flops == 2 * 256 * 512 * 128
+    assert c.mxu_macs_aligned == c.mxu_macs_total   # all dims %128 == 0
+
+    c2 = opcount.count_fn(fn, _sds((100, 512)), _sds((512, 128)))
+    assert c2.mxu_macs_aligned == 0                 # 100 not aligned
+
+
+def test_batched_dot():
+    def fn(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c = opcount.count_fn(fn, _sds((4, 32, 64)), _sds((4, 64, 16)))
+    assert c.units["dot.f32"] == 4 * 32 * 64 * 16
+
+
+def test_arch_gen_remaps_dot_forms():
+    def small(a, b):
+        return a @ b
+    c0 = opcount.count_fn(small, _sds((16, 64)), _sds((64, 32)))
+    assert "dot.f32" in c0.units
+    c1 = opcount.count_fn(small, _sds((16, 64)), _sds((64, 32)), isa_gen=1)
+    assert "dot_small.f32" in c1.units and "dot.f32" not in c1.units
+
+    def batched(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c2 = opcount.count_fn(batched, _sds((4, 256, 256)), _sds((4, 256, 256)),
+                          isa_gen=2)
+    assert "dot_group.f32" in c2.units
+
+
+def test_convert_classes():
+    def fn(x):
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    c = opcount.count_fn(fn, _sds((128, 128)))
+    assert c.units["convert.f32.bf16"] == 128 * 128
+    assert c.units["convert.bf16.f32"] == 128 * 128
+
+
+def test_elementwise_dtype_grouping():
+    def fn(x):
+        return jnp.exp(x) + jnp.tanh(x)
+    c = opcount.count_fn(fn, _sds((64, 64), jnp.bfloat16))
+    assert c.units["exp.bf16"] == 64 * 64
+    assert c.units["tanh.bf16"] == 64 * 64
+    assert c.units["add.bf16"] == 64 * 64
+
+
+def test_gather_io_only_touched_rows():
+    def fn(table, idx):
+        return table[idx]
+    c = opcount.count_fn(fn, _sds((100000, 64)), _sds((32,), jnp.int32))
+    # traffic ~ gathered rows (+ index bookkeeping), not the whole table
+    assert c.naive_bytes < 3 * (32 * 64 * 4)
+    assert c.units["gather"] == 32 * 64
+
+
+def test_fusion_boundary_vs_fused():
+    def chain(x):
+        for _ in range(10):
+            x = x * 1.5
+        return x
+    c = opcount.count_fn(chain, _sds((128, 128)))
+    # 10-op chain: only first read + last write are boundary
+    assert c.fused_bytes > 4 * c.boundary_bytes
+
+
+def test_collective_wire_bytes_math():
+    b = 1024.0
+    assert opcount._COLLECTIVES["psum"][1](b, 8) == 2 * b * 7 / 8
+    assert opcount._COLLECTIVES["all_gather"][1](b, 8) == b * 7
+    assert opcount._COLLECTIVES["ppermute"][1](b, 8) == b
+
+
+def test_cond_counts_worst_branch():
+    def fn(x, p):
+        return jax.lax.cond(p, lambda v: v @ v, lambda v: v + 1.0, x)
+    c = opcount.count_fn(fn, _sds((64, 64)), _sds((), jnp.bool_))
+    assert c.units.get("dot.f32", 0) == 64 * 64 * 64
+    assert c.units["ctl.cond"] == 1
+
+
+def test_unknown_class_reaches_bucketing():
+    # sub.int has no table entry but must bucket as integer-lane work
+    assert "sub.int" not in isa.CLASS_BY_NAME
+    assert isa.bucket_of("sub.int") == isa.BUCKET_VPU_INT
+
+
+def test_grouping_folds_modifiers():
+    assert isa.group_class("log1p.f32") == "log.f32"
+    assert isa.group_class("shift_left.int") == "shift.int"
+    assert isa.group_class("exp.bf16") == "exp.bf16"

@@ -1,0 +1,112 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import isa
+from repro.core.opcount import OpCounts, count_fn
+from repro.core.predict import predict
+from repro.core.table import EnergyTable
+from repro.hlo.parse import shape_bytes
+
+TABLE = EnergyTable(system="t", p_const=40.0, p_static=50.0,
+                    direct={"add.f32": 1e-11, "dot.bf16": 1.3e-12,
+                            "hbm.read": 4.5e-11, "hbm.write": 5e-11,
+                            "vmem.read": 1.4e-12, "vmem.write": 1.7e-12,
+                            "exp.f32": 3e-11})
+from repro.core import coverage as cov
+cov.compute_bucket_means(TABLE)
+
+
+@given(st.text(alphabet="abcdefghij._", min_size=1, max_size=24))
+def test_group_class_idempotent(name):
+    g1 = isa.group_class(name)
+    assert isa.group_class(g1) == g1
+
+
+@given(st.sampled_from(list(isa.CLASS_BY_NAME)))
+def test_every_table_class_has_a_bucket(cls):
+    assert isa.bucket_of(cls) in isa.ALL_BUCKETS
+
+
+@given(st.floats(1.0, 1e6), st.floats(0.01, 100.0))
+@settings(max_examples=30)
+def test_prediction_linear_in_units(units, dur):
+    c1 = OpCounts()
+    c1.add("add.f32", units)
+    c2 = c1.scaled(3.0)
+    p1 = predict(TABLE, c1, dur, counters={})
+    p2 = predict(TABLE, c2, dur, counters={})
+    assert math.isclose(p2.dynamic_j, 3 * p1.dynamic_j, rel_tol=1e-9)
+    assert math.isclose(p2.const_j, p1.const_j, rel_tol=1e-12)
+
+
+@given(st.floats(0.1, 1e4))
+@settings(max_examples=20)
+def test_prediction_const_static_linear_in_time(dur):
+    c = OpCounts()
+    c.add("dot.bf16", 1e9)
+    p = predict(TABLE, c, dur, counters={})
+    assert math.isclose(p.const_j, TABLE.p_const * dur, rel_tol=1e-9)
+    assert math.isclose(p.static_j, TABLE.p_static * dur, rel_tol=1e-9)
+
+
+@given(st.integers(1, 4), st.integers(1, 64), st.integers(1, 64),
+       st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_dot_macs_invariant(b, m, n, k):
+    def fn(a_, b_):
+        return jnp.einsum("bij,bjk->bik", a_, b_)
+    c = count_fn(fn, jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+                 jax.ShapeDtypeStruct((b, k, n), jnp.float32))
+    assert c.units["dot.f32"] == b * m * n * k
+    assert c.flops == 2 * b * m * n * k
+
+
+@given(st.integers(1, 40), st.integers(1, 2048))
+@settings(max_examples=25, deadline=None)
+def test_scan_count_multiplication_invariant(length, width):
+    def fn(x):
+        def body(carry, _):
+            return carry * 1.5 + 2.0, ()
+        c, _ = jax.lax.scan(body, x, None, length=length)
+        return c
+    c = count_fn(fn, jax.ShapeDtypeStruct((width,), jnp.float32))
+    assert c.units["mul.f32"] == length * width
+    assert c.units["add.f32"] == length * width
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "u8", "pred", "f8e4m3fn"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_shape_bytes_parser(dtype, dims):
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    per = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1,
+           "f8e4m3fn": 1}[dtype]
+    want = per * int(np.prod(dims)) if dims else per
+    assert shape_bytes(s) == want
+
+
+@given(st.integers(0, 2))
+def test_gen_classes_monotone(gen):
+    c0 = {c.name for c in isa.classes_for_gen(gen)}
+    c1 = {c.name for c in isa.classes_for_gen(gen + 1)}
+    assert c0 <= c1
+
+
+@given(st.floats(1e3, 1e9), st.floats(1e3, 1e9), st.floats(0.0, 1e9))
+@settings(max_examples=30)
+def test_opcounts_merge_additive(a_units, b_units, bbytes):
+    x = OpCounts()
+    x.add("add.f32", a_units)
+    x.add_io(bbytes, bbytes / 2, 0.0)
+    y = OpCounts()
+    y.add("add.f32", b_units)
+    z = OpCounts()
+    z.merge(x)
+    z.merge(y)
+    assert math.isclose(z.units["add.f32"], a_units + b_units, rel_tol=1e-12)
+    assert math.isclose(z.boundary_bytes, 1.5 * bbytes, rel_tol=1e-12)

@@ -1,0 +1,66 @@
+"""Logical-axis sharding rules: divisibility-aware degradation."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import PSpec
+from repro.parallel import act_sharding, sharding as sh
+
+# a fake 16x16 mesh without devices: use jax.sharding.Mesh over abstract?
+# simplest: build a small real mesh and scale expectations to it.
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device CPU: mesh of 1x1 still exercises the rule logic for
+    # divisibility via axis sizes of 1; use AbstractMesh for 16x16 shapes
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_ff_goes_to_model(mesh):
+    spec = PSpec((4864, 896), ("ff", "embed"))
+    assert sh.spec_to_pspec(spec, mesh) == P("model", "data")
+
+
+def test_indivisible_heads_replicate(mesh):
+    spec = PSpec((896, 14, 64), ("embed", "q_heads", "head_dim"))
+    # 14 heads % 16 != 0 -> replicated; embed 896 % 16 == 0 -> fsdp(data)
+    assert sh.spec_to_pspec(spec, mesh) == P("data", None, None)
+
+
+def test_odd_vocab_replicates(mesh):
+    spec = PSpec((51865, 768), ("vocab", "embed"))
+    # 51865 = 5*11*23*41: neither model nor data divide it
+    assert sh.spec_to_pspec(spec, mesh) == P(None, "data")
+
+
+def test_mesh_axis_used_once(mesh):
+    spec = PSpec((4864, 4864), ("ff", "vocab"))
+    got = sh.spec_to_pspec(spec, mesh)
+    used = [a for a in got if a is not None]
+    assert len(set(map(str, used))) == len(used)
+
+
+def test_fsdp_disabled(mesh):
+    spec = PSpec((896, 14, 64), ("embed", "q_heads", "head_dim"))
+    assert sh.spec_to_pspec(spec, mesh, fsdp=False) == P(None, None, None)
+
+
+def test_batch_pspec_falls_back(mesh):
+    # batch 1 (long_500k): nothing divides -> fully replicated
+    assert sh.batch_pspec(mesh, 1, 2) == P(None, None)
+    assert sh.batch_pspec(mesh, 256, 2) == P("data", None)
+
+
+def test_multipod_fsdp_axes():
+    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = PSpec((4608, 36864), ("embed", "ff"))
+    got = sh.spec_to_pspec(spec, mesh3)
+    assert got == P(("pod", "data"), "model")
+
+
+def test_act_constrain_noop_without_mesh():
+    x = jax.numpy.zeros((4, 8))
+    y = act_sharding.constrain(x, [act_sharding.BATCH, act_sharding.MODEL])
+    assert y is x   # identity outside a mesh context
