@@ -8,9 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
-from repro.core import opcount, predict
-from repro.core.trainer import cached_table
-from repro.hw import Program, get_device
+from repro.api import EnergyModel
 
 
 def _make(scale):
@@ -31,14 +29,10 @@ def _audit(fn, iters=None):
             jax.ShapeDtypeStruct((512, 2048), jnp.bfloat16),
             jax.ShapeDtypeStruct((2048, 64), jnp.bfloat16),
             jax.ShapeDtypeStruct((65536, 64), jnp.bfloat16))
-    counts = opcount.count_fn(fn, *args)
-    dev = get_device("sim-v5e-air")
-    iters = iters or dev.iters_for_duration(counts, 30.0)
-    rec = dev.run(Program("backprop_k2", counts, iters=iters))
-    pred = predict.predict(cached_table("sim-v5e-air"),
-                           counts.scaled(iters), rec.duration_s,
-                           counters=rec.counters)
-    return rec, pred, iters
+    model = EnergyModel.from_store("sim-v5e-air")
+    cmp = model.compare(fn, *args, target_seconds=30.0, iters=iters,
+                        name="backprop_k2")
+    return cmp.record, cmp.prediction, cmp.record.iters
 
 
 @timed("case_backprop_precision_bug")

@@ -8,10 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
+from repro.api import EnergyModel
 from repro.core import opcount
-from repro.core.fleet import EnergyMonitor
-from repro.core.trainer import cached_table
-from repro.hw import Program, get_device
 
 
 def _qmc_step(update_every: int):
@@ -46,29 +44,24 @@ def _qmc_step(update_every: int):
 
 @timed("case_qmc_redundant_update")
 def case_qmc():
-    dev = get_device("sim-v5e-air")
-    table = cached_table("sim-v5e-air")
+    model = EnergyModel.from_store("sim-v5e-air")
     buggy = _qmc_step(update_every=1)     # every step (unintended)
     fixed = _qmc_step(update_every=8)     # intended frequency
 
     # fleet monitor over a run that regresses at step 12
-    mon = EnergyMonitor(table, window=8, spike_ratio=1.4, min_share=0.03)
+    mon = model.monitor(window=8, spike_ratio=1.4, min_share=0.03)
     for step in range(24):
         counts = buggy if step >= 12 else fixed
         t_step = 0.085 if step >= 12 else 0.05   # profiled step times
         mon.observe(step, counts, t_step)
     spiked = sorted({a.cls for a in mon.anomalies if a.step == 12})
 
-    iters = dev.iters_for_duration(buggy, 30.0)
-    rb = dev.run(Program("qmc_dmc", buggy, iters=iters))
-    rf = dev.run(Program("qmc_dmc", fixed, iters=iters))
-    from repro.core import predict
-    p_bug = predict.predict(table, buggy.scaled(iters), rb.duration_s,
-                            counters=rb.counters).total_j
-    p_fix = predict.predict(table, fixed.scaled(iters), rf.duration_s,
-                            counters=rf.counters).total_j
+    iters = model.device.iters_for_duration(buggy, 30.0)
+    cb = model.compare(buggy, iters=iters, name="qmc_dmc")
+    cf = model.compare(fixed, iters=iters, name="qmc_dmc")
+    rb, rf = cb.record, cf.record
     meas = 1 - rf.energy_counter_j / rb.energy_counter_j
-    prd = 1 - p_fix / p_bug
+    prd = 1 - cf.predicted_j / cb.predicted_j
     return (f"anomaly_at_regression={bool(spiked)}|classes={spiked[:2]}"
             f"|saved_measured={meas:.1%}|saved_predicted={prd:.1%}")
 

@@ -6,26 +6,26 @@ the underlying linear relationship, paper: 0.988)."""
 from __future__ import annotations
 
 from benchmarks.common import timed
+from repro.api import EnergyModel
 from repro.core import transfer
 from repro.core.evaluate import evaluate_system
-from repro.core.trainer import cached_table
-from repro.hw.systems import get_device
 
 
 @timed("fig14_transfer")
 def fig14():
-    air = cached_table("sim-v5e-air")
-    liq = cached_table("sim-v5e-liquid")
+    air = EnergyModel.from_store("sim-v5e-air").table
+    liq_model = EnergyModel.from_store("sim-v5e-liquid")
+    liq = liq_model.table
     r2 = transfer.r2_between(air, liq)
-    chip = get_device("sim-v5e-liquid").chip
+    chip = liq_model.device.chip
     out = [f"R2={r2:.3f}"]
     for frac in (0.1, 0.5):
         hybrid, _ = transfer.transfer_table(air, liq, frac, seed=3, chip=chip)
         rep = evaluate_system("sim-v5e-liquid", table=hybrid,
                               with_accelwattch=False, with_guser=False)
         out.append(f"{int(frac*100)}%={rep.mape_table()['wattchmen_pred']:.1f}%")
-    rep_full = evaluate_system("sim-v5e-liquid", with_accelwattch=False,
-                               with_guser=False)
+    rep_full = evaluate_system("sim-v5e-liquid", model=liq_model,
+                               with_accelwattch=False, with_guser=False)
     out.append(f"100%={rep_full.mape_table()['wattchmen_pred']:.1f}%")
     return "|".join(out)
 

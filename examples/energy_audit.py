@@ -11,12 +11,12 @@ Wattchmen's per-class breakdown points straight at ``dot.f32`` +
 import jax
 import jax.numpy as jnp
 
-from repro.core import opcount, predict
-from repro.core.trainer import cached_table
-from repro.hw import Program, get_device
+from repro import EnergyModel
 
 SCALE_BUGGY = jnp.float32(0.125)      # strong f32: silently upcasts bf16!
 SCALE_FIXED = 0.125                   # weak python float: stays bf16
+
+MODEL = EnergyModel.from_store("sim-v5e-air")
 
 
 def make_backprop(scale):
@@ -38,14 +38,9 @@ def audit(fn, iters=None):
             jax.ShapeDtypeStruct((512, 2048), jnp.bfloat16),
             jax.ShapeDtypeStruct((2048, 64), jnp.bfloat16),
             jax.ShapeDtypeStruct((65536, 64), jnp.bfloat16))
-    counts = opcount.count_fn(fn, *args)
-    dev = get_device("sim-v5e-air")
-    iters = iters or dev.iters_for_duration(counts, 30.0)
-    rec = dev.run(Program("backprop_k2", counts, iters=iters))
-    pred = predict.predict(cached_table("sim-v5e-air"),
-                           counts.scaled(rec.iters), rec.duration_s,
-                           counters=rec.counters)
-    return rec, pred, iters
+    cmp = MODEL.compare(fn, *args, target_seconds=30.0, iters=iters,
+                        name="backprop_k2")
+    return cmp.record, cmp.prediction, cmp.record.iters
 
 
 rec_bug, pred_bug, n_iters = audit(make_backprop(SCALE_BUGGY))

@@ -1,44 +1,49 @@
-"""Quickstart: the paper in one page.
+"""Quickstart: the paper in three lines.
 
-Train a per-op energy table on the simulated v5e (microbenchmarks +
-steady-state measurement + non-negative solve), then predict and attribute
-the energy of a workload it has never seen.
+``EnergyModel`` is the whole surface: ``from_store`` loads the trained
+per-op energy table from the persistent table store (training it once — the
+~76-microbenchmark suite + non-negative solve — if this is the first run on
+this machine), ``compare`` measures a workload on the device and predicts
+its energy from the same profile, and ``attribute`` breaks the energy down
+per op class and per micro-architectural bucket.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Run it twice: the second invocation loads the table from the store
+(``~/.cache/repro/tables`` or ``$REPRO_TABLE_STORE``) in milliseconds
+instead of re-training.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import opcount, predict
-from repro.core.trainer import train_table
-from repro.hw import Program, get_device
+from repro import EnergyModel, default_store
 
-# --- training phase (paper Fig. 2 top): ~76 microbenchmarks, solved jointly
-table = train_table("sim-v5e-air")
-print(f"table: {len(table.direct)} direct classes, "
-      f"P_const={table.p_const:.1f}W P_static={table.p_static:.1f}W "
-      f"residual={table.meta['residual_rel']:.4f}")
+# --- training phase (paper Fig. 2 top) — or a store hit on the second run
+t0 = time.time()
+cold = not default_store().path_for("sim-v5e-air").exists()
+model = EnergyModel.from_store("sim-v5e-air")
+print(f"{model} [{'trained' if cold else 'loaded from store'} "
+      f"in {time.time() - t0:.2f}s]")
+
 
 # --- an application the table has never seen
 def my_app(x, w1, w2):
     h = jax.nn.gelu(x @ w1)
     return jnp.sum(jax.nn.softmax(h @ w2, axis=-1))
 
+
 args = (jax.ShapeDtypeStruct((8192, 1024), jnp.bfloat16),
         jax.ShapeDtypeStruct((1024, 4096), jnp.bfloat16),
         jax.ShapeDtypeStruct((4096, 1024), jnp.bfloat16))
-counts = opcount.count_fn(my_app, *args)
 
 # --- ground truth from the device (NVML analogue) vs Wattchmen prediction
-dev = get_device("sim-v5e-air")
-rec = dev.run(Program("my_app", counts,
-                      iters=dev.iters_for_duration(counts, 30.0)))
-pred = predict.predict(table, counts.scaled(rec.iters), rec.duration_s,
-                       counters=rec.counters)
+cmp = model.compare(my_app, *args, target_seconds=30.0)
+pred = cmp.prediction
 
-print(f"\nmeasured : {rec.energy_counter_j:10.1f} J")
-print(f"predicted: {pred.total_j:10.1f} J "
-      f"({100 * (pred.total_j / rec.energy_counter_j - 1):+.1f}%)")
+print(f"\nmeasured : {cmp.measured_j:10.1f} J")
+print(f"predicted: {cmp.predicted_j:10.1f} J ({cmp.error_pct:+.1f}%)")
 print(f"coverage : {pred.coverage:.1%} of dynamic energy from direct entries")
 print("\ntop energy consumers:")
 for cls, e in pred.top_classes(6):

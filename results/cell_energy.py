@@ -12,10 +12,9 @@ import pathlib    # noqa: E402
 import jax        # noqa: E402
 
 from repro import configs as cfgs                     # noqa: E402
+from repro.api import EnergyModel, PredictJob         # noqa: E402
 from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
 from repro.core.opcount import count_fn               # noqa: E402
-from repro.core.predict import predict                # noqa: E402
-from repro.core.trainer import cached_table           # noqa: E402
 from repro.launch.dryrun import build_cell            # noqa: E402
 from repro.launch.mesh import make_production_mesh    # noqa: E402
 
@@ -28,11 +27,11 @@ def main():
     step_lb = {(r["arch"], r["shape"]): max(r["compute_s"], r["memory_s"],
                                             r["collective_s"])
                for r in rows if r["status"] == "ok" and r["mesh"] == "16x16"}
-    table = cached_table("sim-v5e-air")
+    model = EnergyModel.from_store("sim-v5e-air")
     mesh = make_production_mesh()
-    print("| arch | shape | step LB (s) | pod energy/step (J) | "
-          "J/token | dominant bucket |")
-    print("|---|---|---|---|---|---|")
+    # profile every (arch x shape) cell, then predict the whole batch at
+    # once — the facade amortizes table lookups across all cells
+    cells, jobs = [], []
     for arch in cfgs.ARCHS:
         for shape_name in SHAPES:
             cfg = cfgs.get_config(arch)
@@ -43,14 +42,21 @@ def main():
             counts = count_fn(fn, *args)
             t = step_lb.get((arch, shape_name), 1.0)
             # per-chip share of the program + per-chip static/const x time
-            pred = predict(table, counts.scaled(1.0 / N_CHIPS), t)
-            pod_j = pred.total_j * N_CHIPS
-            tokens = (shape.global_batch * shape.seq_len
-                      if shape.kind != "decode" else shape.global_batch)
-            dom = max(((b, e) for b, e in pred.by_bucket.items()),
-                      key=lambda kv: kv[1])[0]
-            print(f"| {arch} | {shape_name} | {t:.3e} | {pod_j:.3e} "
-                  f"| {pod_j / tokens:.3e} | {dom} |")
+            jobs.append(PredictJob(counts.scaled(1.0 / N_CHIPS), t,
+                                   name=f"{arch}/{shape_name}"))
+            cells.append((arch, shape_name, shape, t))
+    print("| arch | shape | step LB (s) | pod energy/step (J) | "
+          "J/token | dominant bucket |")
+    print("|---|---|---|---|---|---|")
+    for (arch, shape_name, shape, t), pred in zip(cells,
+                                                  model.predict_many(jobs)):
+        pod_j = pred.total_j * N_CHIPS
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind != "decode" else shape.global_batch)
+        dom = max(((b, e) for b, e in pred.by_bucket.items()),
+                  key=lambda kv: kv[1])[0]
+        print(f"| {arch} | {shape_name} | {t:.3e} | {pod_j:.3e} "
+              f"| {pod_j / tokens:.3e} | {dom} |")
 
 
 if __name__ == "__main__":

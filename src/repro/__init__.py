@@ -1,0 +1,55 @@
+"""Wattchmen reproduction — high-fidelity, flexible accelerator energy
+modeling (training-phase table + prediction/attribution), grown toward a
+production-scale fleet-monitoring system.
+
+The public surface is the ``EnergyModel`` session facade:
+
+    import repro
+
+    model = repro.EnergyModel.from_store("sim-v5e-air")
+    cmp = model.compare(my_fn, *shape_args)
+    print(cmp.measured_j, cmp.predicted_j, cmp.error_pct)
+
+Attributes are resolved lazily (PEP 562) so ``import repro`` stays cheap and
+environment variables (e.g. ``XLA_FLAGS``) set before the first deep import
+still take effect.
+"""
+from __future__ import annotations
+
+__version__ = "0.1.0"
+
+# public name -> defining submodule
+_LAZY = {
+    "EnergyModel": "repro.api",
+    "Profile": "repro.api",
+    "ProfileSource": "repro.api",
+    "JaxprSource": "repro.api",
+    "HloSource": "repro.api",
+    "CountsSource": "repro.api",
+    "PredictJob": "repro.api",
+    "Comparison": "repro.api",
+    "EnergyTable": "repro.core.table",
+    "TableSchemaError": "repro.core.table",
+    "TableStore": "repro.core.store",
+    "default_store": "repro.core.store",
+    "Prediction": "repro.core.predict",
+    "TablePredictor": "repro.core.predict",
+    "OpCounts": "repro.core.opcount",
+    "EnergyMonitor": "repro.core.fleet",
+    "SYSTEMS": "repro.hw.systems",
+    "get_device": "repro.hw.systems",
+}
+
+__all__ = sorted(_LAZY) + ["__version__"]
+
+
+def __getattr__(name: str):
+    mod_name = _LAZY.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod_name), name)
+
+
+def __dir__():
+    return __all__

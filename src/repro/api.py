@@ -1,0 +1,335 @@
+"""The unified Wattchmen surface: one session object, one verb set.
+
+The paper's artifact is a trained per-instruction energy table that can
+predict and attribute energy for *any* workload (§3.4–3.5).  ``EnergyModel``
+packages that artifact with its device handle behind a coherent API so a
+caller never hand-threads ``get_device`` → ``train_table`` → ``count_fn`` →
+``dev.run`` → ``predict.predict(...)`` again:
+
+    from repro.api import EnergyModel
+
+    model = EnergyModel.from_store("sim-v5e-air")   # load or train-once
+    cmp = model.compare(my_fn, *shape_args)         # measured vs predicted
+    pred = model.attribute(my_fn, *shape_args)      # per-class breakdown
+
+Construction:
+    ``EnergyModel.train(system)``       train now (optionally persist)
+    ``EnergyModel.load(path)``          from a saved table file
+    ``EnergyModel.from_store(system)``  persistent ``TableStore``-backed —
+                                        a trained table survives processes
+                                        and ships to a serving fleet
+
+Profiling is pluggable via ``ProfileSource``: anything with
+``op_counts(isa_gen)`` — the jaxpr tracer (``profile``), the compiled-HLO
+parser (``profile_hlo``), or raw counts (``profile_counts``).  Prediction
+verbs (``predict``, ``predict_many``, ``attribute``, ``compare``,
+``monitor``) all share one ``TablePredictor``, which resolves each op class
+to its (energy, provenance) entry once and amortizes the table lookups
+across every later call — the fleet-scale hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Iterable, List, Mapping, Optional,
+                    Protocol, Sequence, Union, runtime_checkable)
+
+from repro.core.opcount import OpCounts, count_fn
+from repro.core.predict import Prediction, TablePredictor
+from repro.core.store import TableStore, default_store
+from repro.core.table import EnergyTable
+from repro.core.trainer import train_table
+from repro.hw.device import Program, RunRecord, SimDevice
+from repro.hw.systems import get_device
+
+
+# ---------------------------------------------------------------------------
+# Profile sources.
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ProfileSource(Protocol):
+    """Anything that can yield per-iteration op counts for a target gen."""
+
+    def op_counts(self, isa_gen: int) -> OpCounts: ...
+
+
+@dataclasses.dataclass
+class JaxprSource:
+    """Trace a JAX callable (with ShapeDtypeStruct/array args) to a jaxpr."""
+
+    fn: Callable
+    args: tuple = ()
+    kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    axis_sizes: Optional[Mapping[str, int]] = None
+
+    def op_counts(self, isa_gen: int) -> OpCounts:
+        return count_fn(self.fn, *self.args, axis_sizes=self.axis_sizes,
+                        isa_gen=isa_gen, **dict(self.kwargs))
+
+
+@dataclasses.dataclass
+class HloSource:
+    """Parse optimized HLO text (``compiled.as_text()``) into op counts."""
+
+    text: str
+
+    def op_counts(self, isa_gen: int) -> OpCounts:
+        from repro.hlo.opcount import count_hlo_text
+        return count_hlo_text(self.text, isa_gen=isa_gen)
+
+
+@dataclasses.dataclass
+class CountsSource:
+    """Raw profiler counts — an ``OpCounts`` or a ``{class: units}`` map."""
+
+    counts: Union[OpCounts, Mapping[str, float]]
+
+    def op_counts(self, isa_gen: int) -> OpCounts:
+        if isinstance(self.counts, OpCounts):
+            return self.counts
+        out = OpCounts()
+        for cls, units in self.counts.items():
+            out.add(cls, float(units))
+        return out
+
+
+@dataclasses.dataclass
+class Profile:
+    """Resolved per-iteration op counts, ready for predict/measure."""
+
+    name: str
+    counts: OpCounts
+
+    def op_counts(self, isa_gen: int) -> OpCounts:   # ProfileSource
+        return self.counts
+
+    def scaled(self, mult: float) -> OpCounts:
+        return self.counts.scaled(mult)
+
+
+# ---------------------------------------------------------------------------
+# Job / result containers.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PredictJob:
+    """One unit of batched prediction (``EnergyModel.predict_many``)."""
+
+    source: Union[ProfileSource, OpCounts]
+    duration_s: float
+    counters: Optional[Mapping[str, float]] = None
+    mode: Optional[str] = None          # None -> the batch-level mode
+    name: str = ""
+
+
+@dataclasses.dataclass
+class Comparison:
+    """Measured-vs-predicted energy for one workload run."""
+
+    record: RunRecord
+    prediction: Prediction
+
+    @property
+    def measured_j(self) -> float:
+        return self.record.energy_counter_j
+
+    @property
+    def predicted_j(self) -> float:
+        return self.prediction.total_j
+
+    @property
+    def error_pct(self) -> float:
+        if self.measured_j <= 0:
+            return 0.0
+        return 100.0 * (self.predicted_j / self.measured_j - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# The facade.
+# ---------------------------------------------------------------------------
+class EnergyModel:
+    """A trained Wattchmen session: table + device + prediction engine."""
+
+    def __init__(self, table: EnergyTable, system: Optional[str] = None,
+                 device: Optional[SimDevice] = None):
+        self.table = table
+        self.system = system or table.system
+        self._device = device
+        self.predictor = TablePredictor(table)
+        self.predictor.warm()      # long-lived session: precompute vectors
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def train(cls, system: str, *, store: Union[bool, TableStore] = False,
+              **train_kwargs) -> "EnergyModel":
+        """Train a fresh table now; ``store=True`` persists it."""
+        table = train_table(system, **train_kwargs)
+        if store:
+            (store if isinstance(store, TableStore)
+             else default_store()).put(table)
+        return cls(table, system=system)
+
+    @classmethod
+    def load(cls, path, system: Optional[str] = None) -> "EnergyModel":
+        """From a table file previously written by ``save``."""
+        return cls(EnergyTable.load(path), system=system)
+
+    @classmethod
+    def from_store(cls, system: str, store: Optional[TableStore] = None,
+                   train_if_missing: bool = True) -> "EnergyModel":
+        """Load the system's table from the persistent store.
+
+        On a store miss (or stale schema) the table is trained once and
+        written back, so the *next* process — or the next fleet node sharing
+        the store — skips training entirely.
+        """
+        store = store or default_store()
+        if train_if_missing:
+            table = store.get_or_train(system, train_table)
+        else:
+            table = store.get(system)
+            if table is None:
+                raise KeyError(
+                    f"no stored table for {system!r} under {store.root}")
+        return cls(table, system=system)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path) -> None:
+        self.table.save(path)
+
+    def to_store(self, store: Optional[TableStore] = None):
+        """Persist this model's table; returns the written path."""
+        return (store or default_store()).put(self.table)
+
+    # -- device -------------------------------------------------------------
+    @property
+    def device(self) -> SimDevice:
+        if self._device is None:
+            self._device = get_device(self.system)
+        return self._device
+
+    @property
+    def isa_gen(self) -> int:
+        return self.table.isa_gen
+
+    # -- profiling ----------------------------------------------------------
+    def profile(self, fn: Callable, *args,
+                axis_sizes: Optional[Mapping[str, int]] = None,
+                name: Optional[str] = None, **kwargs) -> Profile:
+        """Trace a JAX callable and count its per-iteration work."""
+        src = JaxprSource(fn, args, kwargs, axis_sizes=axis_sizes)
+        return Profile(name or getattr(fn, "__name__", "fn"),
+                       src.op_counts(self.isa_gen))
+
+    def profile_hlo(self, text: str, name: str = "hlo") -> Profile:
+        """Count work from optimized HLO text (compiled artifact path)."""
+        return Profile(name, HloSource(text).op_counts(self.isa_gen))
+
+    def profile_counts(self, counts: Union[OpCounts, Mapping[str, float]],
+                       name: str = "counts") -> Profile:
+        """Wrap raw profiler counts (``OpCounts`` or class->units map)."""
+        return Profile(name, CountsSource(counts).op_counts(self.isa_gen))
+
+    def _resolve(self, source: Union[ProfileSource, OpCounts]) -> OpCounts:
+        if isinstance(source, OpCounts):
+            return source
+        if isinstance(source, ProfileSource):
+            return source.op_counts(self.isa_gen)
+        if callable(source):
+            raise TypeError(
+                "got a bare callable; profile it first: "
+                "model.predict(model.profile(fn, *args), ...)")
+        raise TypeError(f"not a ProfileSource or OpCounts: {source!r}")
+
+    # -- prediction ---------------------------------------------------------
+    def predict(self, source: Union[ProfileSource, OpCounts],
+                duration_s: float,
+                counters: Optional[Mapping[str, float]] = None,
+                mode: str = "pred") -> Prediction:
+        """Energy prediction + attribution for one profiled run."""
+        return self.predictor.predict(self._resolve(source), duration_s,
+                                      counters=counters, mode=mode)
+
+    def predict_many(self, jobs: Iterable[Union[PredictJob, tuple]],
+                     mode: str = "pred") -> List[Prediction]:
+        """Batched prediction over many workloads.
+
+        Accepts ``PredictJob``s or ``(source, duration_s[, counters])``
+        tuples.  All jobs share this model's precomputed class->energy
+        vectors, so per-job cost is a dict hit per class rather than a
+        direct->scaled->bucket table walk — the fleet-scale path.
+        """
+        out: List[Prediction] = []
+        for job in jobs:
+            if not isinstance(job, PredictJob):
+                job = PredictJob(*job)
+            out.append(self.predictor.predict(
+                self._resolve(job.source), job.duration_s,
+                counters=job.counters, mode=job.mode or mode))
+        return out
+
+    def attribute(self, source: Union[ProfileSource, OpCounts, Callable],
+                  *args, duration_s: Optional[float] = None,
+                  counters: Optional[Mapping[str, float]] = None,
+                  target_seconds: float = 30.0, **kwargs) -> Prediction:
+        """Per-class/per-bucket energy breakdown (§5.3 case-study verb).
+
+        With ``duration_s`` this is a pure prediction over the source; with
+        a callable (or no duration) the workload is first run on the device
+        so the breakdown reflects measured duration and counters.
+        """
+        if callable(source) and not isinstance(source, ProfileSource):
+            source = self.profile(source, *args, **kwargs)
+        if duration_s is not None:
+            return self.predict(source, duration_s, counters=counters)
+        counts = self._resolve(source)
+        rec = self.measure(counts, target_seconds=target_seconds,
+                           name=getattr(source, "name", "workload"))
+        return self.predict(counts.scaled(rec.iters), rec.duration_s,
+                            counters=counters if counters is not None
+                            else rec.counters)
+
+    # -- measurement (ground truth) ------------------------------------------
+    def measure(self, source: Union[ProfileSource, OpCounts, Callable],
+                *args, target_seconds: float = 30.0,
+                iters: Optional[int] = None, name: Optional[str] = None,
+                **kwargs) -> RunRecord:
+        """Run the workload on the device; NVML-style telemetry back."""
+        if callable(source) and not isinstance(source, ProfileSource):
+            source = self.profile(source, *args, name=name, **kwargs)
+        counts = self._resolve(source)
+        dev = self.device
+        if iters is None:
+            iters = dev.iters_for_duration(counts, target_seconds)
+        run_name = name or getattr(source, "name", "workload")
+        return dev.run(Program(run_name, counts, iters=iters))
+
+    def compare(self, source: Union[ProfileSource, OpCounts, Callable],
+                *args, target_seconds: float = 30.0,
+                iters: Optional[int] = None, mode: str = "pred",
+                name: Optional[str] = None, **kwargs) -> Comparison:
+        """Measure ground truth and predict from the same profile."""
+        if callable(source) and not isinstance(source, ProfileSource):
+            source = self.profile(source, *args, name=name, **kwargs)
+        counts = self._resolve(source)
+        rec = self.measure(counts, target_seconds=target_seconds,
+                           iters=iters, name=name or
+                           getattr(source, "name", "workload"))
+        pred = self.predict(counts.scaled(rec.iters), rec.duration_s,
+                            counters=rec.counters, mode=mode)
+        return Comparison(record=rec, prediction=pred)
+
+    # -- streaming / evaluation ----------------------------------------------
+    def monitor(self, **kwargs):
+        """A fleet ``EnergyMonitor`` bound to this model's predictor."""
+        from repro.core.fleet import EnergyMonitor
+        return EnergyMonitor(self, **kwargs)
+
+    def evaluate(self, **kwargs):
+        """Full workload-suite evaluation (paper Figs. 6-9 pipeline)."""
+        from repro.core.evaluate import evaluate_system
+        return evaluate_system(self.system, model=self, **kwargs)
+
+    def __repr__(self) -> str:
+        return (f"EnergyModel(system={self.system!r}, "
+                f"classes={len(self.table.direct)}, "
+                f"p_const={self.table.p_const:.1f}W, "
+                f"p_static={self.table.p_static:.1f}W)")

@@ -1,6 +1,13 @@
 """Wattchmen core: the paper's contribution as a composable library.
 
+These modules are the *engine*; the public surface is the ``EnergyModel``
+facade in ``repro.api`` (train/load/from_store + profile/predict/measure/
+compare/attribute/monitor).  Engine map:
+
 Training phase:  ``trainer.train_table(system)`` -> ``EnergyTable``
-Prediction:      ``predict.predict(table, counts, duration, counters)``
+Persistence:     ``store.TableStore`` (on-disk, schema-versioned JSON)
+Prediction:      ``predict.TablePredictor`` (amortized lookups) /
+                 ``predict.predict`` (one-shot)
 Profiler:        ``opcount.count_fn`` (jaxpr) + ``repro.hlo`` (compiled HLO)
+Streaming:       ``fleet.EnergyMonitor``
 """

@@ -10,11 +10,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.api import EnergyModel, PredictJob
 from repro.core import baselines, predict as predict_mod
 from repro.core.table import EnergyTable
-from repro.core.trainer import cached_table
 from repro.hw.device import Program
-from repro.hw.systems import get_device
 from repro.workloads.suite import Workload, build_workloads
 
 
@@ -53,24 +52,39 @@ def evaluate_system(system: str,
                     table: Optional[EnergyTable] = None,
                     workloads: Optional[Sequence[Workload]] = None,
                     with_accelwattch: bool = True,
-                    with_guser: bool = True) -> EvalReport:
-    dev = get_device(system)
-    table = table or cached_table(system)
+                    with_guser: bool = True,
+                    model: Optional[EnergyModel] = None) -> EvalReport:
+    # an explicit table always wins (the transfer/hybrid-table pattern),
+    # even when a model is also supplied
+    if table is not None and (model is None or model.table is not table):
+        model = EnergyModel(table, system=system)
+    elif model is None:
+        model = EnergyModel.from_store(system)
+    dev = model.device
     wls = list(workloads) if workloads is not None else build_workloads(
         isa_gen=dev.chip.isa_gen)
     aw = baselines.train_accelwattch() if with_accelwattch else None
     gu = baselines.train_guser(system) if with_guser else None
 
-    results = []
+    # Ground truth for every workload, then one batched prediction pass per
+    # Wattchmen mode — the table lookups amortize across the whole suite.
+    recs = []
     for wl in wls:
         iters = dev.iters_for_duration(wl.counts, wl.target_seconds)
         rec = dev.run(Program(wl.name, wl.counts, iters=iters))
-        total = wl.counts.scaled(rec.iters)
+        recs.append((wl, rec, wl.counts.scaled(rec.iters)))
+    p_directs = model.predict_many(
+        [PredictJob(total, rec.duration_s, counters=rec.counters,
+                    mode="direct", name=wl.name)
+         for wl, rec, total in recs])
+    p_preds = model.predict_many(
+        [PredictJob(total, rec.duration_s, counters=rec.counters,
+                    mode="pred", name=wl.name)
+         for wl, rec, total in recs])
+
+    results = []
+    for (wl, rec, total), p_direct, p_pred in zip(recs, p_directs, p_preds):
         preds: Dict[str, float] = {}
-        p_direct = predict_mod.predict(table, total, rec.duration_s,
-                                       counters=rec.counters, mode="direct")
-        p_pred = predict_mod.predict(table, total, rec.duration_s,
-                                     counters=rec.counters, mode="pred")
         preds["wattchmen_direct"] = p_direct.total_j
         preds["wattchmen_pred"] = p_pred.total_j
         if aw is not None:

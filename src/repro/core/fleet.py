@@ -13,7 +13,7 @@ from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional
 
 from repro.core.opcount import OpCounts
-from repro.core.predict import Prediction, predict
+from repro.core.predict import Prediction, TablePredictor
 from repro.core.table import EnergyTable
 
 
@@ -34,11 +34,24 @@ class StepRecord:
 
 
 class EnergyMonitor:
-    """Streaming per-step energy attribution with spike detection."""
+    """Streaming per-step energy attribution with spike detection.
 
-    def __init__(self, table: EnergyTable, window: int = 16,
+    ``table`` accepts an ``EnergyTable``, a ``TablePredictor``, or the
+    ``repro.api.EnergyModel`` facade — in the latter cases the monitor
+    shares the caller's precomputed class->energy vectors, so per-step
+    prediction on the fleet hot path never re-walks the table.
+    """
+
+    def __init__(self, table, window: int = 16,
                  spike_ratio: float = 1.75, min_share: float = 0.04):
-        self.table = table
+        predictor = getattr(table, "predictor", None)   # EnergyModel
+        if predictor is None and isinstance(table, TablePredictor):
+            predictor = table
+        if predictor is None:
+            predictor = TablePredictor(table)
+            predictor.warm()       # streaming hot path
+        self._predictor = predictor
+        self.table: EnergyTable = predictor.table
         self.window = window
         self.spike_ratio = spike_ratio
         self.min_share = min_share
@@ -50,7 +63,7 @@ class EnergyMonitor:
     def observe(self, step: int, counts: OpCounts, duration_s: float,
                 counters: Optional[dict] = None,
                 work_units: float = 1.0) -> StepRecord:
-        pred = predict(self.table, counts, duration_s, counters=counters)
+        pred = self._predictor.predict(counts, duration_s, counters=counters)
         rec = StepRecord(step=step, prediction=pred,
                          joules_per_unit_work=pred.total_j / max(work_units, 1e-12))
         self.records.append(rec)

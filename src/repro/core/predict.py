@@ -55,6 +55,97 @@ _COUNTER_TO_CLASS = {
     "vmem_read_bytes": "vmem.read",
     "vmem_write_bytes": "vmem.write",
 }
+_COUNTER_CLASSES = frozenset(_COUNTER_TO_CLASS.values())
+
+
+class TablePredictor:
+    """Prediction engine bound to one table, amortizing lookups across calls.
+
+    ``EnergyTable.lookup`` walks direct -> scaled -> bucket per class per
+    call; at fleet scale (``predict_many`` over thousands of workloads, the
+    streaming ``EnergyMonitor``) the same classes recur on every call, so the
+    predictor resolves each class once into ``(direct-mode J, pred-mode J,
+    provenance)`` and every later prediction is a dict hit.
+
+    The cache snapshots the table: mutate the bound ``EnergyTable`` after
+    construction (e.g. re-running ``coverage.extend_table``) and call
+    ``invalidate()``, or predictions keep using the old energies.
+    """
+
+    def __init__(self, table: EnergyTable):
+        self.table = table
+        # cls -> (e_direct, e_pred, how_pred).  Direct-mode energy is
+        # derivable from the pred-mode walk: a direct hit is the same value,
+        # anything else is a direct-mode miss (0 J).
+        self._cache: Dict[str, tuple] = {}
+
+    def _entry(self, cls: str) -> tuple:
+        ent = self._cache.get(cls)
+        if ent is None:
+            e_pred, how_pred = self.table.lookup(cls, mode="pred")
+            e_direct = e_pred if how_pred == DIRECT else 0.0
+            ent = (e_direct, e_pred, how_pred)
+            self._cache[cls] = ent
+        return ent
+
+    def warm(self) -> None:
+        """Precompute the class->energy vector for every table-known class.
+
+        Worth it on long-lived predictors (the facade, the fleet monitor);
+        one-shot callers stay lazy and only resolve the classes they see.
+        """
+        for cls in (set(self.table.direct) | set(self.table.scaled)
+                    | _COUNTER_CLASSES):
+            self._entry(cls)
+
+    def invalidate(self) -> None:
+        """Drop cached entries after a mutation of the bound table."""
+        self._cache.clear()
+
+    def predict(self, counts: OpCounts, duration_s: float,
+                counters: Optional[Mapping[str, float]] = None,
+                mode: str = "pred") -> Prediction:
+        table = self.table
+        entry = self._entry
+        direct_mode = mode == "direct"
+        const_j = table.p_const * duration_s
+        static_j = table.p_static * duration_s
+        by_class: Dict[str, float] = defaultdict(float)
+        direct_j = 0.0   # coverage numerator (pred-mode energy of direct hits)
+        cover_j = 0.0    # coverage denominator (pred-mode energy of all work)
+        dyn_j = 0.0
+
+        def _account(cls: str, n: float) -> None:
+            nonlocal direct_j, cover_j, dyn_j
+            e_direct, e_pred, how_pred = entry(cls)
+            v = n * (e_direct if direct_mode else e_pred)
+            by_class[cls] += v
+            dyn_j += v
+            cover_j += n * e_pred
+            if how_pred == DIRECT:
+                direct_j += n * e_pred
+
+        for cls, units in counts.units.items():
+            if cls in _COUNTER_CLASSES:
+                continue
+            _account(cls, units)
+
+        mem = (dict(counters) if counters is not None
+               else traffic_from_counts(counts))
+        for key, cls in _COUNTER_TO_CLASS.items():
+            _account(cls, mem.get(key, 0.0))
+
+        by_bucket: Dict[str, float] = defaultdict(float)
+        for cls, v in by_class.items():
+            by_bucket[isa.bucket_of(cls) or "unknown"] += v
+        by_bucket["static"] = static_j
+        by_bucket["const"] = const_j
+
+        coverage = direct_j / cover_j if cover_j > 0 else 1.0
+        return Prediction(total_j=const_j + static_j + dyn_j,
+                          const_j=const_j, static_j=static_j, dynamic_j=dyn_j,
+                          by_class=dict(by_class), by_bucket=dict(by_bucket),
+                          coverage=coverage, duration_s=duration_s)
 
 
 def predict(table: EnergyTable, counts: OpCounts, duration_s: float,
@@ -65,45 +156,13 @@ def predict(table: EnergyTable, counts: OpCounts, duration_s: float,
     ``mode``: "direct" = Wattchmen-Direct, "pred" = Wattchmen-Pred (§3.4).
     ``counters``: profiled memory counters; fall back to the static traffic
     model when absent (e.g. predicting from a dry-run compile).
+
+    One-shot convenience over ``TablePredictor``; hold a ``TablePredictor``
+    (or the ``repro.api.EnergyModel`` facade, which owns one) when predicting
+    for many workloads against the same table.
     """
-    const_j = table.p_const * duration_s
-    static_j = table.p_static * duration_s
-    by_class: Dict[str, float] = defaultdict(float)
-    direct_j = 0.0     # coverage numerator (pred-mode energy of direct hits)
-    cover_j = 0.0      # coverage denominator (pred-mode energy of all work)
-    dyn_j = 0.0
-
-    def _account(cls: str, n: float) -> None:
-        nonlocal direct_j, cover_j, dyn_j
-        e, how = table.lookup(cls, mode=mode)
-        v = n * e
-        by_class[cls] += v
-        dyn_j += v
-        e_pred, how_pred = table.lookup(cls, mode="pred")
-        cover_j += n * e_pred
-        if how_pred == DIRECT:
-            direct_j += n * e_pred
-
-    for cls, units in counts.units.items():
-        if cls in _COUNTER_TO_CLASS.values():
-            continue
-        _account(cls, units)
-
-    mem = dict(counters) if counters is not None else traffic_from_counts(counts)
-    for key, cls in _COUNTER_TO_CLASS.items():
-        _account(cls, mem.get(key, 0.0))
-
-    by_bucket: Dict[str, float] = defaultdict(float)
-    for cls, v in by_class.items():
-        by_bucket[isa.bucket_of(cls) or "unknown"] += v
-    by_bucket["static"] = static_j
-    by_bucket["const"] = const_j
-
-    coverage = direct_j / cover_j if cover_j > 0 else 1.0
-    return Prediction(total_j=const_j + static_j + dyn_j,
-                      const_j=const_j, static_j=static_j, dynamic_j=dyn_j,
-                      by_class=dict(by_class), by_bucket=dict(by_bucket),
-                      coverage=coverage, duration_s=duration_s)
+    return TablePredictor(table).predict(counts, duration_s,
+                                         counters=counters, mode=mode)
 
 
 def mape(pairs) -> float:

@@ -1,0 +1,144 @@
+"""Persistent on-disk store for trained ``EnergyTable`` artifacts.
+
+The paper's table is the reusable artifact: trained once per system
+(~76 steady-state microbenchmarks, minutes of device time), then applied to
+any workload.  ``trainer.cached_table``'s ``lru_cache`` only survived one
+process; the store keeps JSON tables on disk — keyed by system, hardware
+ISA generation and the serialized-schema version — so a table trained on a
+profiling host can be shipped to (or mounted by) every node of a serving
+fleet and loaded in milliseconds instead of retrained.
+
+Layout: one JSON file per key under the store root, e.g.
+
+    sim-v5e-air__gen0__v1.json
+
+The root defaults to ``$REPRO_TABLE_STORE`` or ``~/.cache/repro/tables``.
+Schema validation happens in ``EnergyTable.load``; files with a stale or
+alien schema are reported (and treated as misses by ``get``), never
+silently deserialized.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import tempfile
+import warnings
+from typing import Callable, Dict, List, Optional
+
+from repro.core.table import SCHEMA_VERSION, EnergyTable, TableSchemaError
+
+_ENV_ROOT = "REPRO_TABLE_STORE"
+_KEY_RE = re.compile(r"^(?P<system>.+)__gen(?P<gen>\d+)__v(?P<ver>\d+)$")
+
+
+def default_root() -> pathlib.Path:
+    env = os.environ.get(_ENV_ROOT)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "tables"
+
+
+def _system_isa_gen(system: str) -> Optional[int]:
+    """ISA generation for a registered system (None when unknown)."""
+    from repro.hw.systems import SYSTEMS
+    cfg = SYSTEMS.get(system)
+    return None if cfg is None else int(cfg.chip.isa_gen)
+
+
+class TableStore:
+    """Directory of trained energy tables, keyed system+isa_gen+schema."""
+
+    def __init__(self, root: Optional[os.PathLike] = None):
+        self.root = pathlib.Path(root) if root is not None else default_root()
+
+    # -- keys ---------------------------------------------------------------
+    def key_for(self, system: str, isa_gen: Optional[int] = None) -> str:
+        if isa_gen is None:
+            isa_gen = _system_isa_gen(system)
+        if isa_gen is None:
+            raise KeyError(
+                f"unknown system {system!r}: pass isa_gen= explicitly for "
+                f"systems outside repro.hw.systems.SYSTEMS")
+        return f"{system}__gen{int(isa_gen)}__v{SCHEMA_VERSION}"
+
+    def path_for(self, system: str, isa_gen: Optional[int] = None) -> pathlib.Path:
+        return self.root / (self.key_for(system, isa_gen) + ".json")
+
+    # -- read ---------------------------------------------------------------
+    def get(self, system: str, isa_gen: Optional[int] = None) -> Optional[EnergyTable]:
+        """Load a table, or None on miss / stale schema (warned, not raised)."""
+        path = self.path_for(system, isa_gen)
+        if not path.exists():
+            return None
+        try:
+            return EnergyTable.load(path)
+        except (TableSchemaError, ValueError) as e:
+            # a miss triggers a minutes-long retrain — never do that silently
+            warnings.warn(f"ignoring unreadable energy table {path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            return None
+
+    def get_or_train(self, system: str,
+                     train: Optional[Callable[[str], EnergyTable]] = None,
+                     ) -> EnergyTable:
+        """Store-through training: load on hit, train + persist on miss."""
+        table = self.get(system)
+        if table is not None:
+            return table
+        if train is None:
+            from repro.core.trainer import train_table
+            train = train_table
+        table = train(system)
+        self.put(table)
+        return table
+
+    # -- write --------------------------------------------------------------
+    def put(self, table: EnergyTable) -> pathlib.Path:
+        path = self.path_for(table.system, table.isa_gen)
+        self.root.mkdir(parents=True, exist_ok=True)
+        # atomic publish: a fleet node reading concurrently never sees a
+        # half-written table
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        os.close(fd)
+        try:
+            table.save(tmp)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    def evict(self, system: str, isa_gen: Optional[int] = None) -> bool:
+        path = self.path_for(system, isa_gen)
+        if path.exists():
+            path.unlink()
+            return True
+        return False
+
+    # -- inspection ---------------------------------------------------------
+    def keys(self) -> List[str]:
+        if not self.root.is_dir():
+            return []
+        return sorted(p.stem for p in self.root.glob("*.json")
+                      if _KEY_RE.match(p.stem))
+
+    def entries(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for key in self.keys():
+            m = _KEY_RE.match(key)
+            assert m is not None
+            out[key] = {"isa_gen": int(m.group("gen")),
+                        "schema": int(m.group("ver"))}
+        return out
+
+
+_DEFAULT_STORE: Optional[TableStore] = None
+
+
+def default_store() -> TableStore:
+    """Process-wide store rooted at the default (env-overridable) location."""
+    global _DEFAULT_STORE
+    if _DEFAULT_STORE is None or _DEFAULT_STORE.root != default_root():
+        _DEFAULT_STORE = TableStore()
+    return _DEFAULT_STORE

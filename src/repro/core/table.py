@@ -13,6 +13,15 @@ SCALED = "scaled"
 BUCKET = "bucket"
 MISS = "miss"
 
+# Serialized-table schema.  Bump whenever the on-disk shape of the table (its
+# fields or their meaning) changes; the ``TableStore`` keys files by this
+# version so stale artifacts are never silently deserialized.
+SCHEMA_VERSION = 1
+
+
+class TableSchemaError(ValueError):
+    """A serialized table does not match the current schema."""
+
 
 @dataclasses.dataclass
 class EnergyTable:
@@ -47,12 +56,38 @@ class EnergyTable:
         return 0.0, MISS
 
     # ------------------------------------------------------------------
+    @property
+    def isa_gen(self) -> int:
+        return int(self.meta.get("isa_gen", 0))
+
     def save(self, path) -> None:
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(dataclasses.asdict(self), indent=1))
+        d = dataclasses.asdict(self)
+        d["schema"] = SCHEMA_VERSION
+        p.write_text(json.dumps(d, indent=1))
 
     @classmethod
     def load(cls, path) -> "EnergyTable":
         d = json.loads(pathlib.Path(path).read_text())
+        if not isinstance(d, dict):
+            raise TableSchemaError(f"{path}: expected a JSON object, "
+                                   f"got {type(d).__name__}")
+        version = d.pop("schema", None)
+        if version != SCHEMA_VERSION:
+            raise TableSchemaError(
+                f"{path}: schema version {version!r} does not match "
+                f"current version {SCHEMA_VERSION} — retrain or migrate "
+                f"the table")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise TableSchemaError(
+                f"{path}: unknown table fields {unknown} (known: "
+                f"{sorted(known)})")
+        missing = sorted(k for k in ("system", "p_const", "p_static",
+                                     "direct") if k not in d)
+        if missing:
+            raise TableSchemaError(f"{path}: missing required fields "
+                                   f"{missing}")
         return cls(**d)

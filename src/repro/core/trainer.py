@@ -7,6 +7,7 @@ system, and extends coverage — producing the ``EnergyTable`` artifact.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, Optional
 
 import numpy as np
@@ -78,4 +79,15 @@ def train_table(system: str, duration_s: float = BENCH_TARGET_SECONDS,
 
 @functools.lru_cache(maxsize=None)
 def cached_table(system: str) -> EnergyTable:
-    return train_table(system)
+    """Deprecated: use ``repro.api.EnergyModel.from_store`` instead.
+
+    Kept as a shim for existing imports.  Now write-through backed by the
+    on-disk ``TableStore`` (plus this in-process memo), so a trained table
+    survives across processes instead of being re-trained per process.
+    """
+    warnings.warn(
+        "repro.core.trainer.cached_table is deprecated; use "
+        "repro.api.EnergyModel.from_store(system) (persistent TableStore)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.store import default_store
+    return default_store().get_or_train(system, train_table)

@@ -1,7 +1,9 @@
 from repro.hlo.parse import HloModule, parse_hlo_text, shape_bytes
 from repro.hlo.collectives import CollectiveStats, collective_bytes
+from repro.hlo.opcount import count_hlo_module, count_hlo_text
 from repro.hlo.roofline import RooflineTerms, roofline_from_compiled
 
 __all__ = ["HloModule", "parse_hlo_text", "shape_bytes",
            "CollectiveStats", "collective_bytes",
+           "count_hlo_module", "count_hlo_text",
            "RooflineTerms", "roofline_from_compiled"]

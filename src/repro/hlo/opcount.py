@@ -1,0 +1,395 @@
+"""Op counting over compiled (optimized) HLO text — the post-XLA profiler.
+
+``repro.core.opcount`` counts work on the *jaxpr* (pre-compilation); this
+module is the complementary ``ProfileSource``: given the optimized HLO text
+of a compiled executable (``compiled.as_text()``), it produces the same
+``OpCounts`` currency.  That matters for programs only available as a
+compiled artifact (a serving binary, a dry-run dump from another host) where
+no Python callable exists to retrace.
+
+The walk mirrors ``hlo.collectives``: start at the entry computation, inline
+``call``/``fusion`` bodies, multiply ``while`` bodies by their best-effort
+trip counts, and price ``conditional`` at its most expensive branch.
+Instructions inside a ``fusion`` contribute *fused* traffic (VMEM/VREG
+resident); top-level operands/results are fusion-boundary traffic — the same
+boundary/fused split the jaxpr counter derives from its dataflow pass.
+Dot MACs are recovered from the operand shapes + ``lhs_contracting_dims``;
+where an operand's shape cannot be resolved from the text, the accounting
+degrades gracefully (result-shape-only estimate) rather than failing.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional
+
+from repro.core import isa
+from repro.core.opcount import OpCounts
+from repro.hlo.parse import (HloComputation, HloInstr, HloModule,
+                             _SHAPE_RE, parse_hlo_text, shape_bytes)
+
+# HLO dtype token -> the repo's grouped dtype tag.
+_DTYPE_TAG = {
+    "f64": "f32", "f32": "f32", "f16": "bf16", "bf16": "bf16",
+    "f8e4m3fn": "fp8", "f8e5m2": "fp8", "f8e4m3": "fp8",
+    "s64": "int", "s32": "int", "s16": "int", "s8": "int",
+    "u64": "int", "u32": "int", "u16": "int", "u8": "int",
+    "s4": "int4", "u4": "int4", "pred": "int",
+}
+
+# HLO opcode -> jax-primitive-style head (folded by ``isa.group_class``).
+_UNARY = {
+    "exponential": "exp", "exponential-minus-one": "exp", "log": "log",
+    "log-plus-one": "log", "tanh": "tanh", "logistic": "logistic",
+    "rsqrt": "rsqrt", "sqrt": "sqrt", "cbrt": "rsqrt", "erf": "erf",
+    "sine": "sin", "cosine": "cos", "tan": "sin", "negate": "sub",
+    "abs": "max", "sign": "cmp", "floor": "max", "ceiling": "max",
+    "round-nearest-afz": "max", "round-nearest-even": "max", "not": "xor",
+    "is-finite": "cmp", "population-count": "add", "count-leading-zeros": "add",
+}
+_BINARY = {
+    "add": "add", "multiply": "mul", "subtract": "sub", "divide": "div",
+    "maximum": "max", "minimum": "min", "power": "pow", "remainder": "div",
+    "and": "and", "or": "or", "xor": "xor", "atan2": "pow",
+    "shift-left": "shift", "shift-right-logical": "shift",
+    "shift-right-arithmetic": "shift",
+}
+_MOVE = {
+    "broadcast": "bcast", "transpose": "transpose", "concatenate": "concat",
+    "slice": "slice", "dynamic-slice": "slice", "reverse": "slice",
+    "iota": "iota", "pad": "pad",
+}
+# Structural opcodes with no work units of their own.
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "reshape",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+    "get-dimension-size", "domain", "token",
+}
+# Collectives: (class, wire-bytes fn of (result_bytes, group_size)).
+_COLLECTIVES = {
+    "all-reduce": ("ici.all_reduce", lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
+    "all-reduce-start": ("ici.all_reduce",
+                         lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
+    "all-gather": ("ici.all_gather", lambda b, n: b * (n - 1) / max(n, 1)),
+    "all-gather-start": ("ici.all_gather",
+                         lambda b, n: b * (n - 1) / max(n, 1)),
+    "reduce-scatter": ("ici.reduce_scatter", lambda b, n: b * (n - 1)),
+    "all-to-all": ("ici.all_to_all", lambda b, n: b * (n - 1) / max(n, 1)),
+    "collective-permute": ("ici.permute", lambda b, n: b),
+    "collective-permute-start": ("ici.permute", lambda b, n: b),
+}
+_DONE = {"all-gather-done", "all-reduce-done", "collective-permute-done",
+         "async-done"}
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DIMS_ATTR_RE = re.compile(r"(\w+_contracting_dims)=\{([0-9,]*)\}")
+
+
+def _shape_elems(type_str: str) -> float:
+    total = 0.0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dtype_tag(type_str: str) -> str:
+    m = _SHAPE_RE.search(type_str)
+    return _DTYPE_TAG.get(m.group(1), "f32") if m else "f32"
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _operands(ins: HloInstr):
+    """Operand names of an instruction (best-effort from the raw text)."""
+    _, _, rest = ins.raw.partition(ins.opcode + "(")
+    args = rest.split(")", 1)[0]
+    return re.findall(r"%?([\w.\-]+)", args)
+
+
+def _group_size(raw: str) -> int:
+    m = _GROUPS_V2_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(raw)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip()]
+        if members:
+            return len(members)
+    # absent attribute, or XLA's `replica_groups={}` (= all replicas in one
+    # group, count not recoverable from the text): conservative 2-chip group
+    # so the collective's wire bytes are not dropped
+    return 2
+
+
+def _trip_count(module: HloModule, cond_name: Optional[str]) -> float:
+    comp = module.get(cond_name) if cond_name else None
+    if comp is None:
+        return 1.0
+    consts = []
+    for ins in comp.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.raw)
+            if m:
+                consts.append(int(m.group(1)))
+    return float(max(consts)) if consts else 1.0
+
+
+class _Walker:
+    def __init__(self, module: HloModule, isa_gen: int):
+        self.module = module
+        self.isa_gen = isa_gen
+        self.defs: Dict[str, HloInstr] = {}
+        for comp in module.computations.values():
+            for ins in comp.instrs:
+                self.defs.setdefault(ins.name, ins)
+
+    def _operand_type(self, name: str) -> Optional[str]:
+        ins = self.defs.get(name)
+        return ins.type_str if ins is not None else None
+
+    def _dot(self, ins: HloInstr, out: OpCounts, mult: float) -> None:
+        out_elems = _shape_elems(ins.type_str)
+        ops = _operands(ins)
+        k = batch = 1.0
+        m = n = 128.0          # unresolvable -> assume MXU-aligned
+        lhs_type = self._operand_type(ops[0]) if ops else None
+        rhs_type = self._operand_type(ops[1]) if len(ops) > 1 else None
+        dims_attrs = dict(_DIMS_ATTR_RE.findall(ins.raw))
+
+        def _attr_dims(key: str):
+            raw = dims_attrs.get(key)
+            if raw is None:
+                m_ = re.search(key + r"=\{([0-9,]*)\}", ins.raw)
+                raw = m_.group(1) if m_ else None
+            return ([int(d) for d in raw.split(",") if d]
+                    if raw is not None else None)
+
+        lhs_b = _attr_dims("lhs_batch_dims") or []
+        rhs_b = _attr_dims("rhs_batch_dims") or []
+        lhs_c = _attr_dims("lhs_contracting_dims")
+        rhs_c = _attr_dims("rhs_contracting_dims") or []
+        lhs_dims = _shape_dims(lhs_type) if lhs_type else None
+        rhs_dims = _shape_dims(rhs_type) if rhs_type else None
+        if lhs_dims is not None and lhs_c is not None \
+                and all(d < len(lhs_dims) for d in lhs_c):
+            k = float(math.prod(lhs_dims[d] for d in lhs_c) or 1)
+            if all(d < len(lhs_dims) for d in lhs_b):
+                batch = float(math.prod(lhs_dims[d] for d in lhs_b) or 1)
+                m = float(math.prod(
+                    s for i, s in enumerate(lhs_dims)
+                    if i not in lhs_c and i not in lhs_b) or 1)
+        if rhs_dims is not None and all(d < len(rhs_dims)
+                                        for d in rhs_c + rhs_b):
+            n = float(math.prod(
+                s for i, s in enumerate(rhs_dims)
+                if i not in rhs_c and i not in rhs_b) or 1)
+        min_dim = min(m, n, k)
+        macs = out_elems * k
+        dt = _dtype_tag(ins.type_str)
+        head = "dot"
+        if self.isa_gen >= 2 and batch > 1:
+            head = "dot_group"
+        elif self.isa_gen >= 1 and min_dim < 128:
+            head = "dot_small"
+        out.add(isa.group_class(f"{head}.{dt}"), mult * macs)
+        out.flops += 2.0 * macs * mult
+        out.mxu_macs_total += macs * mult
+        if m % 128 == 0 and n % 128 == 0 and k % 128 == 0:
+            out.mxu_macs_aligned += macs * mult
+
+    def _instr_units(self, ins: HloInstr, out: OpCounts, mult: float) -> None:
+        op = ins.opcode
+        elems = _shape_elems(ins.type_str)
+        dt = _dtype_tag(ins.type_str)
+        if op == "dot":
+            self._dot(ins, out, mult)
+            return
+        if op == "convolution":
+            # result elems x (filter spatial x in-channels) unavailable
+            # without layout metadata; approximate with result-elems MACs.
+            out.add(isa.group_class(f"conv.{dt}"), mult * elems)
+            out.flops += 2.0 * elems * mult
+            out.mxu_macs_total += elems * mult
+            return
+        if op in _UNARY or op in _BINARY:
+            head = _UNARY.get(op) or _BINARY[op]
+            out.add(isa.group_class(f"{head}.{dt}"), mult * elems)
+            out.flops += mult * elems
+            return
+        if op == "compare":
+            out.add(isa.group_class(f"cmp.{dt}"), mult * elems)
+            return
+        if op == "select":
+            out.add(isa.group_class(f"select.{dt}"), mult * elems)
+            return
+        if op == "clamp":
+            out.add(isa.group_class(f"max.{dt}"), mult * 2 * elems)
+            return
+        if op == "convert":
+            srcs = _operands(ins)
+            src_t = self._operand_type(srcs[0]) if srcs else None
+            src = _dtype_tag(src_t) if src_t else "f32"
+            if src != dt:
+                if src in ("f32", "bf16", "fp8") and dt in ("f32", "bf16",
+                                                            "fp8"):
+                    cls = f"convert.{src}.{dt}"
+                elif src in ("int", "int4"):
+                    cls = "convert.int.float"
+                else:
+                    cls = "convert.float.int"
+                out.add(isa.group_class(cls), mult * elems)
+            return
+        if op in _MOVE:
+            out.add(_MOVE[op], mult * elems)
+            return
+        if op == "dynamic-update-slice":
+            ops = _operands(ins)
+            upd_t = self._operand_type(ops[1]) if len(ops) > 1 else None
+            out.add("dus", mult * (_shape_elems(upd_t) if upd_t else elems))
+            return
+        if op == "gather":
+            out.add("gather", mult * elems)
+            return
+        if op.startswith("scatter"):
+            cls = "scatter_dma" if self.isa_gen >= 1 else "scatter"
+            out.add(cls, mult * elems)
+            return
+        if op in ("reduce", "reduce-window"):
+            ops = _operands(ins)
+            in_t = self._operand_type(ops[0]) if ops else None
+            n_in = _shape_elems(in_t) if in_t else elems
+            # the to_apply computation tells add- from max-style reductions
+            reducer = self.module.get(ins.attr("to_apply") or "")
+            is_max = reducer is not None and any(
+                i.opcode in ("maximum", "minimum") for i in reducer.instrs)
+            if is_max:
+                out.add("reduce.max.f32", mult * n_in)
+            else:
+                out.add("reduce.add.f32", mult * n_in)
+                out.flops += mult * n_in
+            return
+        if op == "sort":
+            ops = _operands(ins)
+            in_t = self._operand_type(ops[0]) if ops else None
+            n_in = _shape_elems(in_t) if in_t else elems
+            dims = _shape_dims(in_t) if in_t else None
+            last = float(dims[-1]) if dims else 2.0
+            out.add("sort", mult * n_in * max(1.0, math.log2(max(last, 2.0))))
+            return
+        if op in ("rng", "rng-bit-generator", "rng-get-and-update-state"):
+            out.add("rng.bits", mult * max(elems, 1.0))
+            return
+        if op == "custom-call":
+            # opaque kernel: emit a raw class for the bucketing machinery
+            out.add(isa.group_class(f"custom.{dt}"), mult * max(elems, 1.0))
+            return
+        out.add(isa.group_class(f"{op.replace('-', '_')}.{dt}"),
+                mult * max(elems, 1.0))
+
+    def walk(self, comp: HloComputation, out: OpCounts, mult: float,
+             in_fusion: bool, depth: int = 0) -> None:
+        if depth > 32:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE or op in _DONE:
+                continue
+            if op == "while":
+                trips = _trip_count(self.module, ins.attr("condition"))
+                body = self.module.get(ins.attr("body") or "")
+                if body is not None:
+                    self.walk(body, out, mult * trips, in_fusion, depth + 1)
+                out.add("ctl.loop", mult * trips)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      ins.raw)
+                names = []
+                for grp, single in branches:
+                    names += ([s.strip().lstrip("%") for s in grp.split(",")]
+                              if grp else [single])
+                best: Optional[OpCounts] = None
+                for name in filter(None, names):
+                    sub = self.module.get(name)
+                    if sub is None:
+                        continue
+                    c = OpCounts()
+                    self.walk(sub, c, 1.0, in_fusion, depth + 1)
+                    if best is None or (c.flops + c.total_units()
+                                        > best.flops + best.total_units()):
+                        best = c
+                if best is not None:
+                    out.merge(best, mult)
+                out.add("ctl.cond", mult)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                callee = ins.attr("calls") or ins.attr("to_apply")
+                sub = self.module.get(callee) if callee else None
+                if sub is not None:
+                    self.walk(sub, out, mult,
+                              in_fusion or op == "fusion", depth + 1)
+                if not in_fusion:
+                    # the fusion/call root's operands+result cross HBM/VMEM
+                    self._boundary_io(ins, out, mult)
+                    out.dispatch_count += mult
+                continue
+            if op in _COLLECTIVES:
+                cls, wire = _COLLECTIVES[op]
+                n = _group_size(ins.raw)
+                if n > 1:
+                    out.add(cls, mult * wire(ins.result_bytes, n))
+                continue
+            self._instr_units(ins, out, mult)
+            out.exec_count += mult
+            if in_fusion:
+                b = ins.result_bytes
+                for o in _operands(ins):
+                    t = self._operand_type(o)
+                    if t is not None:
+                        b += shape_bytes(t)
+                out.fused_bytes += b * mult
+                out.naive_bytes += b * mult
+            else:
+                self._boundary_io(ins, out, mult)
+                out.dispatch_count += mult
+
+    def _boundary_io(self, ins: HloInstr, out: OpCounts, mult: float) -> None:
+        b_read = 0.0
+        for o in _operands(ins):
+            t = self._operand_type(o)
+            if t is not None:
+                b = shape_bytes(t)
+                b_read += b
+                out.max_buffer_bytes = max(out.max_buffer_bytes, b)
+        b_write = ins.result_bytes
+        out.max_buffer_bytes = max(out.max_buffer_bytes, b_write)
+        out.add_io(b_read, b_write, 0.0, mult)
+
+
+def count_hlo_module(module: HloModule, *, isa_gen: int = 0) -> OpCounts:
+    """Count dynamic work units over a parsed HLO module."""
+    out = OpCounts()
+    entry = module.get(module.entry) if module.entry else None
+    if entry is None and module.computations:
+        # fall back: largest computation is almost always the entry
+        entry = max(module.computations.values(), key=lambda c: len(c.instrs))
+    if entry is not None:
+        _Walker(module, isa_gen).walk(entry, out, 1.0, in_fusion=False)
+    return out
+
+
+def count_hlo_text(text: str, *, isa_gen: int = 0) -> OpCounts:
+    """Count dynamic work units in optimized HLO text (``as_text()``)."""
+    return count_hlo_module(parse_hlo_text(text), isa_gen=isa_gen)

@@ -16,9 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfgs
-from repro.core.fleet import EnergyMonitor
+from repro.api import EnergyModel
 from repro.core.opcount import count_fn
-from repro.core.trainer import cached_table
 from repro.models import model as model_mod
 from repro.serve.step import make_serve_step
 
@@ -44,7 +43,7 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
     if energy_system:
         counts = count_fn(make_serve_step(cfg), params, cache,
                           jnp.zeros((batch, 1), jnp.int32))
-        monitor = EnergyMonitor(cached_table(energy_system))
+        monitor = EnergyModel.from_store(energy_system).monitor()
         monitor._step_counts = counts
 
     rng = np.random.default_rng(seed)

@@ -21,10 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfgs
+from repro.api import EnergyModel
 from repro.configs.base import ShapeSpec
-from repro.core.fleet import EnergyMonitor
 from repro.core.opcount import count_fn
-from repro.core.trainer import cached_table
 from repro.data.pipeline import DataConfig, model_batch
 from repro.launch.mesh import make_mesh
 from repro.models import model as model_mod
@@ -67,7 +66,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         counts = count_fn(make_train_step(cfg, opt_cfg,
                                           microbatches=microbatches),
                           state, example)
-        monitor = EnergyMonitor(cached_table(energy_system))
+        monitor = EnergyModel.from_store(energy_system).monitor()
         monitor._step_counts = counts      # one profile per program
 
     straggler = StragglerMonitor()

@@ -1,0 +1,329 @@
+"""The unified `EnergyModel` facade: store round-trips, batched prediction,
+profile-source parity, and the deprecation shims."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (Comparison, CountsSource, EnergyModel, HloSource,
+                       JaxprSource, PredictJob, Profile)
+from repro.core import predict as predict_mod
+from repro.core.opcount import OpCounts, count_fn
+from repro.core.store import TableStore
+from repro.core.table import (SCHEMA_VERSION, EnergyTable, TableSchemaError)
+
+
+def _table(system="sim-v5e-air"):
+    return EnergyTable(
+        system=system, p_const=40.0, p_static=50.0,
+        direct={"add.f32": 1e-11, "mul.f32": 1.2e-11, "dot.bf16": 1.3e-12,
+                "exp.f32": 3.4e-11, "tanh.f32": 4.2e-11,
+                "hbm.read": 4.5e-11, "hbm.write": 5.2e-11,
+                "vmem.read": 1.4e-12, "ici.all_reduce": 2.8e-11},
+        scaled={"vmem.write": 1.7e-12},
+        bucket_means={"vpu_simple": 1.05e-11, "vpu_trans": 3.8e-11,
+                      "mxu": 1.3e-12, "move": 6e-12},
+        meta={"isa_gen": 0.0})
+
+
+def _fn(x, w):
+    return jnp.sum(jnp.tanh(x @ w))
+
+
+_ARGS = (jax.ShapeDtypeStruct((256, 128), jnp.bfloat16),
+         jax.ShapeDtypeStruct((128, 64), jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# Table schema + store round-trip.
+# ---------------------------------------------------------------------------
+def test_table_save_load_roundtrip(tmp_path):
+    t = _table()
+    path = tmp_path / "t.json"
+    t.save(path)
+    assert json.loads(path.read_text())["schema"] == SCHEMA_VERSION
+    t2 = EnergyTable.load(path)
+    assert t2 == t
+
+
+def test_table_load_rejects_missing_or_wrong_schema(tmp_path):
+    t = _table()
+    path = tmp_path / "t.json"
+    t.save(path)
+    d = json.loads(path.read_text())
+    del d["schema"]
+    path.write_text(json.dumps(d))
+    with pytest.raises(TableSchemaError, match="schema version"):
+        EnergyTable.load(path)
+    d["schema"] = SCHEMA_VERSION + 99
+    path.write_text(json.dumps(d))
+    with pytest.raises(TableSchemaError, match="schema version"):
+        EnergyTable.load(path)
+
+
+def test_table_load_rejects_unknown_keys(tmp_path):
+    t = _table()
+    path = tmp_path / "t.json"
+    t.save(path)
+    d = json.loads(path.read_text())
+    d["surprise_field"] = 1
+    path.write_text(json.dumps(d))
+    with pytest.raises(TableSchemaError, match="surprise_field"):
+        EnergyTable.load(path)
+
+
+def test_store_roundtrip_and_keys(tmp_path):
+    store = TableStore(tmp_path)
+    assert store.get("sim-v5e-air") is None
+    path = store.put(_table())
+    assert path.name == f"sim-v5e-air__gen0__v{SCHEMA_VERSION}.json"
+    got = store.get("sim-v5e-air")
+    assert got == _table()
+    assert store.keys() == [path.stem]
+    assert store.entries()[path.stem] == {"isa_gen": 0,
+                                          "schema": SCHEMA_VERSION}
+    assert store.evict("sim-v5e-air") and store.get("sim-v5e-air") is None
+
+
+def test_store_stale_schema_is_a_warned_miss(tmp_path):
+    store = TableStore(tmp_path)
+    path = store.put(_table())
+    d = json.loads(path.read_text())
+    d["schema"] = SCHEMA_VERSION + 1
+    path.write_text(json.dumps(d))
+    with pytest.warns(RuntimeWarning, match="unreadable energy table"):
+        assert store.get("sim-v5e-air") is None  # warned miss, not a crash
+    path.write_text("{not json")                 # corrupt file: same contract
+    with pytest.warns(RuntimeWarning, match="unreadable energy table"):
+        assert store.get("sim-v5e-air") is None
+
+
+def test_store_get_or_train_trains_once(tmp_path):
+    store = TableStore(tmp_path)
+    calls = []
+
+    def fake_train(system):
+        calls.append(system)
+        return _table(system)
+
+    t1 = store.get_or_train("sim-v5e-air", fake_train)
+    t2 = store.get_or_train("sim-v5e-air", fake_train)
+    assert calls == ["sim-v5e-air"]              # second call hit the disk
+    assert t1 == t2
+
+
+def test_from_store_persists_across_sessions(tmp_path, monkeypatch):
+    calls = []
+    monkeypatch.setattr("repro.api.train_table",
+                        lambda system, **kw: (calls.append(system),
+                                              _table(system))[1])
+    store = TableStore(tmp_path)
+    m1 = EnergyModel.from_store("sim-v5e-air", store=store)
+    m2 = EnergyModel.from_store("sim-v5e-air", store=store)   # "new process"
+    assert calls == ["sim-v5e-air"]
+    assert m1.table == m2.table
+    with pytest.raises(KeyError):
+        EnergyModel.from_store("sim-v5e-liquid", store=store,
+                               train_if_missing=False)
+
+
+# ---------------------------------------------------------------------------
+# Batched prediction == N single predictions.
+# ---------------------------------------------------------------------------
+def test_predict_many_matches_per_workload_predict():
+    from repro.workloads.suite import build_workloads
+    model = EnergyModel(_table())
+    wls = build_workloads(isa_gen=0)
+    jobs = [PredictJob(wl.counts.scaled(7.0), 3.0 + i, name=wl.name)
+            for i, wl in enumerate(wls)]
+    batched = model.predict_many(jobs)
+    assert len(batched) == len(wls)
+    for job, got in zip(jobs, batched):
+        ref = predict_mod.predict(model.table, job.source, job.duration_s)
+        assert got.total_j == pytest.approx(ref.total_j, rel=1e-9)
+        assert got.by_class == ref.by_class
+        assert got.coverage == pytest.approx(ref.coverage, rel=1e-9)
+
+
+def test_predict_semantics_hand_computed():
+    # pins the accounting independently of the (shared) TablePredictor code:
+    # direct hit + bucket-mean fallback + scaled entry + counter traffic
+    model = EnergyModel(_table())
+    counts = {"add.f32": 1e9,      # direct: 1e-11 J/unit
+              "sub.f32": 2e9}      # miss -> vpu_simple bucket mean 1.05e-11
+    counters = {"hbm_read_bytes": 1e10,    # direct: 4.5e-11 J/B
+                "vmem_write_bytes": 1e9}   # scaled: 1.7e-12 J/B
+    p = model.predict(model.profile_counts(counts), 2.0, counters=counters)
+    assert p.const_j == pytest.approx(40.0 * 2)
+    assert p.static_j == pytest.approx(50.0 * 2)
+    assert p.by_class["add.f32"] == pytest.approx(0.01)
+    assert p.by_class["sub.f32"] == pytest.approx(0.021)
+    assert p.by_class["hbm.read"] == pytest.approx(0.45)
+    assert p.by_class["vmem.write"] == pytest.approx(0.0017)
+    assert p.dynamic_j == pytest.approx(0.4827)
+    assert p.total_j == pytest.approx(180.4827)
+    assert p.coverage == pytest.approx(0.46 / 0.4827)
+    d = model.predict(model.profile_counts(counts), 2.0, counters=counters,
+                      mode="direct")
+    assert d.dynamic_j == pytest.approx(0.46)      # non-direct classes -> 0 J
+    assert d.total_j == pytest.approx(180.46)
+    assert d.coverage == pytest.approx(0.46 / 0.4827)
+
+
+def test_predictor_invalidate_after_table_mutation():
+    model = EnergyModel(_table())
+    prof = model.profile_counts({"add.f32": 1e9})
+    before = model.predict(prof, 0.0).by_class["add.f32"]
+    model.table.direct["add.f32"] *= 2
+    model.predictor.invalidate()
+    after = model.predict(prof, 0.0).by_class["add.f32"]
+    assert after == pytest.approx(2 * before)
+
+
+def test_predict_many_mixed_modes_and_tuples():
+    model = EnergyModel(_table())
+    counts = count_fn(_fn, *_ARGS)
+    direct, pred = model.predict_many(
+        [PredictJob(counts, 1.0, mode="direct"), (counts, 1.0)])
+    ref_direct = predict_mod.predict(model.table, counts, 1.0, mode="direct")
+    ref_pred = predict_mod.predict(model.table, counts, 1.0, mode="pred")
+    assert direct.total_j == pytest.approx(ref_direct.total_j, rel=1e-9)
+    assert pred.total_j == pytest.approx(ref_pred.total_j, rel=1e-9)
+    assert direct.dynamic_j <= pred.dynamic_j
+
+
+# ---------------------------------------------------------------------------
+# Profile sources.
+# ---------------------------------------------------------------------------
+def test_profile_source_parity_jaxpr_vs_raw_counts():
+    model = EnergyModel(_table())
+    via_jaxpr = model.profile(_fn, *_ARGS)
+    raw = count_fn(_fn, *_ARGS, isa_gen=model.isa_gen)
+    via_counts = model.profile_counts(raw)
+    assert via_jaxpr.counts.units == via_counts.counts.units
+    p1 = model.predict(via_jaxpr, 2.0)
+    p2 = model.predict(via_counts, 2.0)
+    p3 = model.predict(raw, 2.0)                 # bare OpCounts works too
+    assert p1.total_j == pytest.approx(p2.total_j, rel=1e-12)
+    assert p1.total_j == pytest.approx(p3.total_j, rel=1e-12)
+
+
+def test_profile_counts_from_class_map():
+    model = EnergyModel(_table())
+    prof = model.profile_counts({"add.f32": 1e9, "exp.f32": 2e6})
+    pred = model.predict(prof, 1.0)
+    dyn_expected = 1e9 * 1e-11 + 2e6 * 3.4e-11
+    assert pred.by_class["add.f32"] == pytest.approx(1e9 * 1e-11)
+    assert pred.dynamic_j == pytest.approx(dyn_expected)
+
+
+HLO = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%fused (p: f32[128,64]) -> f32[128,64] {
+  %t = f32[128,64]{1,0} tanh(%p)
+  ROOT %a = f32[128,64]{1,0} add(%t, %t)
+}
+
+ENTRY %main (x: f32[128,256], w: f32[256,64]) -> f32[] {
+  %d = f32[128,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %f = f32[128,64]{1,0} fusion(%d), kind=kLoop, calls=%fused
+  %ar = f32[128,64]{1,0} all-reduce(%f), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %r = f32[] reduce(%ar, %zero), dimensions={0,1}, to_apply=%add
+}
+"""
+
+
+def test_profile_hlo_source():
+    model = EnergyModel(_table())
+    prof = model.profile_hlo(HLO)
+    units = prof.counts.units
+    assert units["tanh.f32"] == 128 * 64
+    assert units["add.f32"] >= 128 * 64
+    assert units["ici.all_reduce"] > 0
+    assert prof.counts.fused_bytes > 0
+    pred = model.predict(prof, 1.0)
+    assert pred.dynamic_j > 0
+
+
+def test_bare_callable_is_rejected_with_hint():
+    model = EnergyModel(_table())
+    with pytest.raises(TypeError, match="profile it first"):
+        model.predict(_fn, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Measure / compare / monitor verbs.
+# ---------------------------------------------------------------------------
+def test_compare_measures_and_predicts():
+    model = EnergyModel(_table())
+    cmp = model.compare(_fn, *_ARGS, target_seconds=2.0)
+    assert isinstance(cmp, Comparison)
+    assert cmp.measured_j > 0 and cmp.predicted_j > 0
+    assert cmp.record.duration_s > 0
+    # prediction and measurement describe the same run
+    assert cmp.prediction.duration_s == pytest.approx(cmp.record.duration_s)
+
+
+def test_attribute_breakdown():
+    model = EnergyModel(_table())
+    pred = model.attribute(model.profile(_fn, *_ARGS), duration_s=1.0)
+    assert sum(pred.by_bucket.values()) == pytest.approx(pred.total_j)
+    assert pred.by_bucket["const"] == pytest.approx(40.0)
+
+
+def test_monitor_shares_the_predictor():
+    model = EnergyModel(_table())
+    mon = model.monitor(window=4)
+    assert mon._predictor is model.predictor
+    counts = count_fn(_fn, *_ARGS)
+    rec = mon.observe(0, counts, 0.1)
+    assert rec.prediction.total_j > 0
+
+
+def test_evaluate_explicit_table_overrides_model():
+    from repro.core.evaluate import evaluate_system
+    from repro.workloads.suite import Workload
+    model = EnergyModel(_table())
+    wl = Workload(name="w", counts=count_fn(_fn, *_ARGS), family="ml",
+                  target_seconds=1.0)
+    hybrid = _table()
+    for k in hybrid.direct:
+        hybrid.direct[k] *= 3.0
+    kw = dict(workloads=[wl], with_accelwattch=False, with_guser=False)
+    rep_model = evaluate_system("sim-v5e-air", model=model, **kw)
+    rep_hybrid = evaluate_system("sim-v5e-air", model=model, table=hybrid,
+                                 **kw)
+    # the hybrid table (3x energies) must actually be the one evaluated
+    assert (rep_hybrid.results[0].predictions["wattchmen_pred"]
+            > rep_model.results[0].predictions["wattchmen_pred"])
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims.
+# ---------------------------------------------------------------------------
+def test_cached_table_shim_warns_and_uses_store(tmp_path, monkeypatch):
+    from repro.core import trainer
+    monkeypatch.setenv("REPRO_TABLE_STORE", str(tmp_path))
+    TableStore(tmp_path).put(_table())
+    with pytest.warns(DeprecationWarning, match="from_store"):
+        # bypass the lru memo: the shim body must hit the on-disk store
+        got = trainer.cached_table.__wrapped__("sim-v5e-air")
+    assert got == _table()
+
+
+def test_engine_imports_still_work():
+    # the old engine surface stays importable (shimmed, not removed)
+    from repro.core.predict import predict          # noqa: F401
+    from repro.core.trainer import cached_table, train_table  # noqa: F401
+    from repro.core.measure import total_energy     # noqa: F401
+
+
+def test_top_level_lazy_exports():
+    import repro
+    assert repro.EnergyModel is EnergyModel
+    assert repro.EnergyTable is EnergyTable
+    assert "TableStore" in dir(repro)
+    with pytest.raises(AttributeError):
+        repro.does_not_exist

@@ -1,11 +1,16 @@
 """Hypothesis property tests on the system's invariants."""
 import math
 
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency (pip install .[dev])")
+
+import hypothesis.strategies as st          # noqa: E402
+import jax                                  # noqa: E402
+import jax.numpy as jnp                     # noqa: E402
+import numpy as np                          # noqa: E402
+from hypothesis import given, settings      # noqa: E402
 
 from repro.core import isa
 from repro.core.opcount import OpCounts, count_fn
