@@ -1,0 +1,69 @@
+"""Telemetry ingestion overhead — the streaming hot path must stay cheap.
+
+A production collector polls every device at NVML-ish rates; the per-sample
+cost of ring append + incremental integration + plateau update + marker
+alignment bounds how many devices one monitor process can watch.  Reports
+nanoseconds per sample through the full pipeline and through the integrator
+alone.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.telemetry.align import StreamAligner, contiguous_markers
+from repro.telemetry.sampler import PowerSample, SampleRing
+from repro.telemetry.stream import OnlineSteadyState, StreamingIntegrator
+
+N_SAMPLES = 200_000
+SAMPLES_PER_STEP = 100          # marker cadence
+
+
+def _synthetic(n: int):
+    ts = np.arange(n) * 0.1
+    ps = 180.0 + 10.0 * np.sin(ts / 7.0) + np.random.default_rng(0).normal(
+        0.0, 1.5, n)
+    return ts, ps
+
+
+@timed("telemetry_integrator_only")
+def bench_integrator() -> str:
+    ts, ps = _synthetic(N_SAMPLES)
+    integ = StreamingIntegrator()
+    t0 = time.perf_counter()
+    for i in range(N_SAMPLES):
+        integ.add(ts[i], ps[i])
+    ns = (time.perf_counter() - t0) / N_SAMPLES * 1e9
+    return f"ns_per_sample={ns:.0f} energy_j={integ.energy_j:.0f}"
+
+
+@timed("telemetry_full_pipeline")
+def bench_pipeline() -> str:
+    ts, ps = _synthetic(N_SAMPLES)
+    bounds = ts[::SAMPLES_PER_STEP]
+    ring = SampleRing(4096)
+    integ = StreamingIntegrator()
+    plateau = OnlineSteadyState()
+    aligner = StreamAligner()
+    for m in contiguous_markers(bounds):
+        aligner.add_marker(m)
+    t0 = time.perf_counter()
+    for i in range(N_SAMPLES):
+        s = PowerSample(ts[i], ps[i])
+        ring.append(s)
+        integ.add(s.t_s, s.power_w)
+        plateau.update(s.t_s, s.power_w)
+        aligner.add_sample(s)
+    ns = (time.perf_counter() - t0) / N_SAMPLES * 1e9
+    aligner.close()
+    return (f"ns_per_sample={ns:.0f} windows={len(aligner.windows)} "
+            f"dropped={ring.dropped}")
+
+
+ALL = [bench_integrator, bench_pipeline]
+
+if __name__ == "__main__":
+    for b in ALL:
+        b()

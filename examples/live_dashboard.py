@@ -1,0 +1,74 @@
+"""Live monitoring dashboard: streaming telemetry on a serving fleet.
+
+Two simulated devices run workloads under the full streaming pipeline —
+background-style power sampling, MTSM-style per-step marker alignment,
+measured-vs-predicted attribution with drift detection — aggregated by one
+``TelemetryService`` (the JSON snapshot a real dashboard would poll).
+
+One device is healthy; the other has drifted silicon (its true per-op
+energies run 40% hot against the trained table — an aged part or a
+firmware DVFS change).  Watch the drift detector flag it and the
+recalibration trigger repair the table live.
+
+    PYTHONPATH=src python examples/live_dashboard.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import EnergyModel, TelemetryService
+from repro.hw.device import SimDevice
+from repro.hw.systems import SYSTEMS
+
+
+def decode_like(x, w1, w2):
+    h = jax.nn.gelu(x @ w1)
+    return jnp.sum(jax.nn.softmax(h @ w2, axis=-1))
+
+
+ARGS = (jax.ShapeDtypeStruct((2048, 1024), jnp.bfloat16),
+        jax.ShapeDtypeStruct((1024, 2048), jnp.bfloat16),
+        jax.ShapeDtypeStruct((2048, 1024), jnp.bfloat16))
+
+service = TelemetryService()
+
+# -- node 0: healthy -------------------------------------------------------
+model = EnergyModel.from_store("sim-v5e-air")
+prof = model.profile(decode_like, *ARGS)
+healthy = model.monitor(live=True, step_counts=prof.counts)
+service.register(healthy.live, key="node0/decode")
+
+# -- node 1: drifted silicon (same table, coefficients 40% hot) ------------
+cfg = SYSTEMS["sim-v5e-air"]
+drifted_model = EnergyModel.from_store("sim-v5e-air")
+drifted_model._device = SimDevice(cfg.chip, cfg.cooling, cfg.seed,
+                                  name="sim-v5e-air-aged", coeff_scale=1.4)
+aged = drifted_model.monitor(live=True, step_counts=prof.counts)
+service.register(aged.live, key="node1/decode")
+
+# -- the "serving loops": each decode step is an MTSM sync point -----------
+STEPS = 32
+for i in range(STEPS):
+    healthy.live.step(i, work_units=2048)
+    aged.live.step(i, work_units=2048)
+
+# anchor node1's drift baseline on a healthy shakedown run of the same
+# workload (in production this is the burn-in history of the part)
+aged.live.attributor.detector.baseline = 1.0
+
+for mon, label in ((healthy, "node0"), (aged, "node1")):
+    s = mon.live.finish()
+    flag = " ** DRIFT -> recalibrated **" if s.recalibrations else ""
+    print(f"[{label}] {s.steps} steps  measured {s.measured_total_j:9.1f} J  "
+          f"predicted {s.predicted_total_j:9.1f} J  "
+          f"MAPE {s.mape_pct:5.1f}%{flag}")
+    for rec in mon.records[:3]:
+        print(f"    step {rec.step}: measured {rec.measured_j:8.2f} J, "
+              f"predicted {rec.prediction.total_j:8.2f} J "
+              f"({rec.error_pct:+.1f}%)")
+
+print("\ntop measured consumers (node0):")
+for cls, e in healthy.live.attributor.top_measured_classes(5):
+    print(f"  {cls:20s} {e:10.2f} J")
+
+print("\nfleet snapshot (what a dashboard polls):")
+print(service.to_json(indent=1))

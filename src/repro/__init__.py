@@ -36,6 +36,9 @@ _LAZY = {
     "TablePredictor": "repro.core.predict",
     "OpCounts": "repro.core.opcount",
     "EnergyMonitor": "repro.core.fleet",
+    "TelemetryService": "repro.telemetry",
+    "StreamSession": "repro.telemetry",
+    "StreamSummary": "repro.telemetry",
     "SYSTEMS": "repro.hw.systems",
     "get_device": "repro.hw.systems",
 }

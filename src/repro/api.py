@@ -318,10 +318,63 @@ class EnergyModel:
         return Comparison(record=rec, prediction=pred)
 
     # -- streaming / evaluation ----------------------------------------------
-    def monitor(self, **kwargs):
-        """A fleet ``EnergyMonitor`` bound to this model's predictor."""
+    def monitor(self, live=False, step_counts=None, **kwargs):
+        """A fleet ``EnergyMonitor`` bound to this model's predictor.
+
+        ``step_counts`` sets the default per-step profile (one profile per
+        program), so the hot loop calls ``monitor.observe(step, duration_s=dt)``
+        without re-threading counts.
+
+        ``live`` switches on measured telemetry: pass a profile source (or
+        ``True`` to reuse ``step_counts``) and the monitor is wired to a
+        ``telemetry.StreamSession`` (``monitor.live``) — the host loop marks
+        steps via ``monitor.live.step(...)`` and ``monitor.live.finish()``
+        aligns measured joules to every step, feeding them back into the
+        monitor's records alongside the predictions.
+        """
         from repro.core.fleet import EnergyMonitor
-        return EnergyMonitor(self, **kwargs)
+        if step_counts is not None and not isinstance(step_counts, OpCounts):
+            step_counts = self._resolve(step_counts)
+        mon = EnergyMonitor(self, step_counts=step_counts, **kwargs)
+        if live is not None and live is not False:
+            source = step_counts if live is True else live
+            if source is None:
+                raise ValueError("monitor(live=True) needs step_counts=, or "
+                                 "pass the profile source as live=")
+            mon.live = self.stream(source, monitor=mon)
+        return mon
+
+    def stream(self, source: Union[ProfileSource, OpCounts], *,
+               name: Optional[str] = None, monitor=None, service=None,
+               store: Union[bool, "TableStore", None] = None, **kwargs):
+        """A ``telemetry.StreamSession`` for this model on its device.
+
+        The full streaming pipeline — background-style sampling, MTSM
+        marker alignment, measured-vs-predicted attribution, drift
+        detection and table recalibration:
+
+            session = model.stream(model.profile(fn, *args))
+            for i in range(N):
+                ...                                   # real work
+                session.step(i, duration_s=dt)
+            summary = session.finish()                # align + attribute
+
+        ``store=True`` lets a drift-triggered recalibration publish the
+        corrected table to the default ``TableStore`` (or pass a store).
+        ``service`` registers the session on a ``TelemetryService``.
+        """
+        from repro.telemetry.service import StreamSession
+        if store is True:
+            store = default_store()
+        elif store is False:
+            store = None
+        session = StreamSession(
+            self.predictor, self.device, self._resolve(source),
+            name=name or getattr(source, "name", "workload"),
+            monitor=monitor, store=store, **kwargs)
+        if service is not None:
+            service.register(session)
+        return session
 
     def evaluate(self, **kwargs):
         """Full workload-suite evaluation (paper Figs. 6-9 pipeline)."""

@@ -31,6 +31,14 @@ class StepRecord:
     step: int
     prediction: Prediction
     joules_per_unit_work: float
+    measured_j: Optional[float] = None     # live telemetry, when streamed
+
+    @property
+    def error_pct(self) -> Optional[float]:
+        """Predicted-vs-measured error; None without live telemetry."""
+        if self.measured_j is None or self.measured_j <= 0:
+            return None
+        return 100.0 * (self.prediction.total_j / self.measured_j - 1.0)
 
 
 class EnergyMonitor:
@@ -43,7 +51,8 @@ class EnergyMonitor:
     """
 
     def __init__(self, table, window: int = 16,
-                 spike_ratio: float = 1.75, min_share: float = 0.04):
+                 spike_ratio: float = 1.75, min_share: float = 0.04,
+                 step_counts: Optional[OpCounts] = None):
         predictor = getattr(table, "predictor", None)   # EnergyModel
         if predictor is None and isinstance(table, TablePredictor):
             predictor = table
@@ -55,17 +64,34 @@ class EnergyMonitor:
         self.window = window
         self.spike_ratio = spike_ratio
         self.min_share = min_share
+        self.step_counts = step_counts
+        self.live = None           # StreamSession, when monitor(live=...)
         self._hist: Dict[str, Deque[float]] = defaultdict(
             lambda: deque(maxlen=window))
         self.records: List[StepRecord] = []
         self.anomalies: List[Anomaly] = []
 
-    def observe(self, step: int, counts: OpCounts, duration_s: float,
+    def set_step_counts(self, counts: OpCounts) -> None:
+        """Default per-step op counts (one profile per program, §5.3.2)."""
+        self.step_counts = counts
+
+    def observe(self, step: int, counts: Optional[OpCounts] = None,
+                duration_s: Optional[float] = None,
                 counters: Optional[dict] = None,
-                work_units: float = 1.0) -> StepRecord:
+                work_units: float = 1.0,
+                measured_j: Optional[float] = None) -> StepRecord:
+        if counts is None:
+            counts = self.step_counts
+            if counts is None:
+                raise ValueError("no counts: pass counts= or call "
+                                 "set_step_counts() first")
+        if duration_s is None:
+            raise ValueError("duration_s is required: the (const+static) "
+                             "power term scales with it")
         pred = self._predictor.predict(counts, duration_s, counters=counters)
         rec = StepRecord(step=step, prediction=pred,
-                         joules_per_unit_work=pred.total_j / max(work_units, 1e-12))
+                         joules_per_unit_work=pred.total_j / max(work_units, 1e-12),
+                         measured_j=measured_j)
         self.records.append(rec)
         # step-level energy spike (uniform regressions move no class share —
         # the paper's QMCPACK "unusual DMC spikes")

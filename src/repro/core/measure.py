@@ -9,6 +9,11 @@ right-hand side of the system of equations:
     E_total = (P_const + P_static) * T_exec + E_dynamic        (Eq. 2)
 
 Only telemetry enters here — never the device's hidden model.
+
+The numerical primitives (``trapezoid_energy``, ``rolling_std``) are
+defined here and reused by the live pipeline in ``repro.telemetry.stream``
+(which accumulates them incrementally), so offline analysis and streaming
+ingestion can never disagree about what a trace contains.
 """
 from __future__ import annotations
 
@@ -18,6 +23,30 @@ from typing import Optional
 import numpy as np
 
 from repro.hw.device import RunRecord, SensorTrace
+
+
+def trapezoid_energy(times_s: np.ndarray, power_w: np.ndarray) -> float:
+    """Energy (J) of a sampled power signal by trapezoid integration."""
+    return float(np.trapezoid(power_w, times_s))
+
+
+def rolling_std(p: np.ndarray, w: int) -> np.ndarray:
+    """Population std of every length-``w`` window of ``p`` (vectorized).
+
+    Returns an array of length ``len(p) - w + 1``; empty when ``w > len(p)``.
+    Uses cumulative sums: var = E[x^2] - E[x]^2, clipped at 0 against float
+    cancellation.
+    """
+    p = np.asarray(p, dtype=float)
+    n = p.size
+    if w > n:
+        return np.empty(0)
+    c1 = np.concatenate(([0.0], np.cumsum(p)))
+    c2 = np.concatenate(([0.0], np.cumsum(p * p)))
+    s1 = c1[w:] - c1[:-w]
+    s2 = c2[w:] - c2[:-w]
+    var = np.maximum(s2 / w - (s1 / w) ** 2, 0.0)
+    return np.sqrt(var)
 
 
 @dataclasses.dataclass
@@ -36,14 +65,11 @@ def detect_steady_state(trace: SensorTrace, window_s: float = 5.0,
     dt = float(np.median(np.diff(t)))
     w = max(int(window_s / max(dt, 1e-9)), 4)
     mean_all = float(np.mean(p[-max(w, 4):]))
-    # rolling std via cumulative sums
+    # rolling std via cumulative sums, earliest window under the threshold
     n = len(p)
-    best_start = n - w
-    for i in range(0, n - w):
-        seg = p[i:i + w]
-        if np.std(seg) < max(rel_tol * mean_all, 1.5):
-            best_start = i
-            break
+    stds = rolling_std(p, w)
+    hits = np.nonzero(stds[:max(n - w, 0)] < max(rel_tol * mean_all, 1.5))[0]
+    best_start = int(hits[0]) if hits.size else n - w
     plateau = p[best_start:]
     return SteadyState(power_w=float(np.mean(plateau)),
                        start_s=float(t[best_start]),
@@ -51,8 +77,12 @@ def detect_steady_state(trace: SensorTrace, window_s: float = 5.0,
 
 
 def integrate_trace(trace: SensorTrace) -> float:
-    """Approximate energy by integrating the sampled power (Fig. 4 method)."""
-    return float(np.trapezoid(trace.power_w, trace.times_s))
+    """Approximate energy by integrating the sampled power (Fig. 4 method).
+
+    Same implementation the streaming path accumulates incrementally
+    (``telemetry.stream.StreamingIntegrator``).
+    """
+    return trapezoid_energy(trace.times_s, trace.power_w)
 
 
 def total_energy(rec: RunRecord, use_counter: bool = False) -> float:

@@ -43,8 +43,11 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
     if energy_system:
         counts = count_fn(make_serve_step(cfg), params, cache,
                           jnp.zeros((batch, 1), jnp.int32))
-        monitor = EnergyModel.from_store(energy_system).monitor()
-        monitor._step_counts = counts
+        # live=True wires a telemetry StreamSession (monitor.live): each
+        # decode step is an MTSM sync point; finish() aligns measured
+        # joules per step against the sampled power trace.
+        monitor = EnergyModel.from_store(energy_system).monitor(
+            live=True, step_counts=counts)
 
     rng = np.random.default_rng(seed)
     tok = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
@@ -54,18 +57,25 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         tok, cache = step(params, cache, tok)
         toks.append(tok)
         if monitor is not None:
-            monitor.observe(i, monitor._step_counts, 1e-3, work_units=batch)
+            monitor.live.step(i, duration_s=1e-3, work_units=batch)
     dt = time.time() - t0
     out = jnp.concatenate(toks, axis=1)
+    summary = (monitor.live.finish()
+               if monitor is not None and monitor.live.steps_registered
+               else None)
     if verbose:
         total = (prompt_len + max_new) * batch
         print(f"[serve] generated {out.shape} in {dt:.2f}s "
               f"({total / max(dt, 1e-9):.0f} tok/s host-side)")
-        if monitor is not None:
-            pred = monitor.records[-1].prediction
-            print(f"[serve] predicted energy/step: {pred.total_j:.3e} J, "
-                  f"dominant bucket: "
+        if summary is not None:
+            rec = monitor.records[-1]
+            pred = rec.prediction
+            print(f"[serve] predicted energy/step: {pred.total_j:.3e} J "
+                  f"(measured {rec.measured_j:.3e} J), dominant bucket: "
                   f"{max(pred.by_bucket, key=pred.by_bucket.get)}")
+            print(f"[serve] live MAPE {summary.mape_pct:.1f}% over "
+                  f"{summary.steps} steps"
+                  + (", DRIFT flagged" if summary.drift.drifting else ""))
     return out, monitor
 
 

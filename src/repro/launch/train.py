@@ -59,15 +59,16 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         if verbose:
             print(f"[train] restored checkpoint at step {start_step}")
 
-    # Wattchmen integration: profile the step once, monitor every step.
+    # Wattchmen integration: profile the step once, monitor every step —
+    # live=True adds the telemetry stream (measured J/step + drift repair).
     monitor = None
     if energy_system:
         example = model_batch(cfg, shape, dcfg, 0)
         counts = count_fn(make_train_step(cfg, opt_cfg,
                                           microbatches=microbatches),
                           state, example)
-        monitor = EnergyModel.from_store(energy_system).monitor()
-        monitor._step_counts = counts      # one profile per program
+        monitor = EnergyModel.from_store(energy_system).monitor(
+            live=True, step_counts=counts)
 
     straggler = StragglerMonitor()
     losses = []
@@ -83,16 +84,20 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         losses.append(loss)
         straggler.record(step, dt)
         if monitor is not None:
-            rec = monitor.observe(step, monitor._step_counts, dt,
-                                  work_units=seq_len * global_batch)
+            monitor.live.step(step, duration_s=dt,
+                              work_units=seq_len * global_batch)
         if ckpt_dir and (step + 1) % ckpt_every == 0:
             ckpt_mod.save(ckpt_dir, step + 1, state)
         if verbose:
-            extra = ""
-            if monitor is not None:
-                extra = f" E/token={rec.joules_per_unit_work:.2e}J"
-            print(f"[train] step {step} loss={loss:.4f} "
-                  f"({dt*1e3:.0f}ms){extra}")
+            print(f"[train] step {step} loss={loss:.4f} ({dt*1e3:.0f}ms)")
+    if monitor is not None and monitor.live.steps_registered:
+        summary = monitor.live.finish()
+        if verbose:
+            rec = monitor.records[-1]
+            print(f"[train] E/token={rec.joules_per_unit_work:.2e}J "
+                  f"live MAPE {summary.mape_pct:.1f}% over {summary.steps} "
+                  f"steps" + (", DRIFT flagged" if summary.drift.drifting
+                              else ""))
     return state, losses, monitor
 
 

@@ -1,0 +1,35 @@
+"""Streaming telemetry: online sampling, MTSM alignment, live attribution.
+
+The runtime layer between raw power sensors and the fleet monitor:
+
+    sampler  — background-style samplers + bounded ring buffer
+    stream   — O(1) incremental integration + online plateau detection
+               (shared with the offline path in ``repro.core.measure``)
+    align    — MTSM-style marker synchronization → measured J per step
+    attrib   — measured-vs-predicted residuals, drift, recalibration
+    service  — per-workload sessions + the multi-device aggregator
+
+Entry point: ``repro.api.EnergyModel.stream(...)`` /
+``EnergyModel.monitor(live=...)``.
+"""
+from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
+                                   align_trace, contiguous_markers)
+from repro.telemetry.attrib import (DriftDetector, DriftState,
+                                    OnlineAttributor, StepAttribution,
+                                    rescale_table)
+from repro.telemetry.sampler import (DeviceSampler, FeedSampler, PowerSample,
+                                     SampleRing, TraceReplaySampler)
+from repro.telemetry.service import (StreamSession, StreamSummary,
+                                     TelemetryService)
+from repro.telemetry.stream import (OnlineSteadyState, PlateauState,
+                                    StreamingIntegrator, rolling_std,
+                                    trapezoid_energy)
+
+__all__ = [
+    "AlignedWindow", "Marker", "StreamAligner", "align_trace",
+    "contiguous_markers", "DriftDetector", "DriftState", "OnlineAttributor",
+    "StepAttribution", "rescale_table", "DeviceSampler", "FeedSampler",
+    "PowerSample", "SampleRing", "TraceReplaySampler", "StreamSession",
+    "StreamSummary", "TelemetryService", "OnlineSteadyState", "PlateauState",
+    "StreamingIntegrator", "rolling_std", "trapezoid_energy",
+]

@@ -1,0 +1,214 @@
+"""MTSM-style marker synchronization — measured joules per step.
+
+Arafa et al.'s Multi-Threaded Synchronized Monitoring runs a sampling
+thread beside the application and aligns kernel begin/end markers against
+the sampled power signal to attribute *measured* energy to individual
+kernels.  ``StreamAligner`` is that alignment, online:
+
+* Markers are time windows ``[t_start, t_end)`` in the trace's clock,
+  added in time order (a production app emits one as each step/kernel
+  retires — typically *after* the samples inside it have been produced).
+* Samples are ingested in time order.  Samples beyond the latest marker's
+  end are held back, so a marker that arrives late still receives every
+  joule inside its window — the monitor thread lags the sync points, never
+  the other way around.
+* Window energy uses partial trapezoids: sample segments crossing a marker
+  boundary are split by linear interpolation at the boundary, so windows
+  that tile the run sum to the whole-run integral exactly (float
+  round-off aside).
+
+Edge cases are explicit: a window before the first sample or after the
+last yields what its overlap with the trace supports and is flagged
+``clipped``; a window strictly between two samples gets the interpolated
+energy of its span.
+
+``align_trace`` is the offline wrapper — same engine, whole trace in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Callable, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.hw.device import SensorTrace
+from repro.telemetry.sampler import PowerSample
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Marker:
+    """One step/kernel window in the sampled trace's clock."""
+
+    step: int
+    name: str
+    t_start_s: float
+    t_end_s: float
+
+    def __post_init__(self):
+        if self.t_end_s < self.t_start_s:
+            raise ValueError(f"marker {self.name!r}: t_end {self.t_end_s} "
+                             f"< t_start {self.t_start_s}")
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end_s - self.t_start_s
+
+
+@dataclasses.dataclass
+class AlignedWindow:
+    """Measured energy attributed to one marker."""
+
+    step: int
+    name: str
+    t_start_s: float
+    t_end_s: float
+    measured_j: float
+    n_samples: int              # samples with t in [t_start, t_end)
+    covered_s: float            # span actually backed by samples
+    clipped: bool               # trace did not fully cover the window
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end_s - self.t_start_s
+
+    @property
+    def mean_power_w(self) -> float:
+        return self.measured_j / max(self.duration_s, _EPS)
+
+
+class _Accum:
+    __slots__ = ("marker", "energy_j", "n_samples", "covered_s")
+
+    def __init__(self, marker: Marker):
+        self.marker = marker
+        self.energy_j = 0.0
+        self.n_samples = 0
+        self.covered_s = 0.0
+
+    def finish(self) -> AlignedWindow:
+        m = self.marker
+        clipped = self.covered_s + 1e-9 < m.duration_s
+        return AlignedWindow(step=m.step, name=m.name, t_start_s=m.t_start_s,
+                             t_end_s=m.t_end_s, measured_j=self.energy_j,
+                             n_samples=self.n_samples,
+                             covered_s=self.covered_s, clipped=clipped)
+
+
+class StreamAligner:
+    """Online marker↔sample alignment (see module docstring).
+
+    ``on_window`` is called with each finalized ``AlignedWindow``; finished
+    windows also accumulate in ``windows``.
+    """
+
+    def __init__(self,
+                 on_window: Optional[Callable[[AlignedWindow], None]] = None):
+        self.windows: List[AlignedWindow] = []
+        self._on_window = on_window
+        self._active: deque = deque()       # _Accum, by marker time order
+        self._held: deque = deque()         # samples beyond the horizon
+        self._horizon = -math.inf           # latest marker end seen
+        self._t_prev: Optional[float] = None
+        self._p_prev = 0.0
+        self._last_marker_end = -math.inf
+
+    # -- inputs -------------------------------------------------------------
+    def add_marker(self, marker: Marker) -> None:
+        if marker.t_start_s < self._last_marker_end - 1e-9:
+            raise ValueError(
+                f"marker {marker.name!r} starts at {marker.t_start_s} "
+                f"inside the previous window (ends {self._last_marker_end}); "
+                f"markers must be time-ordered and non-overlapping")
+        self._active.append(_Accum(marker))
+        self._last_marker_end = marker.t_end_s
+        self._horizon = max(self._horizon, marker.t_end_s)
+        self._drain()
+
+    def add_sample(self, sample: PowerSample) -> None:
+        self._held.append((float(sample.t_s), float(sample.power_w)))
+        self._drain()
+
+    def extend(self, samples: Iterable[PowerSample]) -> None:
+        for s in samples:
+            self.add_sample(s)
+
+    def close(self) -> List[AlignedWindow]:
+        """Flush held samples and finalize every remaining window."""
+        self._horizon = math.inf
+        self._drain()
+        while self._active:
+            self._finalize(self._active.popleft())
+        return self.windows
+
+    # -- engine -------------------------------------------------------------
+    def _drain(self) -> None:
+        while self._held and self._held[0][0] <= self._horizon:
+            t, p = self._held.popleft()
+            self._process(t, p)
+
+    def _process(self, t: float, p: float) -> None:
+        t0, p0 = self._t_prev, self._p_prev
+        for acc in self._active:
+            m = acc.marker
+            if m.t_start_s > t:
+                break            # time-ordered: nothing later overlaps yet
+            if m.t_start_s <= t < m.t_end_s:
+                acc.n_samples += 1
+            if t0 is None:
+                continue
+            a = max(t0, m.t_start_s)
+            b = min(t, m.t_end_s)
+            if b - a > _EPS and t > t0:
+                pa = p0 + (p - p0) * (a - t0) / (t - t0)
+                pb = p0 + (p - p0) * (b - t0) / (t - t0)
+                acc.energy_j += 0.5 * (pa + pb) * (b - a)
+                acc.covered_s += b - a
+        while self._active and self._active[0].marker.t_end_s <= t:
+            self._finalize(self._active.popleft())
+        self._t_prev, self._p_prev = t, p
+
+    def _finalize(self, acc: _Accum) -> None:
+        win = acc.finish()
+        self.windows.append(win)
+        if self._on_window is not None:
+            self._on_window(win)
+
+
+# ---------------------------------------------------------------------------
+# Offline wrappers — same engine over complete inputs.
+# ---------------------------------------------------------------------------
+def align_trace(trace: SensorTrace,
+                markers: Sequence[Marker]) -> List[AlignedWindow]:
+    """Attribute a recorded trace's energy to markers (offline MTSM)."""
+    aligner = StreamAligner()
+    for m in sorted(markers, key=lambda m: m.t_start_s):
+        aligner.add_marker(m)
+    t, p = trace.times_s, trace.power_w
+    for i in range(len(t)):
+        aligner.add_sample(PowerSample(float(t[i]), float(p[i])))
+    return aligner.close()
+
+
+def contiguous_markers(boundaries: Sequence[float], *, names=None,
+                       first_step: int = 0) -> List[Marker]:
+    """Markers tiling ``[boundaries[0], boundaries[-1]]`` — one per span.
+
+    The tiling property is what makes per-step energies sum to the run
+    total; use this when step boundaries are known timestamps.
+    """
+    bounds = np.asarray(boundaries, dtype=float)
+    if bounds.ndim != 1 or bounds.size < 2:
+        raise ValueError("need at least two boundary timestamps")
+    if np.any(np.diff(bounds) < 0):
+        raise ValueError("boundaries must be non-decreasing")
+    out = []
+    for i in range(bounds.size - 1):
+        name = (names[i] if names is not None else f"step{first_step + i}")
+        out.append(Marker(step=first_step + i, name=name,
+                          t_start_s=float(bounds[i]),
+                          t_end_s=float(bounds[i + 1])))
+    return out

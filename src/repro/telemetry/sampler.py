@@ -1,0 +1,162 @@
+"""Background-style power samplers — the SMA half of Arafa et al.'s
+Sampling Monitoring Approach, adapted to this repo's simulated substrate.
+
+A sampler is anything iterable over ``PowerSample``s in time order.  Three
+sources cover the deployment spectrum:
+
+* ``TraceReplaySampler`` — replays a recorded ``SensorTrace`` (post-hoc
+  analysis of archived telemetry through the *same* code path as live).
+* ``DeviceSampler`` — runs a program on a ``SimDevice`` and streams the
+  resulting NVML-style trace as if a background thread were polling the
+  sensor during execution (the container has no real sensors, so the run
+  completes first; every consumer still sees one sample at a time).
+* ``FeedSampler`` — adapts a raw feed (iterable of tuples or a poll
+  callable) from a real collector daemon.
+
+``SampleRing`` is the bounded buffer between producer and consumers: O(1)
+append, overwrite-oldest semantics with a drop counter, snapshot to arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.hw.device import Program, RunRecord, SensorTrace, SimDevice
+
+
+@dataclasses.dataclass
+class PowerSample:
+    """One telemetry reading."""
+
+    t_s: float
+    power_w: float
+    util: float = math.nan
+    temp_c: float = math.nan
+
+
+class SampleRing:
+    """Bounded ring buffer of power samples.
+
+    A production collector outlives any single consumer; the ring caps
+    memory while exposing the recent window.  ``dropped`` counts samples
+    the ring has overwritten (no longer reachable via ``arrays()`` /
+    ``to_trace()`` — consumers reading the live stream still saw them).
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 2:
+            raise ValueError(f"ring capacity must be >= 2, got {capacity}")
+        self.capacity = int(capacity)
+        self._t = np.zeros(self.capacity)
+        self._p = np.zeros(self.capacity)
+        self._u = np.full(self.capacity, math.nan)
+        self._c = np.full(self.capacity, math.nan)
+        self._head = 0          # next write slot
+        self._count = 0         # valid samples (<= capacity)
+        self.total = 0          # samples ever appended
+        self.dropped = 0        # overwritten before being snapshotted
+
+    def __len__(self) -> int:
+        return self._count
+
+    def append(self, s: PowerSample) -> None:
+        if self._count == self.capacity:
+            self.dropped += 1
+        self._t[self._head] = s.t_s
+        self._p[self._head] = s.power_w
+        self._u[self._head] = s.util
+        self._c[self._head] = s.temp_c
+        self._head = (self._head + 1) % self.capacity
+        self._count = min(self._count + 1, self.capacity)
+        self.total += 1
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(times, power) of the buffered window, oldest first (copies)."""
+        idx = self._order()
+        return self._t[idx].copy(), self._p[idx].copy()
+
+    def latest(self) -> Optional[PowerSample]:
+        if self._count == 0:
+            return None
+        i = (self._head - 1) % self.capacity
+        return PowerSample(float(self._t[i]), float(self._p[i]),
+                           float(self._u[i]), float(self._c[i]))
+
+    def to_trace(self) -> SensorTrace:
+        """The buffered window as a ``SensorTrace`` (for offline tooling)."""
+        idx = self._order()
+        return SensorTrace(self._t[idx].copy(), self._p[idx].copy(),
+                           self._u[idx].copy(), self._c[idx].copy())
+
+    def _order(self) -> np.ndarray:
+        if self._count < self.capacity:
+            return np.arange(self._count)
+        return (np.arange(self.capacity) + self._head) % self.capacity
+
+
+# ---------------------------------------------------------------------------
+# Sources.
+# ---------------------------------------------------------------------------
+class TraceReplaySampler:
+    """Streams a recorded ``SensorTrace`` sample by sample."""
+
+    def __init__(self, trace: SensorTrace):
+        self.trace = trace
+
+    def __iter__(self) -> Iterator[PowerSample]:
+        t, p, u, c = (self.trace.times_s, self.trace.power_w,
+                      self.trace.util, self.trace.temp_c)
+        for i in range(len(t)):
+            yield PowerSample(float(t[i]), float(p[i]), float(u[i]),
+                              float(c[i]))
+
+
+class FeedSampler:
+    """Adapts a raw sample feed: an iterable of ``PowerSample``s /
+    ``(t, p[, util[, temp]])`` tuples, or a zero-arg poll callable returning
+    the same (``None`` ends the stream)."""
+
+    def __init__(self, feed):
+        self._feed = feed
+
+    @staticmethod
+    def _coerce(item) -> PowerSample:
+        if isinstance(item, PowerSample):
+            return item
+        t, p, *rest = item
+        u = rest[0] if len(rest) > 0 else math.nan
+        c = rest[1] if len(rest) > 1 else math.nan
+        return PowerSample(float(t), float(p), float(u), float(c))
+
+    def __iter__(self) -> Iterator[PowerSample]:
+        if callable(self._feed):
+            while True:
+                item = self._feed()
+                if item is None:
+                    return
+                yield self._coerce(item)
+        else:
+            for item in self._feed:
+                yield self._coerce(item)
+
+
+class DeviceSampler:
+    """Background-monitor view of a ``SimDevice`` execution.
+
+    ``run`` executes the program and returns ``(record, sampler)`` where the
+    sampler replays the run's telemetry in sensor order — the streaming
+    pipeline consumes it exactly as it would a live NVML poll loop.
+    """
+
+    def __init__(self, device: SimDevice):
+        self.device = device
+
+    def run(self, program: Program) -> Tuple[RunRecord, TraceReplaySampler]:
+        rec = self.device.run(program)
+        return rec, TraceReplaySampler(rec.trace)
+
+    def idle(self, duration_s: float = 30.0) -> TraceReplaySampler:
+        return TraceReplaySampler(self.device.idle(duration_s))

@@ -1,0 +1,322 @@
+"""Telemetry service: per-workload stream sessions + a fleet aggregator.
+
+``StreamSession`` is the full pipeline for one workload on one device —
+ingestion → alignment → attribution → monitoring:
+
+    session = model.stream(counts, name="train_step")
+    for step in range(N):
+        ...                                  # host executes the real step
+        session.step(step, duration_s=dt, work_units=tokens)
+    summary = session.finish()               # sample, align, attribute
+
+The host loop registers *logical* steps (MTSM sync points); ``finish`` runs
+the program on the device with a background-style sampler, places one
+marker per logical step across the active span, streams every sample
+through a bounded ring + O(1) integrator + online plateau detector + the
+``StreamAligner``, and fuses each finalized window with the table
+prediction (drift detection and recalibration included).  On real hardware
+the sampler would be a polling thread racing the app; the simulated device
+executes first and the pipeline consumes the identical sample stream.
+
+``TelemetryService`` aggregates sessions across devices/workloads with a
+JSON-exportable snapshot — what a fleet dashboard would poll.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.opcount import OpCounts
+from repro.core.predict import TablePredictor
+from repro.hw.device import Program, RunRecord, SimDevice
+from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
+                                   contiguous_markers)
+from repro.telemetry.attrib import DriftState, OnlineAttributor, mape_pct
+from repro.telemetry.sampler import DeviceSampler, SampleRing
+from repro.telemetry.stream import OnlineSteadyState, StreamingIntegrator
+
+_BYTE_COUNTERS = ("hbm_read_bytes", "hbm_write_bytes",
+                  "vmem_read_bytes", "vmem_write_bytes")
+
+
+@dataclasses.dataclass
+class _HostStep:
+    """A logical step as the host loop saw it."""
+
+    step: int
+    host_duration_s: Optional[float]
+    work_units: float
+    counters: Optional[dict]
+
+
+@dataclasses.dataclass
+class StreamSummary:
+    """What one finished stream session learned."""
+
+    name: str
+    steps: int
+    duration_s: float
+    measured_total_j: float       # streaming integral over the whole trace
+    predicted_total_j: float      # sum of per-window predictions
+    startup_j: float              # energy before the first step marker
+    mape_pct: float
+    drift: DriftState
+    recalibrations: List[float]
+    host_duration_s: Optional[float]   # summed host wall-clock, when reported
+    n_samples: int
+    dropped_samples: int
+
+    @property
+    def attributed_j(self) -> float:
+        return self.measured_total_j - self.startup_j
+
+
+class StreamSession:
+    """One workload's streaming pipeline (see module docstring)."""
+
+    def __init__(self, predictor: TablePredictor, device: SimDevice,
+                 counts: OpCounts, name: str = "workload", *,
+                 monitor=None, min_duration_s: float = 30.0,
+                 ring_capacity: int = 4096,
+                 recalibrate="rescale", store=None,
+                 detector=None, attributor: Optional[OnlineAttributor] = None):
+        self.predictor = predictor
+        self.device = device
+        self.counts = counts
+        self.name = name
+        self.monitor = monitor
+        self.min_duration_s = float(min_duration_s)
+        self.ring = SampleRing(ring_capacity)
+        self.integrator = StreamingIntegrator()
+        self.plateau = OnlineSteadyState()
+        # pass a previous session's attributor to carry the drift baseline
+        # across runs of the same workload (the long-lived fleet posture)
+        self.attributor = attributor or OnlineAttributor(
+            predictor, detector=detector, recalibrate=recalibrate,
+            store=store)
+        self.windows: List[AlignedWindow] = []
+        self.startup_j = 0.0
+        self.record: Optional[RunRecord] = None
+        self.summary: Optional[StreamSummary] = None
+        self._steps: List[_HostStep] = []
+        self._group = 1.0            # device iterations per logical step
+        self._group_counts = counts  # counts per marker window
+        # session-local slices into a possibly shared attributor
+        self._a0 = len(self.attributor.attributions)
+        self._recal0 = len(self.attributor.recalibrations)
+
+    @property
+    def attributions(self):
+        """This session's StepAttributions (shared-attributor safe)."""
+        return self.attributor.attributions[self._a0:]
+
+    @property
+    def recalibrations(self) -> List[float]:
+        """Recalibration factors applied during this session."""
+        return self.attributor.recalibrations[self._recal0:]
+
+    @property
+    def steps_registered(self) -> int:
+        return len(self._steps)
+
+    # -- host-loop surface ---------------------------------------------------
+    def step(self, step: Optional[int] = None,
+             duration_s: Optional[float] = None, work_units: float = 1.0,
+             counters: Optional[dict] = None) -> None:
+        """Register one logical step (an MTSM sync point).
+
+        ``duration_s`` is the *host* wall-clock for the step, recorded for
+        reporting (``summary.host_duration_s``); alignment itself follows
+        the device trace's own timeline — the sampler watches the device
+        clock, and the device executes the profiled counts uniformly.
+        """
+        if self.summary is not None:
+            raise RuntimeError("session already finished")
+        idx = step if step is not None else len(self._steps)
+        self._steps.append(_HostStep(idx, duration_s, work_units, counters))
+
+    def finish(self, steps: Optional[int] = None) -> StreamSummary:
+        """Sample the device run, align markers, attribute every window."""
+        if self.summary is not None:
+            return self.summary
+        n = steps if steps is not None else len(self._steps)
+        if n <= 0:
+            raise ValueError("no steps registered; call session.step(...) "
+                             "or finish(steps=N)")
+        while len(self._steps) < n:
+            self._steps.append(_HostStep(len(self._steps), None, 1.0, None))
+
+        # Long enough to pass startup and reach a steady plateau; the extra
+        # device iterations are folded evenly into the n logical windows.
+        iters = max(n, self.device.iters_for_duration(
+            self.counts, self.min_duration_s))
+        iters = (iters // n) * n                 # equal-sized groups
+        self._group = iters / n
+        self._group_counts = self.counts.scaled(self._group)
+
+        rec, sampler = DeviceSampler(self.device).run(
+            Program(self.name, self.counts, iters=iters))
+        self.record = rec
+
+        aligner = StreamAligner(on_window=self._on_window)
+        for m in self._markers(rec, n):
+            aligner.add_marker(m)
+        for s in sampler:
+            self.ring.append(s)
+            self.integrator.add(s.t_s, s.power_w)
+            self.plateau.update(s.t_s, s.power_w)
+            aligner.add_sample(s)
+        aligner.close()
+
+        host_dts = [h.host_duration_s for h in self._steps
+                    if h.host_duration_s is not None]
+        self.summary = StreamSummary(
+            name=self.name, steps=n, duration_s=rec.duration_s,
+            measured_total_j=self.integrator.energy_j,
+            predicted_total_j=float(sum(
+                a.predicted_j for a in self.attributions)),
+            startup_j=self.startup_j,
+            mape_pct=self._mape(),
+            drift=self.attributor.drift,
+            recalibrations=list(self.recalibrations),
+            host_duration_s=float(sum(host_dts)) if host_dts else None,
+            n_samples=self.integrator.n_samples,
+            dropped_samples=self.ring.dropped)
+        return self.summary
+
+    run = finish     # one-shot callers: ``model.stream(c).run(steps=N)``
+
+    # -- internals -----------------------------------------------------------
+    def _markers(self, rec: RunRecord, n: int) -> List[Marker]:
+        """One marker per logical step across the trace's active span.
+
+        The active-span start is read from telemetry (the util ramp), never
+        from the device's hidden model.
+        """
+        t, u = rec.trace.times_s, rec.trace.util
+        umax = float(np.max(u)) if len(u) else 0.0
+        if umax > 0:
+            t_act = float(t[np.argmax(u >= umax - 1e-9)])
+        else:
+            t_act = float(t[0])
+        t_end = float(t[-1])
+        if t_act >= t_end:
+            t_act = float(t[0])
+        markers: List[Marker] = []
+        if t_act > t[0]:
+            markers.append(Marker(step=-1, name="__startup__",
+                                  t_start_s=float(t[0]), t_end_s=t_act))
+        bounds = np.linspace(t_act, t_end, n + 1)
+        markers.extend(contiguous_markers(
+            bounds, names=[f"{self.name}[{h.step}]" for h in self._steps[:n]],
+            first_step=0))
+        return markers
+
+    def _on_window(self, win: AlignedWindow) -> None:
+        self.windows.append(win)
+        if win.step < 0:                      # pre-marker span: not a step
+            self.startup_j += win.measured_j
+            return
+        host = self._steps[win.step] if win.step < len(self._steps) else None
+        counters = host.counters if host and host.counters else \
+            self._window_counters(win)
+        self.attributor.attribute(win, self._group_counts, counters=counters)
+        if self.monitor is not None:
+            # the window spans _group repetitions of the logical step, so
+            # its work is the host step's work scaled by the same factor —
+            # keeping joules_per_unit_work a true per-unit figure
+            work = (host.work_units if host else 1.0) * self._group
+            self.monitor.observe(
+                host.step if host else win.step, self._group_counts,
+                win.duration_s, counters=counters, work_units=work,
+                measured_j=win.measured_j)
+
+    def _window_counters(self, win: AlignedWindow) -> Optional[dict]:
+        if self.record is None:
+            return None
+        iters = max(float(self.record.iters), 1.0)
+        frac = self._group / iters
+        return {k: self.record.counters.get(k, 0.0) * frac
+                for k in _BYTE_COUNTERS}
+
+    def _mape(self) -> float:
+        return mape_pct(self.attributions)
+
+    # -- inspection ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Live (or final) state for dashboards; JSON-safe.
+
+        All statistics are session-local even when the attributor is
+        shared across sessions (drift state is the live detector's).
+        """
+        latest = self.ring.latest()
+        out = {
+            "name": self.name,
+            "device": self.device.name,
+            "steps_registered": len(self._steps),
+            "samples": self.ring.total,
+            "dropped_samples": self.ring.dropped,
+            "measured_j": self.integrator.energy_j,
+            "power_w": latest.power_w if latest else None,
+            "steady": (not math.isnan(self.plateau.start_s)),
+            "windows": len(self.windows),
+            "mape_pct": self._mape(),
+            "drift_ratio": self.attributor.drift.ratio,
+            "drifting": self.attributor.drift.drifting,
+            "recalibrations": list(self.recalibrations),
+            "finished": self.summary is not None,
+        }
+        if self.summary is not None:
+            out["startup_j"] = self.summary.startup_j
+            out["predicted_total_j"] = self.summary.predicted_total_j
+        return out
+
+
+class TelemetryService:
+    """Multi-device aggregator: register sessions, export one snapshot.
+
+    The production shape of the QMCPACK workflow (§5.3.2): every
+    device/workload pair streams through its own session; the service is
+    the single pane a dashboard or alerting hook polls.
+    """
+
+    def __init__(self):
+        self._sessions: Dict[str, StreamSession] = {}
+
+    def register(self, session: StreamSession,
+                 key: Optional[str] = None) -> StreamSession:
+        key = key or f"{session.device.name}/{session.name}"
+        if key in self._sessions:
+            raise KeyError(f"session {key!r} already registered")
+        self._sessions[key] = session
+        return session
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def sessions(self) -> Dict[str, StreamSession]:
+        return dict(self._sessions)
+
+    def snapshot(self) -> dict:
+        per = {key: s.snapshot() for key, s in self._sessions.items()}
+        anomalies = sum(len(s.monitor.anomalies)
+                        for s in self._sessions.values()
+                        if s.monitor is not None)
+        return {
+            "sessions": per,
+            "fleet": {
+                "n_sessions": len(per),
+                "measured_j": sum(p["measured_j"] for p in per.values()),
+                "samples": sum(p["samples"] for p in per.values()),
+                "drifting": sorted(k for k, p in per.items()
+                                   if p["drifting"]),
+                "anomalies": anomalies,
+            },
+        }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

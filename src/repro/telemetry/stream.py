@@ -1,0 +1,129 @@
+"""Streaming power-trace math — one implementation for offline and online.
+
+The offline measurement path (``repro.core.measure``) and the live telemetry
+pipeline must agree to numerical precision, or a fleet node would "drift"
+against its own post-hoc analysis.  The whole-array primitives
+(``trapezoid_energy``, ``rolling_std``) are defined in ``core.measure`` —
+the engine layer — and re-exported here; this module adds their streaming
+counterparts:
+
+* ``StreamingIntegrator`` — the Fig. 4 trapezoid integral as an
+  O(1)-per-sample accumulator (a chunked ``extend`` for array feeds).  The
+  incremental sum of segment areas is the same computation
+  ``np.trapezoid`` performs, so the two are equal to float round-off.
+* ``OnlineSteadyState`` — the offline plateau criterion evaluated sample
+  by sample over a bounded window, for live steady-state detection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.measure import rolling_std, trapezoid_energy
+
+__all__ = ["trapezoid_energy", "rolling_std", "StreamingIntegrator",
+           "OnlineSteadyState", "PlateauState"]
+
+
+class StreamingIntegrator:
+    """Incremental trapezoid integration: O(1) state, O(1) per sample.
+
+    ``add`` ingests one sample, ``extend`` a chunk (vectorized); ``energy_j``
+    is always the integral over everything seen so far.  Feeding a whole
+    trace through either path reproduces ``trapezoid_energy`` exactly.
+    """
+
+    def __init__(self) -> None:
+        self.energy_j = 0.0
+        self.n_samples = 0
+        self._t_last: Optional[float] = None
+        self._p_last = 0.0
+
+    def add(self, t_s: float, power_w: float) -> float:
+        """Ingest one sample; returns the energy of the new segment."""
+        seg = 0.0
+        if self._t_last is not None:
+            seg = 0.5 * (power_w + self._p_last) * (t_s - self._t_last)
+            self.energy_j += seg
+        self._t_last, self._p_last = float(t_s), float(power_w)
+        self.n_samples += 1
+        return seg
+
+    def extend(self, times_s: np.ndarray, power_w: np.ndarray) -> float:
+        """Ingest a chunk of samples; returns the chunk's energy."""
+        t = np.asarray(times_s, dtype=float)
+        p = np.asarray(power_w, dtype=float)
+        if t.size == 0:
+            return 0.0
+        before = self.energy_j
+        if self._t_last is not None:
+            t = np.concatenate(([self._t_last], t))
+            p = np.concatenate(([self._p_last], p))
+        self.energy_j += trapezoid_energy(t, p)
+        self._t_last, self._p_last = float(t[-1]), float(p[-1])
+        self.n_samples += int(np.asarray(times_s).size)
+        return self.energy_j - before
+
+    @property
+    def t_last(self) -> Optional[float]:
+        return self._t_last
+
+    @property
+    def p_last(self) -> float:
+        return self._p_last
+
+
+@dataclasses.dataclass
+class PlateauState:
+    """Live steady-state verdict after the latest sample."""
+
+    steady: bool                 # currently inside a detected plateau
+    start_s: float               # plateau start (nan until detected)
+    mean_w: float                # rolling mean power over the window
+    std_w: float                 # rolling std over the window
+
+
+class OnlineSteadyState:
+    """Sample-by-sample plateau detection over a bounded rolling window.
+
+    The criterion matches the offline detector in ``repro.core.measure``:
+    a window of ``window_s`` seconds whose power std stays below
+    ``max(rel_tol * mean, abs_floor_w)``.  State is O(window): a deque of
+    (t, p) plus running sum/sum-of-squares.
+    """
+
+    def __init__(self, window_s: float = 5.0, rel_tol: float = 0.02,
+                 abs_floor_w: float = 1.5, min_samples: int = 4):
+        self.window_s = float(window_s)
+        self.rel_tol = float(rel_tol)
+        self.abs_floor_w = float(abs_floor_w)
+        self.min_samples = int(min_samples)
+        self._buf: deque = deque()
+        self._s1 = 0.0
+        self._s2 = 0.0
+        self.start_s = math.nan
+
+    def update(self, t_s: float, power_w: float) -> PlateauState:
+        self._buf.append((float(t_s), float(power_w)))
+        self._s1 += power_w
+        self._s2 += power_w * power_w
+        while self._buf and t_s - self._buf[0][0] > self.window_s:
+            _, old = self._buf.popleft()
+            self._s1 -= old
+            self._s2 -= old * old
+        n = len(self._buf)
+        mean = self._s1 / n
+        var = max(self._s2 / n - mean * mean, 0.0)
+        std = math.sqrt(var)
+        steady = (n >= self.min_samples
+                  and std < max(self.rel_tol * abs(mean), self.abs_floor_w))
+        if steady and math.isnan(self.start_s):
+            self.start_s = self._buf[0][0]
+        elif not steady:
+            self.start_s = math.nan
+        return PlateauState(steady=steady, start_s=self.start_s,
+                            mean_w=mean, std_w=std)

@@ -13,6 +13,8 @@ from repro.train import checkpoint as ck
 from repro.train import optimizer as opt_mod
 from repro.train.step import init_state
 
+pytestmark = pytest.mark.slow   # heavy model/distributed tier
+
 
 def _state():
     cfg = cfgs.get_smoke_config("qwen2-0.5b")

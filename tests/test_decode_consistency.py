@@ -11,6 +11,8 @@ import pytest
 from repro import configs as cfgs
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow   # heavy model/distributed tier
+
 B, S = 2, 8
 
 # f32 smoke variants for tight comparison

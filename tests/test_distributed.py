@@ -7,6 +7,8 @@ import os
 
 import pytest
 
+pytestmark = pytest.mark.slow   # heavy model/distributed tier
+
 ENV = dict(os.environ,
            XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -13,6 +13,8 @@ from repro.models import model as M
 from repro.train import optimizer as opt_mod
 from repro.train.step import init_state, make_train_step
 
+pytestmark = pytest.mark.slow   # heavy model/distributed tier
+
 B, S = 2, 16
 
 

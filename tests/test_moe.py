@@ -8,6 +8,9 @@ import numpy as np
 from repro import configs as cfgs
 from repro.models import moe
 from repro.models.layers import init_from_specs
+import pytest
+
+pytestmark = pytest.mark.slow   # heavy model/distributed tier
 
 
 def _setup(t=64, d=16, ff=32, e=4, k=2, cap=8.0):

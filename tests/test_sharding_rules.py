@@ -15,7 +15,7 @@ from repro.parallel import act_sharding, sharding as sh
 def mesh():
     # single-device CPU: mesh of 1x1 still exercises the rule logic for
     # divisibility via axis sizes of 1; use AbstractMesh for 16x16 shapes
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return sh.abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_ff_goes_to_model(mesh):
@@ -54,7 +54,7 @@ def test_batch_pspec_falls_back(mesh):
 
 
 def test_multipod_fsdp_axes():
-    mesh3 = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = sh.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     spec = PSpec((4608, 36864), ("embed", "ff"))
     got = sh.spec_to_pspec(spec, mesh3)
     assert got == P(("pod", "data"), "model")
