@@ -1,0 +1,157 @@
+"""Prediction throughput — the fleet-scale hot path (Eq. 3 as matrix algebra).
+
+Times three layers of the vectorized currency:
+
+* ``single_predict`` — one ``TablePredictor.predict`` call (µs/call);
+* ``predict_loop`` vs ``predict_many`` — ≥1000 synthetic programs priced one
+  at a time vs as one stacked counts matrix (``predict_batch``), asserting
+  the batched ``Prediction`` totals are **bitwise identical** to the loop's;
+* ``solver_assembly`` — ``solver.build_system`` over the real microbenchmark
+  suite (the training-phase matrix assembled in one shot).
+
+Emits JSON (``--out``, default ``results/BENCH_predict_throughput.json``) so
+the perf trajectory populates run over run, plus the repo's CSV line format
+on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import coverage, isa, microbench, solver
+from repro.core.opcount import OpCounts
+from repro.core.predict import TablePredictor
+from repro.core.table import EnergyTable
+from repro.hw.device import RunRecord, SensorTrace
+
+N_PROGRAMS = 1000
+SEED = 7
+
+
+def synthetic_table() -> EnergyTable:
+    """Deterministic stand-in table (throughput doesn't care about values)."""
+    rng = np.random.default_rng(SEED)
+    direct = {c.name: float(e) for c, e in
+              zip(isa.OP_CLASSES, rng.uniform(1e-12, 6e-11, len(isa.OP_CLASSES)))}
+    table = EnergyTable(system="bench", p_const=40.0, p_static=55.0,
+                        direct=direct)
+    coverage.compute_bucket_means(table)
+    return table
+
+
+def synthetic_programs(n: int):
+    """Random-but-plausible op-count profiles over the canonical classes."""
+    rng = np.random.default_rng(SEED + 1)
+    names = [c.name for c in isa.OP_CLASSES]
+    programs, durations = [], []
+    for _ in range(n):
+        c = OpCounts()
+        for cls in rng.choice(names, size=rng.integers(8, 28), replace=False):
+            c.add(str(cls), float(rng.uniform(1e3, 1e9)))
+        c.boundary_read_bytes = float(rng.uniform(1e6, 1e10))
+        c.boundary_write_bytes = float(rng.uniform(1e6, 1e10))
+        c.fused_bytes = float(rng.uniform(1e6, 1e10))
+        c.naive_bytes = c.boundary_bytes + c.fused_bytes
+        programs.append(c)
+        durations.append(float(rng.uniform(0.5, 30.0)))
+    return programs, durations
+
+
+def _fake_record(bench, iters: int) -> RunRecord:
+    t = np.array([0.0, 1.0])
+    trace = SensorTrace(t, np.array([100.0, 100.0]), np.ones(2),
+                        np.full(2, 50.0))
+    return RunRecord(name=bench.name, duration_s=60.0, iters=iters,
+                     trace=trace, energy_counter_j=6000.0,
+                     counters={"hbm_read_bytes": 1e9, "hbm_write_bytes": 1e9,
+                               "vmem_read_bytes": 1e8, "vmem_write_bytes": 1e8})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_predict_throughput.json")
+    ap.add_argument("--n", type=int, default=N_PROGRAMS)
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless predict_many beats the loop by this")
+    args = ap.parse_args(argv)
+
+    predictor = TablePredictor(synthetic_table())
+    predictor.warm()
+    programs, durations = synthetic_programs(args.n)
+
+    # warm the kernel path once so neither contender pays first-call costs
+    predictor.predict(programs[0], durations[0])
+
+    t0 = time.perf_counter()
+    loop_preds = [predictor.predict(c, d)
+                  for c, d in zip(programs, durations)]
+    t_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batch_preds = predictor.predict_batch(programs, durations)
+    t_batch = time.perf_counter() - t0
+
+    identical = all(
+        a.total_j == b.total_j and a.dynamic_j == b.dynamic_j
+        and a.coverage == b.coverage
+        for a, b in zip(loop_preds, batch_preds))
+    speedup = t_loop / max(t_batch, 1e-12)
+
+    n_single = 200
+    t0 = time.perf_counter()
+    for c, d in zip(programs[:n_single], durations[:n_single]):
+        predictor.predict(c, d)
+    us_single = (time.perf_counter() - t0) / n_single * 1e6
+
+    suite = microbench.build_suite(isa_gen=0)
+    targets = microbench.benched_classes(suite)
+    records = [_fake_record(b, 1000) for b in suite]
+    energies = [1.0] * len(suite)
+    n_asm = 20
+    t0 = time.perf_counter()
+    for _ in range(n_asm):
+        system = solver.build_system(suite, records, energies, targets)
+    us_assembly = (time.perf_counter() - t0) / n_asm * 1e6
+
+    result = {
+        "benchmark": "predict_throughput",
+        "n_programs": args.n,
+        "predict_loop_us_total": t_loop * 1e6,
+        "predict_many_us_total": t_batch * 1e6,
+        "predict_many_us_per_program": t_batch / args.n * 1e6,
+        "speedup_many_vs_loop": speedup,
+        "totals_bitwise_identical": identical,
+        "single_predict_us": us_single,
+        "solver_assembly_us": us_assembly,
+        "solver_matrix_shape": list(system.matrix.shape),
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    record("predict_single", us_single, f"us_per_call={us_single:.1f}")
+    record("predict_many", t_batch / args.n * 1e6,
+           f"speedup_vs_loop=x{speedup:.1f} identical={identical}")
+    record("solver_assembly", us_assembly,
+           f"shape={system.matrix.shape[0]}x{system.matrix.shape[1]}")
+    print(f"wrote {out}")
+
+    if not identical:
+        print("FAIL: batched totals are not bitwise-identical to the loop",
+              file=sys.stderr)
+        return 1
+    if speedup < args.min_speedup:
+        print(f"FAIL: speedup x{speedup:.1f} < required "
+              f"x{args.min_speedup:.1f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

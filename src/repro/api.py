@@ -253,18 +253,21 @@ class EnergyModel:
         """Batched prediction over many workloads.
 
         Accepts ``PredictJob``s or ``(source, duration_s[, counters])``
-        tuples.  All jobs share this model's precomputed class->energy
-        vectors, so per-job cost is a dict hit per class rather than a
-        direct->scaled->bucket table walk — the fleet-scale path.
+        tuples.  The whole batch is assembled into one counts matrix and
+        priced in a single vectorized pass over this model's class->energy
+        vectors (``TablePredictor.predict_batch``) — the fleet-scale path.
+        Totals are bitwise-identical to calling ``predict`` per job.
         """
-        out: List[Prediction] = []
-        for job in jobs:
-            if not isinstance(job, PredictJob):
-                job = PredictJob(*job)
-            out.append(self.predictor.predict(
-                self._resolve(job.source), job.duration_s,
-                counters=job.counters, mode=job.mode or mode))
-        return out
+        resolved = [job if isinstance(job, PredictJob) else PredictJob(*job)
+                    for job in jobs]
+        if not resolved:
+            return []
+        modes = [job.mode or mode for job in resolved]
+        return self.predictor.predict_batch(
+            [self._resolve(job.source) for job in resolved],
+            [job.duration_s for job in resolved],
+            [job.counters for job in resolved],
+            mode=modes[0] if len(set(modes)) <= 1 else modes)
 
     def attribute(self, source: Union[ProfileSource, OpCounts, Callable],
                   *args, duration_s: Optional[float] = None,

@@ -33,6 +33,15 @@ from repro.hw.systems import get_device
 _ACCELWATTCH_REF_SYSTEM = "sim-v5e-ref"
 
 
+def _bucket_unit_sums(counts: OpCounts) -> np.ndarray:
+    """Units per bucket code (``isa.BUCKET_ORDER``) in one bincount."""
+    v = counts._vec
+    if not v.size:
+        return np.zeros(len(isa.BUCKET_ORDER))
+    codes = isa.CLASS_INDEX.bucket_codes(v.size)
+    return np.bincount(codes, weights=v, minlength=len(isa.BUCKET_ORDER))
+
+
 # ---------------------------------------------------------------------------
 # AccelWattch-style.
 # ---------------------------------------------------------------------------
@@ -45,17 +54,14 @@ class AccelWattchModel:
 
     def predict_energy(self, counts: OpCounts, duration_s: float,
                        counters: Optional[dict] = None) -> float:
-        rates: Dict[str, float] = {}
-        for cls, units in counts.units.items():
-            b = isa.bucket_of(cls)
-            if b is not None:
-                rates[b] = rates.get(b, 0.0) + units / duration_s
+        rates = _bucket_unit_sums(counts) / duration_s
         if counters:
             mem_rate = sum(counters.get(k, 0.0) for k in
                            ("hbm_read_bytes", "hbm_write_bytes")) / duration_s
-            rates[isa.BUCKET_MEM] = rates.get(isa.BUCKET_MEM, 0.0) + mem_rate
-        p = self.p_idle + sum(self.buckets.get(b, 0.0) * r
-                              for b, r in rates.items())
+            rates[isa.BUCKET_CODE[isa.BUCKET_MEM]] += mem_rate
+        p = self.p_idle + sum(self.buckets.get(b, 0.0) * rates[code]
+                              for b, code in isa.BUCKET_CODE.items()
+                              if b != isa.UNKNOWN_BUCKET)
         return p * duration_s
 
 
@@ -67,16 +73,20 @@ def train_accelwattch(ref_system: str = _ACCELWATTCH_REF_SYSTEM,
     buckets = sorted(set(isa.ALL_BUCKETS))
     col = {b: j for j, b in enumerate(buckets)}
     rows, pw = [], []
+    counter_ids = [isa.CLASS_INDEX.intern(c) for c in COUNTER_CLASSES]
     for bench in suite:
         iters = dev.iters_for_duration(bench.counts, duration_s)
         rec = dev.run(Program(bench.name, bench.counts, iters=iters,
                               is_nanosleep=bench.is_nanosleep))
         t = rec.duration_s
+        masked = bench.counts.vector()
+        masked[counter_ids] = 0.0        # memory column fed from counters
+        codes = isa.CLASS_INDEX.bucket_codes(masked.size)
+        sums = np.bincount(codes, weights=masked,
+                           minlength=len(isa.BUCKET_ORDER))
         r = np.zeros(len(buckets))
-        for cls, units in bench.counts.units.items():
-            b = isa.bucket_of(cls)
-            if b is not None and cls not in COUNTER_CLASSES:
-                r[col[b]] += units * rec.iters / t
+        for b in buckets:
+            r[col[b]] = sums[isa.BUCKET_CODE[b]] * rec.iters / t
         r[col[isa.BUCKET_MEM]] += (rec.counters["hbm_read_bytes"]
                                    + rec.counters["hbm_write_bytes"]) / t
         rows.append(r)
@@ -96,14 +106,23 @@ def train_accelwattch(ref_system: str = _ACCELWATTCH_REF_SYSTEM,
 class GuserModel:
     def __init__(self, per_unit: Dict[str, float]):
         self.per_unit = per_unit        # J/unit with static+const amortized
+        self._unit_vec = np.zeros(0)    # per_unit over the class index
+
+    def _vec(self, n: int) -> np.ndarray:
+        if self._unit_vec.size < n:
+            ids = {cls: isa.CLASS_INDEX.intern(cls)
+                   for cls in self.per_unit}       # intern before sizing
+            v = np.zeros(max(n, len(isa.CLASS_INDEX)))
+            for cls, e in self.per_unit.items():
+                if not cls.startswith("ctl."):   # Guser: no control flow
+                    v[ids[cls]] = e
+            self._unit_vec = v
+        return self._unit_vec[:n]
 
     def predict_energy(self, counts: OpCounts, duration_s: float,
                        counters: Optional[dict] = None) -> float:
-        e = 0.0
-        for cls, units in counts.units.items():
-            if cls.startswith("ctl."):
-                continue                 # Guser does not model control flow
-            e += units * self.per_unit.get(cls, 0.0)
+        v = counts._vec
+        e = float(v @ self._vec(v.size)) if v.size else 0.0
         if counters:
             for key, cls in (("hbm_read_bytes", "hbm.read"),
                              ("hbm_write_bytes", "hbm.write")):

@@ -1,0 +1,416 @@
+"""The shared op-count accumulation core used by both counter front-ends.
+
+``repro.core.opcount`` (jaxpr walk) and ``repro.hlo.opcount`` (optimized-HLO
+walk) are *front-ends*: they know how to read their representation, but every
+accounting decision — how a dot prices onto an MMA generation, how a convert
+picks its class, what a collective puts on the wire, how a loop body
+multiplies through its trip count, how fusion-boundary vs fused traffic is
+booked — lives here, once.  The two counters can therefore never drift in
+what a unit of work *means*, only in what they can observe.
+
+The currency itself also lives here: ``OpCounts`` keeps its per-class units
+as a dense NumPy vector over ``isa.CLASS_INDEX`` (the paper's Eq. 3 as an
+actual dot-product axis), with a read-mostly dict view (``units``) kept for
+compatibility with existing callers and serialized artifacts.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import isa
+
+__all__ = [
+    "OpCounts", "UnitsView", "dtype_tag", "mma_head", "add_dot", "add_conv",
+    "convert_class", "collective_wire_bytes", "COLLECTIVE_WIRE",
+    "add_collective", "merge_loop_body", "merge_best_branch", "scatter_class",
+    "sort_units", "add_reduce", "counts_matrix",
+]
+
+# ---------------------------------------------------------------------------
+# Dtype grouping (§3.4).  One table covering both front-ends' raw spellings:
+# NumPy dtype names (jaxpr avals) go through ``isa.group_dtype``; HLO type
+# tokens are folded here onto the same grouped tags.
+# ---------------------------------------------------------------------------
+_HLO_DTYPE_TAG = {
+    "f64": "f32", "f32": "f32", "f16": "bf16", "bf16": "bf16",
+    "f8e4m3fn": "fp8", "f8e5m2": "fp8", "f8e4m3": "fp8",
+    "s64": "int", "s32": "int", "s16": "int", "s8": "int",
+    "u64": "int", "u32": "int", "u16": "int", "u8": "int",
+    "s4": "int4", "u4": "int4", "pred": "int",
+}
+
+
+def dtype_tag(name: str) -> str:
+    """Grouped dtype tag for a NumPy dtype name or an HLO type token."""
+    tag = _HLO_DTYPE_TAG.get(name)
+    return tag if tag is not None else isa.group_dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# The currency.
+# ---------------------------------------------------------------------------
+_MUTATION_WARNED = False
+
+
+def _warn_units_mutation() -> None:
+    global _MUTATION_WARNED
+    if not _MUTATION_WARNED:
+        _MUTATION_WARNED = True
+        warnings.warn(
+            "mutating OpCounts.units as a dict is deprecated; use "
+            "OpCounts.add(cls, n) — writes are redirected through the "
+            "class index", DeprecationWarning, stacklevel=3)
+
+
+class UnitsView(Mapping):
+    """Dict-compatible view over an ``OpCounts`` unit vector.
+
+    Reads behave like the old ``defaultdict(float)``: absent (or zeroed)
+    classes read as missing, ``[]`` on a missing key returns ``0.0`` rather
+    than raising.  Writes still work for out-of-tree callers but warn once
+    and are redirected through the class index (the supported write path is
+    ``OpCounts.add``).
+    """
+
+    __slots__ = ("_counts",)
+
+    def __init__(self, counts: "OpCounts"):
+        self._counts = counts
+
+    # -- reads --------------------------------------------------------------
+    def _nonzero_ids(self) -> np.ndarray:
+        return np.nonzero(self._counts._vec)[0]
+
+    def __getitem__(self, cls: str) -> float:
+        i = isa.CLASS_INDEX.id(cls)
+        v = self._counts._vec
+        return float(v[i]) if i is not None and i < v.size else 0.0
+
+    def get(self, cls: str, default=None):
+        i = isa.CLASS_INDEX.id(cls)
+        v = self._counts._vec
+        if i is None or i >= v.size or v[i] == 0.0:
+            return default
+        return float(v[i])
+
+    def __contains__(self, cls) -> bool:
+        i = isa.CLASS_INDEX.id(cls)
+        v = self._counts._vec
+        return i is not None and i < v.size and v[i] != 0.0
+
+    def __iter__(self) -> Iterator[str]:
+        name = isa.CLASS_INDEX.name
+        return (name(int(i)) for i in self._nonzero_ids())
+
+    def __len__(self) -> int:
+        return int(self._nonzero_ids().size)
+
+    def items(self):
+        v = self._counts._vec
+        name = isa.CLASS_INDEX.name
+        return [(name(int(i)), float(v[i])) for i in self._nonzero_ids()]
+
+    def keys(self):
+        return list(self)
+
+    def values(self):
+        v = self._counts._vec
+        return [float(v[i]) for i in self._nonzero_ids()]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, UnitsView):
+            return dict(self.items()) == dict(other.items())
+        if isinstance(other, Mapping):
+            return dict(self.items()) == dict(other)
+        return NotImplemented
+
+    def __ne__(self, other) -> bool:
+        eq = self.__eq__(other)
+        return NotImplemented if eq is NotImplemented else not eq
+
+    def __repr__(self) -> str:
+        return f"UnitsView({dict(self.items())!r})"
+
+    # -- deprecated writes --------------------------------------------------
+    def __setitem__(self, cls: str, value: float) -> None:
+        _warn_units_mutation()
+        c = self._counts
+        i = isa.CLASS_INDEX.intern(cls)
+        c._ensure(i + 1)
+        c._vec[i] = float(value)
+
+    def __delitem__(self, cls: str) -> None:
+        _warn_units_mutation()
+        i = isa.CLASS_INDEX.id(cls)
+        if i is not None and i < self._counts._vec.size:
+            self._counts._vec[i] = 0.0
+
+
+class OpCounts:
+    """Work-unit counts per canonical op class + traffic/FLOP aggregates.
+
+    ``units`` is stored as a dense float64 vector over ``isa.CLASS_INDEX``
+    (``add``/``merge``/``scaled`` are vector ops; ``vector(n)`` exposes a
+    zero-padded copy for matrix assembly).  The ``units`` property is a
+    dict-compatible view for existing callers.
+    """
+
+    __slots__ = ("_vec", "naive_bytes", "boundary_read_bytes",
+                 "boundary_write_bytes", "fused_bytes", "flops", "exec_count",
+                 "dispatch_count", "max_buffer_bytes", "mxu_macs_total",
+                 "mxu_macs_aligned")
+
+    def __init__(self, units: Optional[Mapping[str, float]] = None):
+        self._vec = np.zeros(len(isa.CLASS_INDEX))
+        self.naive_bytes = 0.0          # all operand+result traffic
+        self.boundary_read_bytes = 0.0  # fusion-boundary reads
+        self.boundary_write_bytes = 0.0  # fusion-boundary writes
+        self.fused_bytes = 0.0          # traffic that stays inside fusions
+        self.flops = 0.0            # arithmetic FLOPs (2*MACs for dots/convs)
+        self.exec_count = 0.0       # total dynamic eqn executions
+        self.dispatch_count = 0.0   # fusion roots ≈ kernel dispatches
+        self.max_buffer_bytes = 0.0  # largest single tensor (working-set hint)
+        self.mxu_macs_total = 0.0
+        self.mxu_macs_aligned = 0.0
+        if units:
+            for cls, n in units.items():
+                self.add(cls, float(n))
+
+    # -- vector plumbing ----------------------------------------------------
+    def _ensure(self, n: int) -> None:
+        if self._vec.size < n:
+            grown = np.zeros(max(n, len(isa.CLASS_INDEX)))
+            grown[:self._vec.size] = self._vec
+            self._vec = grown
+
+    def vector(self, n: Optional[int] = None) -> np.ndarray:
+        """Zero-padded copy of the unit vector, length ``n`` (default: the
+        current ``CLASS_INDEX`` size)."""
+        want = len(isa.CLASS_INDEX) if n is None else int(n)
+        out = np.zeros(want)
+        m = min(want, self._vec.size)
+        out[:m] = self._vec[:m]
+        return out
+
+    @property
+    def units(self) -> UnitsView:
+        return UnitsView(self)
+
+    @units.setter
+    def units(self, value: Mapping[str, float]) -> None:
+        _warn_units_mutation()
+        self._vec = np.zeros(len(isa.CLASS_INDEX))
+        for cls, n in value.items():
+            self.add(cls, float(n))
+
+    @property
+    def boundary_bytes(self) -> float:
+        return self.boundary_read_bytes + self.boundary_write_bytes
+
+    # -- accumulation -------------------------------------------------------
+    def add(self, cls: str, n: float) -> None:
+        if n:
+            i = isa.CLASS_INDEX.intern(cls)
+            self._ensure(i + 1)
+            self._vec[i] += float(n)
+
+    def add_io(self, b_read: float, b_write: float, fused: float,
+               mult: float = 1.0) -> None:
+        """Book fusion-boundary reads/writes and fused (resident) traffic."""
+        self.naive_bytes += (b_read + b_write + fused) * mult
+        self.boundary_read_bytes += b_read * mult
+        self.boundary_write_bytes += b_write * mult
+        self.fused_bytes += fused * mult
+
+    def add_fused_io(self, b: float, mult: float = 1.0) -> None:
+        """Book traffic that never leaves the fusion (VMEM/VREG resident)."""
+        self.naive_bytes += b * mult
+        self.fused_bytes += b * mult
+
+    def note_buffer(self, b: float) -> None:
+        self.max_buffer_bytes = max(self.max_buffer_bytes, b)
+
+    def merge(self, other: "OpCounts", mult: float = 1.0) -> None:
+        ov = other._vec
+        self._ensure(ov.size)
+        if mult == 1.0:
+            self._vec[:ov.size] += ov
+        else:
+            self._vec[:ov.size] += ov * mult
+        self.naive_bytes += other.naive_bytes * mult
+        self.boundary_read_bytes += other.boundary_read_bytes * mult
+        self.boundary_write_bytes += other.boundary_write_bytes * mult
+        self.fused_bytes += other.fused_bytes * mult
+        self.flops += other.flops * mult
+        self.exec_count += other.exec_count * mult
+        self.dispatch_count += other.dispatch_count * mult
+        self.max_buffer_bytes = max(self.max_buffer_bytes,
+                                    other.max_buffer_bytes)
+        self.mxu_macs_total += other.mxu_macs_total * mult
+        self.mxu_macs_aligned += other.mxu_macs_aligned * mult
+
+    def scaled(self, mult: float) -> "OpCounts":
+        out = OpCounts()
+        out.merge(self, mult)
+        return out
+
+    def total_units(self) -> float:
+        return float(self._vec.sum())
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dict(self.units.items())
+        d["__naive_bytes__"] = self.naive_bytes
+        d["__flops__"] = self.flops
+        return d
+
+    def __repr__(self) -> str:
+        return (f"OpCounts(classes={int(np.count_nonzero(self._vec))}, "
+                f"units={self.total_units():.3e}, flops={self.flops:.3e})")
+
+
+# ---------------------------------------------------------------------------
+# MXU accounting: MMA-generation selection + dot/conv pricing.
+# ---------------------------------------------------------------------------
+def mma_head(isa_gen: int, batch: float, m: float, n: float, k: float) -> str:
+    """Arch-aware MMA opcode form for a dot (NSight reports HGMMA on H100
+    where V100 reports HMMA — the profiler reports what the generation
+    issues): gen>=2 batched dots lower to the warp-group form, gen>=1
+    narrow dots to the narrow-issue form."""
+    if isa_gen >= 2 and batch > 1:
+        return "dot_group"
+    if isa_gen >= 1 and min(m, n, k) < 128:
+        return "dot_small"
+    return "dot"
+
+
+def add_dot(out: OpCounts, *, isa_gen: int, dt: str, batch: float, m: float,
+            n: float, k: float, macs: Optional[float] = None,
+            mult: float = 1.0) -> None:
+    """Price one dot: MMA form, MACs, FLOPs, 128-alignment bookkeeping."""
+    macs = float(batch * m * n * k) if macs is None else float(macs)
+    head = mma_head(isa_gen, batch, m, n, k)
+    out.add(isa.group_class(f"{head}.{dt}"), mult * macs)
+    out.flops += 2.0 * macs * mult
+    out.mxu_macs_total += macs * mult
+    if m % 128 == 0 and n % 128 == 0 and k % 128 == 0:
+        out.mxu_macs_aligned += macs * mult
+
+
+def add_conv(out: OpCounts, *, dt: str, macs: float, mult: float = 1.0) -> None:
+    """Price one convolution (convs are rarely 128-aligned)."""
+    out.add(isa.group_class(f"conv.{dt}"), mult * macs)
+    out.flops += 2.0 * macs * mult
+    out.mxu_macs_total += macs * mult
+
+
+# ---------------------------------------------------------------------------
+# Convert-class selection (the paper's F2F family, §5.3.1).
+# ---------------------------------------------------------------------------
+_FLOAT_TAGS = ("f32", "bf16", "fp8")
+
+
+def convert_class(src: str, dst: str) -> Optional[str]:
+    """Canonical class for a dtype conversion; ``None`` when free."""
+    if src == dst:
+        return None
+    if src in _FLOAT_TAGS and dst in _FLOAT_TAGS:
+        return f"convert.{src}.{dst}"
+    if src in ("int", "int4"):
+        return "convert.int.float"
+    return "convert.float.int"
+
+
+# ---------------------------------------------------------------------------
+# Collectives: wire bytes per chip as a function of the *local shard* bytes.
+# The jaxpr front-end observes per-chip (shard_map) operands; the HLO
+# front-end observes result shapes — ``from_result`` converts.
+# ---------------------------------------------------------------------------
+COLLECTIVE_WIRE = {
+    "ici.all_reduce": lambda b, n: 2.0 * b * (n - 1) / max(n, 1),
+    "ici.all_gather": lambda b, n: b * (n - 1),
+    "ici.reduce_scatter": lambda b, n: b * (n - 1) / max(n, 1),
+    "ici.all_to_all": lambda b, n: b * (n - 1) / max(n, 1),
+    "ici.permute": lambda b, n: b,
+}
+
+# result bytes -> the local reference size each formula is written against
+_RESULT_TO_LOCAL = {
+    "ici.all_gather": lambda r, n: r / max(n, 1),   # result is n x shard
+    "ici.reduce_scatter": lambda r, n: r * n,       # result is input / n
+}
+
+
+def collective_wire_bytes(cls: str, bytes_: float, n: int, *,
+                          from_result: bool = False) -> float:
+    """Per-chip wire bytes of a collective over ``n`` participants."""
+    if from_result:
+        bytes_ = _RESULT_TO_LOCAL.get(cls, lambda r, _n: r)(bytes_, n)
+    return COLLECTIVE_WIRE[cls](bytes_, n)
+
+
+def add_collective(out: OpCounts, cls: str, bytes_: float, n: int,
+                   mult: float = 1.0, *, from_result: bool = False) -> None:
+    if n > 1:
+        out.add(cls, mult * collective_wire_bytes(cls, bytes_, n,
+                                                  from_result=from_result))
+
+
+# ---------------------------------------------------------------------------
+# Control flow: trip-count multiplication and worst-branch pricing.
+# ---------------------------------------------------------------------------
+def merge_loop_body(out: OpCounts, body: OpCounts, trips: float,
+                    mult: float = 1.0) -> None:
+    """Fold a loop body through its trip count; book the loop control."""
+    out.merge(body, mult * trips)
+    out.add("ctl.loop", mult * trips)
+
+
+def merge_best_branch(out: OpCounts, branches: Sequence[OpCounts],
+                      mult: float = 1.0) -> None:
+    """Price a conditional at its most expensive branch (both counters walk
+    every branch; only the worst is charged)."""
+    if branches:
+        best = max(branches, key=lambda c: c.flops + c.total_units())
+        out.merge(best, mult)
+    out.add("ctl.cond", mult)
+
+
+# ---------------------------------------------------------------------------
+# Smaller shared pricing rules.
+# ---------------------------------------------------------------------------
+def scatter_class(isa_gen: int) -> str:
+    """gen>=1 hardware issues scatter through the DMA engine."""
+    return "scatter_dma" if isa_gen >= 1 else "scatter"
+
+
+def sort_units(n_in: float, last_dim: float) -> float:
+    """Comparison-sort work: n * log2(sorted-axis extent)."""
+    return n_in * max(1.0, math.log2(max(last_dim, 2.0)))
+
+
+def add_reduce(out: OpCounts, is_max: bool, n_in: float,
+               mult: float = 1.0) -> None:
+    """Reductions: add-style ones are FLOPs, max-style ones are not."""
+    if is_max:
+        out.add("reduce.max.f32", mult * n_in)
+    else:
+        out.add("reduce.add.f32", mult * n_in)
+        out.flops += mult * n_in
+
+
+# ---------------------------------------------------------------------------
+# Matrix assembly over the index (solver, batched prediction).
+# ---------------------------------------------------------------------------
+def counts_matrix(counts: Sequence[OpCounts],
+                  n: Optional[int] = None) -> np.ndarray:
+    """Stack unit vectors into a ``(len(counts), n)`` matrix in one shot."""
+    want = len(isa.CLASS_INDEX) if n is None else int(n)
+    out = np.zeros((len(counts), want))
+    for i, c in enumerate(counts):
+        m = min(want, c._vec.size)
+        out[i, :m] = c._vec[:m]
+    return out

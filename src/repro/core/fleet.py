@@ -12,6 +12,9 @@ import dataclasses
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional
 
+import numpy as np
+
+from repro.core import isa
 from repro.core.opcount import OpCounts
 from repro.core.predict import Prediction, TablePredictor
 from repro.core.table import EnergyTable
@@ -108,8 +111,15 @@ class EnergyMonitor:
                              f"(x{rec.joules_per_unit_work / base:.2f})")))
         ehist.append(rec.joules_per_unit_work)
         dyn = max(pred.dynamic_j, 1e-12)
-        for cls, e in pred.by_class.items():
-            share = e / dyn
+        # per-class shares straight off the prediction's class vector —
+        # no breakdown dict materialized on the fleet hot path
+        vec = pred.class_energy_vec
+        nz = np.nonzero(vec)[0]
+        shares = vec[nz] / dyn
+        name = isa.CLASS_INDEX.name
+        for i, share in zip(nz, shares):
+            cls = name(int(i))
+            share = float(share)
             hist = self._hist[cls]
             if len(hist) >= self.window // 2:
                 base = sum(hist) / len(hist)
@@ -125,8 +135,12 @@ class EnergyMonitor:
 
     def top_consumers(self, k: int = 10):
         """Aggregate per-class energy over all observed steps (Fig. 10)."""
-        agg: Dict[str, float] = defaultdict(float)
-        for r in self.records:
-            for cls, e in r.prediction.by_class.items():
-                agg[cls] += e
-        return sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+        if not self.records:
+            return []
+        vecs = [r.prediction.class_energy_vec for r in self.records]
+        agg = np.zeros(max(v.size for v in vecs))
+        for v in vecs:
+            agg[:v.size] += v
+        top = np.argsort(-agg)[:k]
+        name = isa.CLASS_INDEX.name
+        return [(name(int(i)), float(agg[i])) for i in top if agg[i] != 0.0]

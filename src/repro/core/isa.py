@@ -15,11 +15,21 @@ canonical classes exactly as the paper folds ``ISETP.GE.OR`` into
 Bucketing (§3.4) assigns every class to a micro-architectural bucket (MXU,
 VPU-transcendental, VPU-simple, memory, collective, control); unknown classes
 inherit their bucket's mean energy.
+
+The op-class space is indexed by the module-level ``CLASS_INDEX``, a
+``ClassIndex`` assigning a stable integer id to every class name (canonical
+classes first, observed-but-unknown classes interned append-only).  The id
+space is the *currency axis*: ``OpCounts.units`` is a dense vector over it,
+the energy table resolves to energy vectors over it, and Eq. 3 becomes the
+dot product it always was.  Names remain the serialization format — ids are
+process-lifetime stable, not on-disk stable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Buckets (micro-architectural components; AccelWattch-style categorisation).
@@ -262,3 +272,81 @@ def bucket_of(class_name: str) -> Optional[str]:
     if head == "ctl":
         return BUCKET_CTL
     return None
+
+
+# ---------------------------------------------------------------------------
+# The canonical class index: stable int id per op class.
+# ---------------------------------------------------------------------------
+UNKNOWN_BUCKET = "unknown"
+BUCKET_ORDER = ALL_BUCKETS + (UNKNOWN_BUCKET,)
+BUCKET_CODE: Dict[str, int] = {b: i for i, b in enumerate(BUCKET_ORDER)}
+
+
+class ClassIndex:
+    """Append-only ``class name -> int id`` map over the op-class space.
+
+    Canonical classes (``OP_CLASSES``) occupy the leading ids in table
+    order; any raw class observed by a counter (unknown primitives kept for
+    the bucketing machinery) is interned on first sight and keeps its id for
+    the process lifetime.  Because the index only ever grows, a vector of
+    length ``n`` taken at any earlier time stays valid — longer vectors are
+    zero-padded extensions, never re-orderings.
+
+    Bucket membership is exposed as an int-code array (``bucket_codes``)
+    aligned with the id space, so per-bucket reductions are ``np.bincount``
+    calls instead of per-key ``bucket_of`` walks.
+    """
+
+    def __init__(self, names: Iterable[str] = ()):
+        self._id: Dict[str, int] = {}
+        self._names: List[str] = []
+        self._bucket_code_list: List[int] = []
+        self._bucket_codes_arr = np.empty(0, dtype=np.intp)
+        for n in names:
+            self.intern(n)
+
+    def intern(self, name: str) -> int:
+        """Id for ``name``, assigning the next id on first sight."""
+        i = self._id.get(name)
+        if i is None:
+            i = len(self._names)
+            self._id[name] = i
+            self._names.append(name)
+            self._bucket_code_list.append(
+                BUCKET_CODE.get(bucket_of(name), BUCKET_CODE[UNKNOWN_BUCKET]))
+        return i
+
+    def id(self, name: str) -> Optional[int]:
+        """Id for ``name`` if already interned, else ``None``."""
+        return self._id.get(name)
+
+    def __len__(self) -> int:
+        return len(self._names)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._id
+
+    def name(self, i: int) -> str:
+        return self._names[i]
+
+    def names(self, n: Optional[int] = None) -> List[str]:
+        """The first ``n`` (default: all) class names, id order."""
+        return self._names[:len(self._names) if n is None else n]
+
+    def bucket_codes(self, n: Optional[int] = None) -> np.ndarray:
+        """``BUCKET_ORDER`` code per class id, as an array of length ``n``."""
+        want = len(self._names) if n is None else n
+        if self._bucket_codes_arr.size < want:
+            self._bucket_codes_arr = np.asarray(self._bucket_code_list,
+                                                dtype=np.intp)
+        return self._bucket_codes_arr[:want]
+
+    def bucket_ids(self, bucket: str, n: Optional[int] = None) -> np.ndarray:
+        """Ids (ascending) of the classes in ``bucket``."""
+        codes = self.bucket_codes(n)
+        return np.nonzero(codes == BUCKET_CODE[bucket])[0]
+
+
+#: The process-wide index.  Canonical classes first (stable leading ids),
+#: observed raw classes interned append-only by the counters.
+CLASS_INDEX = ClassIndex(c.name for c in OP_CLASSES)

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.opcount import OpCounts, count_fn
+from repro.core.counting import OpCounts
+from repro.core.opcount import count_fn
 
 F32 = jnp.float32
 BF16 = jnp.bfloat16

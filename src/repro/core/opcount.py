@@ -10,15 +10,22 @@ generations issue new MMA forms (``dot_small``/``dot_group``) for the same
 source program, mirroring NSight reporting HGMMA on H100 where V100 reports
 HMMA (paper §5.2.2-5.2.3).
 
-Memory traffic is estimated structurally: a producer/consumer dataflow pass
-classifies every operand/result as *fused* (stays in VMEM/VREGs inside an XLA
-fusion — elementwise chains, dot epilogues) or *boundary* (crosses a fusion
-boundary and is a candidate for HBM traffic).  This is the TPU analogue of the
-paper's cache-hit-rate machinery: XLA fusion is the TPU's locality mechanism.
+This module is one of two *front-ends* over the shared accumulation core
+(``repro.core.counting``); ``repro.hlo.opcount`` is the other.  The front-end
+owns only what is jaxpr-specific: primitive-name tables, aval shape/dtype
+extraction, and the producer/consumer dataflow pass that classifies every
+operand/result as *fused* (stays in VMEM/VREGs inside an XLA fusion —
+elementwise chains, dot epilogues) or *boundary* (crosses a fusion boundary
+and is a candidate for HBM traffic).  All pricing — MMA-generation
+selection, convert classes, collective wire bytes, trip-count
+multiplication, reduce/sort/scatter rules — comes from the core, so the two
+counters cannot drift.
+
+The ``OpCounts`` currency itself (an array over ``isa.CLASS_INDEX``) is
+defined in ``repro.core.counting`` and re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from collections import defaultdict
 from typing import Any, Callable, Dict, Mapping, Optional
@@ -27,6 +34,8 @@ import jax
 import numpy as np
 
 from repro.core import isa
+from repro.core import counting
+from repro.core.counting import OpCounts  # noqa: F401  (compat re-export)
 
 # Ops that are pure metadata on TPU (relayouts handled by 'transpose').
 _FREE_PRIMS = {
@@ -62,83 +71,26 @@ _FUSABLE_PRIMS = (_UNARY_ELEMWISE | _BINARY_ELEMWISE | _COMPARE | _CUM | {
     "dynamic_slice", "gather",
 })
 
-# Collective primitives (appear inside shard_map'd jaxprs).  Value is
-# (class name, wire-bytes function of (tensor_bytes, axis_size)).
-_COLLECTIVES: Dict[str, Any] = {
-    "psum": ("ici.all_reduce", lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
-    "psum2": ("ici.all_reduce", lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
-    "psum_invariant": ("ici.all_reduce",
-                       lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
-    "all_gather": ("ici.all_gather", lambda b, n: b * (n - 1)),
-    "psum_scatter": ("ici.reduce_scatter",
-                     lambda b, n: b * (n - 1) / max(n, 1)),
-    "reduce_scatter": ("ici.reduce_scatter",
-                       lambda b, n: b * (n - 1) / max(n, 1)),
-    "all_to_all": ("ici.all_to_all", lambda b, n: b * (n - 1) / max(n, 1)),
-    "ppermute": ("ici.permute", lambda b, n: b),
+# Collective primitives (appear inside shard_map'd jaxprs): primitive name ->
+# canonical class.  Wire-bytes formulas live in the shared core
+# (``counting.COLLECTIVE_WIRE``), written against the local per-chip bytes —
+# exactly what a shard_map'd jaxpr observes.
+_COLLECTIVE_CLASS: Dict[str, str] = {
+    "psum": "ici.all_reduce",
+    "psum2": "ici.all_reduce",
+    "psum_invariant": "ici.all_reduce",
+    "all_gather": "ici.all_gather",
+    "psum_scatter": "ici.reduce_scatter",
+    "reduce_scatter": "ici.reduce_scatter",
+    "all_to_all": "ici.all_to_all",
+    "ppermute": "ici.permute",
 }
 
-
-@dataclasses.dataclass
-class OpCounts:
-    """Work-unit counts per canonical op class + traffic/FLOP aggregates."""
-
-    units: Dict[str, float] = dataclasses.field(
-        default_factory=lambda: defaultdict(float))
-    naive_bytes: float = 0.0          # all operand+result traffic
-    boundary_read_bytes: float = 0.0  # fusion-boundary reads
-    boundary_write_bytes: float = 0.0  # fusion-boundary writes
-    fused_bytes: float = 0.0          # traffic that stays inside fusions
-    flops: float = 0.0            # arithmetic FLOPs (2*MACs for dots/convs)
-    exec_count: float = 0.0       # total dynamic eqn executions
-    dispatch_count: float = 0.0   # fusion roots ≈ kernel dispatches
-    max_buffer_bytes: float = 0.0  # largest single tensor (working-set hint)
-    mxu_macs_total: float = 0.0
-    mxu_macs_aligned: float = 0.0
-
-    @property
-    def boundary_bytes(self) -> float:
-        return self.boundary_read_bytes + self.boundary_write_bytes
-
-    def add(self, cls: str, n: float) -> None:
-        if n:
-            self.units[cls] += float(n)
-
-    def add_io(self, b_read: float, b_write: float, fused: float,
-               mult: float = 1.0) -> None:
-        self.naive_bytes += (b_read + b_write + fused) * mult
-        self.boundary_read_bytes += b_read * mult
-        self.boundary_write_bytes += b_write * mult
-        self.fused_bytes += fused * mult
-
-    def merge(self, other: "OpCounts", mult: float = 1.0) -> None:
-        for k, v in other.units.items():
-            self.units[k] += v * mult
-        self.naive_bytes += other.naive_bytes * mult
-        self.boundary_read_bytes += other.boundary_read_bytes * mult
-        self.boundary_write_bytes += other.boundary_write_bytes * mult
-        self.fused_bytes += other.fused_bytes * mult
-        self.flops += other.flops * mult
-        self.exec_count += other.exec_count * mult
-        self.dispatch_count += other.dispatch_count * mult
-        self.max_buffer_bytes = max(self.max_buffer_bytes,
-                                    other.max_buffer_bytes)
-        self.mxu_macs_total += other.mxu_macs_total * mult
-        self.mxu_macs_aligned += other.mxu_macs_aligned * mult
-
-    def scaled(self, mult: float) -> "OpCounts":
-        out = OpCounts()
-        out.merge(self, mult)
-        return out
-
-    def total_units(self) -> float:
-        return float(sum(self.units.values()))
-
-    def as_dict(self) -> Dict[str, float]:
-        d = dict(self.units)
-        d["__naive_bytes__"] = self.naive_bytes
-        d["__flops__"] = self.flops
-        return d
+# Back-compat alias: (class name, wire-bytes fn of (local_bytes, axis_size)).
+_COLLECTIVES: Dict[str, Any] = {
+    prim: (cls, counting.COLLECTIVE_WIRE[cls])
+    for prim, cls in _COLLECTIVE_CLASS.items()
+}
 
 
 def _aval_bytes(aval) -> float:
@@ -157,7 +109,7 @@ def _aval_elems(aval) -> float:
 
 def _dtype_tag(aval) -> str:
     try:
-        return isa.group_dtype(np.dtype(aval.dtype).name)
+        return counting.dtype_tag(np.dtype(aval.dtype).name)
     except Exception:
         return "f32"
 
@@ -282,28 +234,23 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
     if name == "scan":
         body = count_jaxpr(eqn.params["jaxpr"], axis_sizes=ctx.axis_sizes,
                            isa_gen=ctx.isa_gen)
-        length = float(eqn.params["length"])
-        out.merge(body, mult * length)
-        out.add("ctl.loop", mult * length)
+        counting.merge_loop_body(out, body, float(eqn.params["length"]), mult)
         # scanned-over arrays are part of the working set
         big = max((_aval_bytes(v.aval) for v in list(eqn.invars)
                    + list(eqn.outvars) if hasattr(v, "aval")), default=0.0)
-        out.max_buffer_bytes = max(out.max_buffer_bytes, big)
+        out.note_buffer(big)
         return
     if name == "while":
         trips = float(ctx.axis_sizes.get("__while_trips__", 1))
         body = count_jaxpr(eqn.params["body_jaxpr"], axis_sizes=ctx.axis_sizes,
                            isa_gen=ctx.isa_gen)
-        out.merge(body, mult * trips)
-        out.add("ctl.loop", mult * trips)
+        counting.merge_loop_body(out, body, trips, mult)
         return
     if name == "cond":
         branches = [count_jaxpr(b, axis_sizes=ctx.axis_sizes,
                                 isa_gen=ctx.isa_gen)
                     for b in eqn.params["branches"]]
-        best = max(branches, key=lambda c: c.flops + c.total_units())
-        out.merge(best, mult)
-        out.add("ctl.cond", mult)
+        counting.merge_best_branch(out, branches, mult)
         return
     if name in ("jit", "pjit", "closed_call", "core_call", "remat2", "remat",
                 "custom_vjp_call_jaxpr", "xla_call", "custom_jvp_call",
@@ -329,14 +276,13 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
         return
 
     # ---- collectives -----------------------------------------------------
-    if name in _COLLECTIVES:
-        cls, bytes_fn = _COLLECTIVES[name]
+    if name in _COLLECTIVE_CLASS:
         n = _axis_size(ctx, eqn.params.get("axes",
                                            eqn.params.get("axis_name")))
         tensor_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
                            if hasattr(v, "aval"))
-        if n > 1:
-            out.add(cls, mult * bytes_fn(tensor_bytes, n))
+        counting.add_collective(out, _COLLECTIVE_CLASS[name], tensor_bytes,
+                                n, mult)
         return
 
     out.exec_count += mult
@@ -349,36 +295,22 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
     # ---- MXU -------------------------------------------------------------
     if name == "dot_general":
         batch, m, n, k = _dot_dims(eqn)
-        macs = float(batch * m * n * k)
         raw = np.dtype(eqn.invars[0].aval.dtype).name
         dt = {"int8": "int8", "uint8": "int8", "int4": "int4",
               "uint4": "int4", "float8_e4m3fn": "fp8",
               "float8_e5m2": "fp8"}.get(raw) or _dtype_tag(eqn.invars[0].aval)
-        # Arch-aware opcode forms (NSight reports HGMMA on H100 while V100
-        # reports HMMA — the profiler reports what the generation issues).
-        head = "dot"
-        if ctx.isa_gen >= 2 and batch > 1:
-            head = "dot_group"
-        elif ctx.isa_gen >= 1 and min(m, n, k) < 128:
-            head = "dot_small"
-        out.add(isa.group_class(f"{head}.{dt}"), mult * macs)
-        out.flops += 2.0 * macs * mult
-        if (m % 128 == 0) and (n % 128 == 0) and (k % 128 == 0):
-            out.mxu_macs_aligned += macs * mult
-        out.mxu_macs_total += macs * mult
+        counting.add_dot(out, isa_gen=ctx.isa_gen, dt=dt,
+                         batch=batch, m=m, n=n, k=k, mult=mult)
         br, bw, f, mb = _eqn_io(eqn, fuse, force_boundary_reads=True)
         out.add_io(br, bw, f, mult)
-        out.max_buffer_bytes = max(out.max_buffer_bytes, mb)
+        out.note_buffer(mb)
         return
     if name == "conv_general_dilated":
-        macs = _conv_macs(eqn)
         dt = _dtype_tag(eqn.invars[0].aval)
-        out.add(isa.group_class(f"conv.{dt}"), mult * macs)
-        out.flops += 2.0 * macs * mult
-        out.mxu_macs_total += macs * mult   # convs are rarely 128-aligned
+        counting.add_conv(out, dt=dt, macs=_conv_macs(eqn), mult=mult)
         br, bw, f, mb = _eqn_io(eqn, fuse, force_boundary_reads=True)
         out.add_io(br, bw, f, mult)
-        out.max_buffer_bytes = max(out.max_buffer_bytes, mb)
+        out.note_buffer(mb)
         return
 
     # ---- everything else: traffic + class units ---------------------------
@@ -389,18 +321,13 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
         br, bw, f, mb = _eqn_io(eqn, fuse,
                                 force_boundary_reads=name in ("sort", "top_k"))
     out.add_io(br, bw, f, mult)
-    out.max_buffer_bytes = max(out.max_buffer_bytes, mb)
+    out.note_buffer(mb)
 
     if name == "convert_element_type":
         src = _dtype_tag(eqn.invars[0].aval)
         dst = _dtype_tag(out_aval)
-        if src != dst:
-            if src in ("f32", "bf16", "fp8") and dst in ("f32", "bf16", "fp8"):
-                cls = f"convert.{src}.{dst}"
-            elif src in ("int", "int4"):
-                cls = "convert.int.float"
-            else:
-                cls = "convert.float.int"
+        cls = counting.convert_class(src, dst)
+        if cls is not None:
             out.add(isa.group_class(cls), mult * _aval_elems(out_aval))
         return
 
@@ -429,13 +356,10 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
         out.add(isa.group_class(f"max.{dt}"), mult * 2 * elems_out)
         return
     if name in _REDUCE_ADD:
-        n_in = _aval_elems(eqn.invars[0].aval)
-        out.add("reduce.add.f32", mult * n_in)
-        out.flops += mult * n_in
+        counting.add_reduce(out, False, _aval_elems(eqn.invars[0].aval), mult)
         return
     if name in _REDUCE_MAX:
-        n_in = _aval_elems(eqn.invars[0].aval)
-        out.add("reduce.max.f32", mult * n_in)
+        counting.add_reduce(out, True, _aval_elems(eqn.invars[0].aval), mult)
         return
     if name in _CUM:
         out.add("cumsum.f32", mult * elems_out)
@@ -457,13 +381,11 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
         out.add("dus", mult * _aval_elems(eqn.invars[1].aval))
         return
     if name == "gather":
-        cls = "gather"
-        out.add(cls, mult * elems_out)
+        out.add("gather", mult * elems_out)
         return
     if name.startswith("scatter"):
         upd = eqn.invars[2].aval if len(eqn.invars) > 2 else out_aval
-        cls = "scatter_dma" if ctx.isa_gen >= 1 else "scatter"
-        out.add(cls, mult * _aval_elems(upd))
+        out.add(counting.scatter_class(ctx.isa_gen), mult * _aval_elems(upd))
         return
     if name == "iota":
         out.add("iota", mult * elems_out)
@@ -474,7 +396,7 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
     if name in ("sort", "top_k"):
         n_in = _aval_elems(eqn.invars[0].aval)
         dim = eqn.invars[0].aval.shape[-1] if eqn.invars[0].aval.shape else 2
-        out.add("sort", mult * n_in * max(1.0, math.log2(max(dim, 2))))
+        out.add("sort", mult * counting.sort_units(n_in, dim))
         return
     if name in ("random_bits", "threefry2x32", "random_fold_in",
                 "random_gamma"):

@@ -1,18 +1,27 @@
-"""Prediction & attribution phase — paper §3.5.
+"""Prediction & attribution phase — paper §3.5, as matrix algebra.
 
 Inputs per application: profiled op counts (``core.opcount``), execution
 time, and memory counters (HBM/VMEM bytes — the cache-hit-rate analogue).
 Output: total energy plus a fine-grained breakdown by op class and by
 micro-architectural bucket, with const/static separated — the artifact the
 case studies (§5.3) consume.
+
+The paper's linear model (Eq. 3, ``E = Σ units_i · energy_i``) is a dot
+product over the op-class space, and this module computes it as one: the
+``TablePredictor`` resolves the bound table into dense energy vectors over
+``isa.CLASS_INDEX``, a single prediction is ``units · e``, and a batch
+(``predict_batch``) is one ``C @ e``-style pass over a stacked counts
+matrix.  Both paths run the identical kernel, so batched totals are
+bitwise-equal to per-program totals.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import defaultdict
-from typing import Dict, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.core import isa
+from repro.core.counting import counts_matrix
 from repro.core.opcount import OpCounts
 from repro.core.table import DIRECT, EnergyTable
 
@@ -22,19 +31,86 @@ _DEFAULT_HBM_BOUNDARY_FRAC = 0.85
 _DEFAULT_FUSED_LEAK = 0.05
 
 
-@dataclasses.dataclass
 class Prediction:
-    total_j: float
-    const_j: float
-    static_j: float
-    dynamic_j: float
-    by_class: Dict[str, float]
-    by_bucket: Dict[str, float]
-    coverage: float            # energy-weighted fraction attributed directly
-    duration_s: float
+    """One workload's energy prediction + attribution.
+
+    ``by_class``/``by_bucket`` are materialized lazily from the underlying
+    per-class energy vector (``class_energy_vec``), so fleet-scale batched
+    prediction never pays for breakdown dicts nobody reads.
+    """
+
+    __slots__ = ("total_j", "const_j", "static_j", "dynamic_j", "coverage",
+                 "duration_s", "_by_class", "_by_bucket", "_class_vec")
+
+    def __init__(self, total_j: float, const_j: float, static_j: float,
+                 dynamic_j: float,
+                 by_class: Optional[Mapping[str, float]] = None,
+                 by_bucket: Optional[Mapping[str, float]] = None,
+                 coverage: float = 1.0, duration_s: float = 0.0, *,
+                 class_vec: Optional[np.ndarray] = None):
+        self.total_j = float(total_j)
+        self.const_j = float(const_j)
+        self.static_j = float(static_j)
+        self.dynamic_j = float(dynamic_j)
+        self.coverage = float(coverage)   # energy-weighted direct fraction
+        self.duration_s = float(duration_s)
+        self._by_class = dict(by_class) if by_class is not None else None
+        self._by_bucket = dict(by_bucket) if by_bucket is not None else None
+        self._class_vec = class_vec
+        if self._class_vec is None and self._by_class is None:
+            self._by_class = {}
+
+    # -- breakdowns ---------------------------------------------------------
+    @property
+    def class_energy_vec(self) -> np.ndarray:
+        """Per-class dynamic joules over ``isa.CLASS_INDEX`` ids."""
+        if self._class_vec is None:
+            items = list((self._by_class or {}).items())
+            ids = [isa.CLASS_INDEX.intern(cls) for cls, _ in items]
+            v = np.zeros(len(isa.CLASS_INDEX))
+            if ids:
+                v[ids] = [e for _, e in items]
+            self._class_vec = v
+        return self._class_vec
+
+    @property
+    def by_class(self) -> Dict[str, float]:
+        if self._by_class is None:
+            v = self._class_vec
+            name = isa.CLASS_INDEX.name
+            self._by_class = {name(int(i)): float(v[i])
+                              for i in np.nonzero(v)[0]}
+        return self._by_class
+
+    @property
+    def by_bucket(self) -> Dict[str, float]:
+        if self._by_bucket is None:
+            out: Dict[str, float] = {}
+            if self._class_vec is not None:
+                v = self._class_vec
+                if v.size:
+                    codes = isa.CLASS_INDEX.bucket_codes(v.size)
+                    sums = np.bincount(codes, weights=v,
+                                       minlength=len(isa.BUCKET_ORDER))
+                    out = {isa.BUCKET_ORDER[i]: float(s)
+                           for i, s in enumerate(sums) if s != 0.0}
+            else:
+                for cls, e in (self._by_class or {}).items():
+                    b = isa.bucket_of(cls) or isa.UNKNOWN_BUCKET
+                    out[b] = out.get(b, 0.0) + e
+            out["static"] = self.static_j
+            out["const"] = self.const_j
+            self._by_bucket = out
+        return self._by_bucket
 
     def top_classes(self, k: int = 10):
         return sorted(self.by_class.items(), key=lambda kv: -kv[1])[:k]
+
+    def __repr__(self) -> str:
+        return (f"Prediction(total_j={self.total_j:.4g}, "
+                f"dynamic_j={self.dynamic_j:.4g}, "
+                f"coverage={self.coverage:.3f}, "
+                f"duration_s={self.duration_s:.4g})")
 
 
 def traffic_from_counts(counts: OpCounts) -> Dict[str, float]:
@@ -56,96 +132,163 @@ _COUNTER_TO_CLASS = {
     "vmem_write_bytes": "vmem.write",
 }
 _COUNTER_CLASSES = frozenset(_COUNTER_TO_CLASS.values())
+_COUNTER_ITEMS = tuple(_COUNTER_TO_CLASS.items())
+# counter classes are canonical -> their ids are fixed at import time
+_COUNTER_IDS = np.asarray([isa.CLASS_INDEX.intern(c)
+                           for c in _COUNTER_TO_CLASS.values()])
 
 
 class TablePredictor:
     """Prediction engine bound to one table, amortizing lookups across calls.
 
     ``EnergyTable.lookup`` walks direct -> scaled -> bucket per class per
-    call; at fleet scale (``predict_many`` over thousands of workloads, the
-    streaming ``EnergyMonitor``) the same classes recur on every call, so the
-    predictor resolves each class once into ``(direct-mode J, pred-mode J,
-    provenance)`` and every later prediction is a dict hit.
+    call; the predictor instead resolves the table once into dense energy
+    vectors over ``isa.CLASS_INDEX`` — ``e_pred`` (Wattchmen-Pred: direct ->
+    scaled -> bucket) and ``e_direct`` (Wattchmen-Direct: direct hits only,
+    0 J elsewhere) — and every prediction is vector arithmetic against them.
+    The vectors extend lazily as the index grows (new raw classes observed
+    by a counter).
 
-    The cache snapshots the table: mutate the bound ``EnergyTable`` after
+    The vectors snapshot the table: mutate the bound ``EnergyTable`` after
     construction (e.g. re-running ``coverage.extend_table``) and call
     ``invalidate()``, or predictions keep using the old energies.
     """
 
     def __init__(self, table: EnergyTable):
         self.table = table
-        # cls -> (e_direct, e_pred, how_pred).  Direct-mode energy is
-        # derivable from the pred-mode walk: a direct hit is the same value,
-        # anything else is a direct-mode miss (0 J).
-        self._cache: Dict[str, tuple] = {}
+        self._n = 0                      # resolved prefix of the class index
+        self._e_pred = np.zeros(0)
+        self._e_direct = np.zeros(0)
 
-    def _entry(self, cls: str) -> tuple:
-        ent = self._cache.get(cls)
-        if ent is None:
-            e_pred, how_pred = self.table.lookup(cls, mode="pred")
-            e_direct = e_pred if how_pred == DIRECT else 0.0
-            ent = (e_direct, e_pred, how_pred)
-            self._cache[cls] = ent
-        return ent
+    def _vectors(self, n: int):
+        """(e_direct, e_pred) resolved for the first ``n`` class ids."""
+        if n > self._n:
+            idx = isa.CLASS_INDEX
+            lookup = self.table.lookup
+            e_p = np.empty(n - self._n)
+            e_d = np.empty(n - self._n)
+            for j, i in enumerate(range(self._n, n)):
+                e_pred, how = lookup(idx.name(i), mode="pred")
+                e_p[j] = e_pred
+                e_d[j] = e_pred if how == DIRECT else 0.0
+            self._e_pred = np.concatenate([self._e_pred[:self._n], e_p])
+            self._e_direct = np.concatenate([self._e_direct[:self._n], e_d])
+            self._n = n
+        return self._e_direct[:n], self._e_pred[:n]
 
     def warm(self) -> None:
-        """Precompute the class->energy vector for every table-known class.
+        """Precompute the class->energy vectors for the whole index.
 
         Worth it on long-lived predictors (the facade, the fleet monitor);
         one-shot callers stay lazy and only resolve the classes they see.
         """
-        for cls in (set(self.table.direct) | set(self.table.scaled)
-                    | _COUNTER_CLASSES):
-            self._entry(cls)
+        self._vectors(len(isa.CLASS_INDEX))
 
     def invalidate(self) -> None:
-        """Drop cached entries after a mutation of the bound table."""
-        self._cache.clear()
+        """Drop the resolved vectors after a mutation of the bound table."""
+        self._n = 0
+        self._e_pred = np.zeros(0)
+        self._e_direct = np.zeros(0)
 
+    # -- the kernel ---------------------------------------------------------
+    def _predict_rows(self, counts_list: Sequence[OpCounts],
+                      durations: Sequence[float],
+                      counters_list: Sequence[Optional[Mapping[str, float]]],
+                      mode: str) -> List[Prediction]:
+        """One vectorized pass over a stacked counts matrix.
+
+        Every public prediction path funnels through here — a single
+        ``predict`` is a 1-row batch — so batched and per-program totals
+        come from literally the same float operations (bitwise equal).
+        """
+        n_jobs = len(counts_list)
+        n = len(isa.CLASS_INDEX)
+        direct_mode = mode == "direct"
+        c_mat = counts_matrix(counts_list, n)
+        c_mat[:, _COUNTER_IDS] = 0.0          # memory priced from counters
+        e_direct, e_pred = self._vectors(n)
+
+        val = c_mat * (e_direct if direct_mode else e_pred)
+        dyn = val.sum(axis=1)
+        cover = (c_mat * e_pred).sum(axis=1)   # pred-mode energy of all work
+        direct = (c_mat * e_direct).sum(axis=1)  # ... of direct hits only
+
+        # memory counters: profiled when given, static traffic model else
+        mem = np.empty((n_jobs, len(_COUNTER_ITEMS)))
+        need_default = [i for i, c in enumerate(counters_list) if c is None]
+        if need_default:
+            f = _DEFAULT_HBM_BOUNDARY_FRAC
+            br = np.asarray([counts_list[i].boundary_read_bytes
+                             for i in need_default])
+            bw = np.asarray([counts_list[i].boundary_write_bytes
+                             for i in need_default])
+            leak = np.asarray([counts_list[i].fused_bytes
+                               for i in need_default]) * _DEFAULT_FUSED_LEAK
+            mem[need_default, 0] = br * f + 0.5 * leak
+            mem[need_default, 1] = bw * f + 0.5 * leak
+            mem[need_default, 2] = br * (1 - f)
+            mem[need_default, 3] = bw * (1 - f)
+        for i, ctrs in enumerate(counters_list):
+            if ctrs is not None:
+                for j, (key, _) in enumerate(_COUNTER_ITEMS):
+                    mem[i, j] = ctrs.get(key, 0.0)
+
+        for j, (_, cls) in enumerate(_COUNTER_ITEMS):
+            ci = int(_COUNTER_IDS[j])
+            units = mem[:, j]
+            v = units * (e_direct[ci] if direct_mode else e_pred[ci])
+            val[:, ci] += v
+            dyn += v
+            cover += units * e_pred[ci]
+            direct += units * e_direct[ci]
+
+        dur = np.asarray(durations, dtype=float)
+        const = self.table.p_const * dur
+        static = self.table.p_static * dur
+        total = const + static + dyn
+        coverage = np.ones(n_jobs)
+        pos = cover > 0
+        coverage[pos] = direct[pos] / cover[pos]
+
+        # copy each row out of the batch matrix so a retained Prediction
+        # doesn't pin the whole (n_jobs x n_classes) array via a view
+        return [Prediction(total[i], const[i], static[i], dyn[i],
+                           coverage=coverage[i], duration_s=dur[i],
+                           class_vec=val[i].copy())
+                for i in range(n_jobs)]
+
+    # -- public surface -----------------------------------------------------
     def predict(self, counts: OpCounts, duration_s: float,
                 counters: Optional[Mapping[str, float]] = None,
                 mode: str = "pred") -> Prediction:
-        table = self.table
-        entry = self._entry
-        direct_mode = mode == "direct"
-        const_j = table.p_const * duration_s
-        static_j = table.p_static * duration_s
-        by_class: Dict[str, float] = defaultdict(float)
-        direct_j = 0.0   # coverage numerator (pred-mode energy of direct hits)
-        cover_j = 0.0    # coverage denominator (pred-mode energy of all work)
-        dyn_j = 0.0
+        return self._predict_rows([counts], [duration_s], [counters], mode)[0]
 
-        def _account(cls: str, n: float) -> None:
-            nonlocal direct_j, cover_j, dyn_j
-            e_direct, e_pred, how_pred = entry(cls)
-            v = n * (e_direct if direct_mode else e_pred)
-            by_class[cls] += v
-            dyn_j += v
-            cover_j += n * e_pred
-            if how_pred == DIRECT:
-                direct_j += n * e_pred
+    def predict_batch(self, counts_list: Sequence[OpCounts],
+                      durations: Sequence[float],
+                      counters_list: Optional[Sequence[
+                          Optional[Mapping[str, float]]]] = None,
+                      mode: Union[str, Sequence[str]] = "pred",
+                      ) -> List[Prediction]:
+        """Batched prediction: one matrix pass instead of N table walks.
 
-        for cls, units in counts.units.items():
-            if cls in _COUNTER_CLASSES:
-                continue
-            _account(cls, units)
-
-        mem = (dict(counters) if counters is not None
-               else traffic_from_counts(counts))
-        for key, cls in _COUNTER_TO_CLASS.items():
-            _account(cls, mem.get(key, 0.0))
-
-        by_bucket: Dict[str, float] = defaultdict(float)
-        for cls, v in by_class.items():
-            by_bucket[isa.bucket_of(cls) or "unknown"] += v
-        by_bucket["static"] = static_j
-        by_bucket["const"] = const_j
-
-        coverage = direct_j / cover_j if cover_j > 0 else 1.0
-        return Prediction(total_j=const_j + static_j + dyn_j,
-                          const_j=const_j, static_j=static_j, dynamic_j=dyn_j,
-                          by_class=dict(by_class), by_bucket=dict(by_bucket),
-                          coverage=coverage, duration_s=duration_s)
+        ``mode`` may be a single string or a per-job sequence; mixed-mode
+        batches are split into one pass per mode (order preserved).
+        """
+        n_jobs = len(counts_list)
+        if counters_list is None:
+            counters_list = [None] * n_jobs
+        if isinstance(mode, str):
+            return self._predict_rows(counts_list, durations, counters_list,
+                                      mode)
+        out: List[Optional[Prediction]] = [None] * n_jobs
+        for m in dict.fromkeys(mode):            # unique modes, first-seen order
+            ix = [i for i, mi in enumerate(mode) if mi == m]
+            preds = self._predict_rows([counts_list[i] for i in ix],
+                                       [durations[i] for i in ix],
+                                       [counters_list[i] for i in ix], m)
+            for i, p in zip(ix, preds):
+                out[i] = p
+        return out  # type: ignore[return-value]
 
 
 def predict(table: EnergyTable, counts: OpCounts, duration_s: float,

@@ -15,6 +15,8 @@ from typing import Dict, List, Sequence
 import numpy as np
 from scipy import optimize
 
+from repro.core import isa
+from repro.core.counting import counts_matrix
 from repro.core.microbench import MicroBench
 from repro.hw.device import RunRecord
 
@@ -51,20 +53,21 @@ def build_system(suite: Sequence[MicroBench],
     ``classes`` is the benched-class list; anything a benchmark executes
     outside it contributes energy the solve cannot place — kept small by
     suite construction, and the residual check catches violations.
+
+    Assembly is one shot over the class index: the suite's per-iteration
+    unit vectors are stacked into a counts matrix, scaled by each run's
+    iteration count, and the benched-class columns are gathered out —
+    memory columns replaced by the runs' profiled counters.
     """
     classes = list(classes)
-    col = {c: j for j, c in enumerate(classes)}
-    a = np.zeros((len(suite), len(classes)))
-    for i, (bench, rec) in enumerate(zip(suite, records)):
-        iters = rec.iters
-        for cls, units in bench.counts.units.items():
-            j = col.get(cls)
-            if j is not None and cls not in COUNTER_CLASSES:
-                a[i, j] += units * iters
-        for cls, counter_key in COUNTER_CLASSES.items():
-            j = col.get(cls)
-            if j is not None:
-                a[i, j] += rec.counters.get(counter_key, 0.0)
+    full = counts_matrix([b.counts for b in suite])      # (n_bench, |index|)
+    full *= np.asarray([r.iters for r in records], dtype=float)[:, None]
+    col_ids = [isa.CLASS_INDEX.intern(c) for c in classes]
+    a = full[:, col_ids]
+    for j, cls in enumerate(classes):
+        counter_key = COUNTER_CLASSES.get(cls)
+        if counter_key is not None:
+            a[:, j] = [rec.counters.get(counter_key, 0.0) for rec in records]
     return EnergySystem(classes=classes, matrix=a,
                         rhs=np.asarray(dynamic_energies, dtype=np.float64),
                         bench_names=[b.name for b in suite])

@@ -7,15 +7,20 @@ of a compiled executable (``compiled.as_text()``), it produces the same
 compiled artifact (a serving binary, a dry-run dump from another host) where
 no Python callable exists to retrace.
 
-The walk mirrors ``hlo.collectives``: start at the entry computation, inline
-``call``/``fusion`` bodies, multiply ``while`` bodies by their best-effort
-trip counts, and price ``conditional`` at its most expensive branch.
-Instructions inside a ``fusion`` contribute *fused* traffic (VMEM/VREG
-resident); top-level operands/results are fusion-boundary traffic — the same
-boundary/fused split the jaxpr counter derives from its dataflow pass.
-Dot MACs are recovered from the operand shapes + ``lhs_contracting_dims``;
-where an operand's shape cannot be resolved from the text, the accounting
-degrades gracefully (result-shape-only estimate) rather than failing.
+This is the second *front-end* over the shared accumulation core
+(``repro.core.counting``).  The front-end owns only what is HLO-specific:
+the opcode tables, shape/operand extraction from the text, and the walk
+(start at the entry computation, inline ``call``/``fusion`` bodies, multiply
+``while`` bodies by their best-effort trip counts).  Every accounting
+decision — dtype grouping, MMA-generation selection, convert classes,
+collective wire bytes (computed here from *result* shapes, converted by the
+core), worst-branch conditionals, trip-count multiplication, and the
+boundary/fused traffic split — is the core's, shared verbatim with the
+jaxpr counter.  Instructions inside a ``fusion`` contribute *fused* traffic
+(VMEM/VREG resident); top-level operands/results are fusion-boundary
+traffic.  Where an operand's shape cannot be resolved from the text, the
+accounting degrades gracefully (result-shape-only estimate) rather than
+failing.
 """
 from __future__ import annotations
 
@@ -23,19 +28,10 @@ import math
 import re
 from typing import Dict, Optional
 
-from repro.core import isa
-from repro.core.opcount import OpCounts
+from repro.core import counting, isa
+from repro.core.counting import OpCounts
 from repro.hlo.parse import (HloComputation, HloInstr, HloModule,
                              _SHAPE_RE, parse_hlo_text, shape_bytes)
-
-# HLO dtype token -> the repo's grouped dtype tag.
-_DTYPE_TAG = {
-    "f64": "f32", "f32": "f32", "f16": "bf16", "bf16": "bf16",
-    "f8e4m3fn": "fp8", "f8e5m2": "fp8", "f8e4m3": "fp8",
-    "s64": "int", "s32": "int", "s16": "int", "s8": "int",
-    "u64": "int", "u32": "int", "u16": "int", "u8": "int",
-    "s4": "int4", "u4": "int4", "pred": "int",
-}
 
 # HLO opcode -> jax-primitive-style head (folded by ``isa.group_class``).
 _UNARY = {
@@ -66,18 +62,18 @@ _FREE = {
     "after-all", "partition-id", "replica-id", "opt-barrier",
     "get-dimension-size", "domain", "token",
 }
-# Collectives: (class, wire-bytes fn of (result_bytes, group_size)).
-_COLLECTIVES = {
-    "all-reduce": ("ici.all_reduce", lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
-    "all-reduce-start": ("ici.all_reduce",
-                         lambda b, n: 2.0 * b * (n - 1) / max(n, 1)),
-    "all-gather": ("ici.all_gather", lambda b, n: b * (n - 1) / max(n, 1)),
-    "all-gather-start": ("ici.all_gather",
-                         lambda b, n: b * (n - 1) / max(n, 1)),
-    "reduce-scatter": ("ici.reduce_scatter", lambda b, n: b * (n - 1)),
-    "all-to-all": ("ici.all_to_all", lambda b, n: b * (n - 1) / max(n, 1)),
-    "collective-permute": ("ici.permute", lambda b, n: b),
-    "collective-permute-start": ("ici.permute", lambda b, n: b),
+# Collectives: HLO opcode -> canonical class.  Wire-bytes formulas are the
+# core's; HLO observes *result* shapes, so the conversion to each formula's
+# local-bytes reference happens in ``counting.collective_wire_bytes``.
+_COLLECTIVE_CLASS: Dict[str, str] = {
+    "all-reduce": "ici.all_reduce",
+    "all-reduce-start": "ici.all_reduce",
+    "all-gather": "ici.all_gather",
+    "all-gather-start": "ici.all_gather",
+    "reduce-scatter": "ici.reduce_scatter",
+    "all-to-all": "ici.all_to_all",
+    "collective-permute": "ici.permute",
+    "collective-permute-start": "ici.permute",
 }
 _DONE = {"all-gather-done", "all-reduce-done", "collective-permute-done",
          "async-done"}
@@ -100,7 +96,7 @@ def _shape_elems(type_str: str) -> float:
 
 def _dtype_tag(type_str: str) -> str:
     m = _SHAPE_RE.search(type_str)
-    return _DTYPE_TAG.get(m.group(1), "f32") if m else "f32"
+    return counting.dtype_tag(m.group(1)) if m else "f32"
 
 
 def _shape_dims(type_str: str):
@@ -111,10 +107,17 @@ def _shape_dims(type_str: str):
 
 
 def _operands(ins: HloInstr):
-    """Operand names of an instruction (best-effort from the raw text)."""
+    """Operand names of an instruction (best-effort from the raw text).
+
+    Real ``as_text()`` output spells operands with their types
+    (``dot(f32[256,512]{1,0} %Arg_0.1, ...)``); hand-written or abbreviated
+    HLO uses bare names (``dot(%x, %w)``).  Prefer the ``%``-prefixed names
+    when present so type tokens are never mistaken for operands.
+    """
     _, _, rest = ins.raw.partition(ins.opcode + "(")
     args = rest.split(")", 1)[0]
-    return re.findall(r"%?([\w.\-]+)", args)
+    named = re.findall(r"%([\w.\-]+)", args)
+    return named if named else re.findall(r"([\w.\-]+)", args)
 
 
 def _group_size(raw: str) -> int:
@@ -185,7 +188,8 @@ class _Walker:
                 and all(d < len(lhs_dims) for d in lhs_c):
             k = float(math.prod(lhs_dims[d] for d in lhs_c) or 1)
             if all(d < len(lhs_dims) for d in lhs_b):
-                batch = float(math.prod(lhs_dims[d] for d in lhs_b) or 1)
+                batch = float(math.prod(
+                    lhs_dims[d] for d in lhs_b) or 1)
                 m = float(math.prod(
                     s for i, s in enumerate(lhs_dims)
                     if i not in lhs_c and i not in lhs_b) or 1)
@@ -194,19 +198,9 @@ class _Walker:
             n = float(math.prod(
                 s for i, s in enumerate(rhs_dims)
                 if i not in rhs_c and i not in rhs_b) or 1)
-        min_dim = min(m, n, k)
-        macs = out_elems * k
-        dt = _dtype_tag(ins.type_str)
-        head = "dot"
-        if self.isa_gen >= 2 and batch > 1:
-            head = "dot_group"
-        elif self.isa_gen >= 1 and min_dim < 128:
-            head = "dot_small"
-        out.add(isa.group_class(f"{head}.{dt}"), mult * macs)
-        out.flops += 2.0 * macs * mult
-        out.mxu_macs_total += macs * mult
-        if m % 128 == 0 and n % 128 == 0 and k % 128 == 0:
-            out.mxu_macs_aligned += macs * mult
+        counting.add_dot(out, isa_gen=self.isa_gen, dt=_dtype_tag(ins.type_str),
+                         batch=batch, m=m, n=n, k=k,
+                         macs=out_elems * k, mult=mult)
 
     def _instr_units(self, ins: HloInstr, out: OpCounts, mult: float) -> None:
         op = ins.opcode
@@ -218,9 +212,7 @@ class _Walker:
         if op == "convolution":
             # result elems x (filter spatial x in-channels) unavailable
             # without layout metadata; approximate with result-elems MACs.
-            out.add(isa.group_class(f"conv.{dt}"), mult * elems)
-            out.flops += 2.0 * elems * mult
-            out.mxu_macs_total += elems * mult
+            counting.add_conv(out, dt=dt, macs=elems, mult=mult)
             return
         if op in _UNARY or op in _BINARY:
             head = _UNARY.get(op) or _BINARY[op]
@@ -240,14 +232,8 @@ class _Walker:
             srcs = _operands(ins)
             src_t = self._operand_type(srcs[0]) if srcs else None
             src = _dtype_tag(src_t) if src_t else "f32"
-            if src != dt:
-                if src in ("f32", "bf16", "fp8") and dt in ("f32", "bf16",
-                                                            "fp8"):
-                    cls = f"convert.{src}.{dt}"
-                elif src in ("int", "int4"):
-                    cls = "convert.int.float"
-                else:
-                    cls = "convert.float.int"
+            cls = counting.convert_class(src, dt)
+            if cls is not None:
                 out.add(isa.group_class(cls), mult * elems)
             return
         if op in _MOVE:
@@ -262,8 +248,7 @@ class _Walker:
             out.add("gather", mult * elems)
             return
         if op.startswith("scatter"):
-            cls = "scatter_dma" if self.isa_gen >= 1 else "scatter"
-            out.add(cls, mult * elems)
+            out.add(counting.scatter_class(self.isa_gen), mult * elems)
             return
         if op in ("reduce", "reduce-window"):
             ops = _operands(ins)
@@ -273,11 +258,7 @@ class _Walker:
             reducer = self.module.get(ins.attr("to_apply") or "")
             is_max = reducer is not None and any(
                 i.opcode in ("maximum", "minimum") for i in reducer.instrs)
-            if is_max:
-                out.add("reduce.max.f32", mult * n_in)
-            else:
-                out.add("reduce.add.f32", mult * n_in)
-                out.flops += mult * n_in
+            counting.add_reduce(out, is_max, n_in, mult)
             return
         if op == "sort":
             ops = _operands(ins)
@@ -285,7 +266,7 @@ class _Walker:
             n_in = _shape_elems(in_t) if in_t else elems
             dims = _shape_dims(in_t) if in_t else None
             last = float(dims[-1]) if dims else 2.0
-            out.add("sort", mult * n_in * max(1.0, math.log2(max(last, 2.0))))
+            out.add("sort", mult * counting.sort_units(n_in, last))
             return
         if op in ("rng", "rng-bit-generator", "rng-get-and-update-state"):
             out.add("rng.bits", mult * max(elems, 1.0))
@@ -308,9 +289,10 @@ class _Walker:
             if op == "while":
                 trips = _trip_count(self.module, ins.attr("condition"))
                 body = self.module.get(ins.attr("body") or "")
+                body_counts = OpCounts()
                 if body is not None:
-                    self.walk(body, out, mult * trips, in_fusion, depth + 1)
-                out.add("ctl.loop", mult * trips)
+                    self.walk(body, body_counts, 1.0, in_fusion, depth + 1)
+                counting.merge_loop_body(out, body_counts, trips, mult)
                 continue
             if op == "conditional":
                 branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
@@ -320,19 +302,15 @@ class _Walker:
                 for grp, single in branches:
                     names += ([s.strip().lstrip("%") for s in grp.split(",")]
                               if grp else [single])
-                best: Optional[OpCounts] = None
+                branch_counts = []
                 for name in filter(None, names):
                     sub = self.module.get(name)
                     if sub is None:
                         continue
                     c = OpCounts()
                     self.walk(sub, c, 1.0, in_fusion, depth + 1)
-                    if best is None or (c.flops + c.total_units()
-                                        > best.flops + best.total_units()):
-                        best = c
-                if best is not None:
-                    out.merge(best, mult)
-                out.add("ctl.cond", mult)
+                    branch_counts.append(c)
+                counting.merge_best_branch(out, branch_counts, mult)
                 continue
             if op in ("fusion", "call", "async-start"):
                 callee = ins.attr("calls") or ins.attr("to_apply")
@@ -345,11 +323,10 @@ class _Walker:
                     self._boundary_io(ins, out, mult)
                     out.dispatch_count += mult
                 continue
-            if op in _COLLECTIVES:
-                cls, wire = _COLLECTIVES[op]
-                n = _group_size(ins.raw)
-                if n > 1:
-                    out.add(cls, mult * wire(ins.result_bytes, n))
+            if op in _COLLECTIVE_CLASS:
+                counting.add_collective(out, _COLLECTIVE_CLASS[op],
+                                        ins.result_bytes, _group_size(ins.raw),
+                                        mult, from_result=True)
                 continue
             self._instr_units(ins, out, mult)
             out.exec_count += mult
@@ -359,8 +336,7 @@ class _Walker:
                     t = self._operand_type(o)
                     if t is not None:
                         b += shape_bytes(t)
-                out.fused_bytes += b * mult
-                out.naive_bytes += b * mult
+                out.add_fused_io(b, mult)
             else:
                 self._boundary_io(ins, out, mult)
                 out.dispatch_count += mult
@@ -372,9 +348,9 @@ class _Walker:
             if t is not None:
                 b = shape_bytes(t)
                 b_read += b
-                out.max_buffer_bytes = max(out.max_buffer_bytes, b)
+                out.note_buffer(b)
         b_write = ins.result_bytes
-        out.max_buffer_bytes = max(out.max_buffer_bytes, b_write)
+        out.note_buffer(b_write)
         out.add_io(b_read, b_write, 0.0, mult)
 
 

@@ -31,6 +31,11 @@ from repro.core import isa
 from repro.core.opcount import OpCounts
 from repro.hw.spec import ChipSpec
 
+# Canonical class ids used on the timing/energy hot paths.
+_CTL_LOOP_ID = isa.CLASS_INDEX.intern("ctl.loop")
+_RANDOM_ACCESS_IDS = tuple(isa.CLASS_INDEX.intern(c) for c in
+                           ("gather", "scatter", "scatter_dma", "dus"))
+
 SENSOR_HZ = 10.0           # NVML-style sampling rate
 SENSOR_NOISE_W = 1.5       # gaussian sensor noise (W)
 SENSOR_QUANT_W = 1.0       # sensor quantization (W)
@@ -211,6 +216,17 @@ class _HiddenModel:
         self.static_mix_mxu = 0.10
         self.static_mix_hbm = -0.08
         self.static_util_slope = 0.12
+        # Vectorized truth over isa.CLASS_INDEX, lazily extended as new
+        # classes are interned (same currency axis the public model uses —
+        # the *values* stay private).
+        self._vec_n = 0
+        self._coeff_vec = np.zeros(0)       # J/unit per class id
+        self._time_w = np.zeros(0)          # s/unit on the VPU-side units
+        self._mxu_inv_rate = np.zeros(0)    # s/MAC (pre-efficiency) on MXU
+        self._is_mxu = np.zeros(0, bool)
+        self._is_vpu_like = np.zeros(0, bool)
+        self._is_ici = np.zeros(0, bool)
+        self._is_dcn = np.zeros(0, bool)
 
     # -- per-class truth with on-demand coefficients for unknown classes ----
     def coeff(self, cls: str) -> float:
@@ -221,6 +237,40 @@ class _HiddenModel:
         peers = [v for k, v in self.coeffs.items() if isa.bucket_of(k) == bucket]
         base = float(np.mean(peers)) if peers else 8e-12
         return base * (0.7 + 0.8 * _stable_unit(self.seed, "unk:" + cls))
+
+    def _class_vectors(self, n: int) -> None:
+        """Extend the per-class truth vectors to cover class ids < ``n``."""
+        if n <= self._vec_n:
+            return
+        idx = isa.CLASS_INDEX
+        codes = idx.bucket_codes(n)
+        grow = range(self._vec_n, n)
+        coeff = np.asarray([self.coeff(idx.name(i)) for i in grow])
+        vpu = self.chip.vpu_throughput
+        time_w = np.zeros(n - self._vec_n)
+        inv_rate = np.zeros(n - self._vec_n)
+        for j, i in enumerate(grow):
+            b = isa.BUCKET_ORDER[codes[i]]
+            if b == isa.BUCKET_MXU:
+                inv_rate[j] = 1.0 / self._mxu_rate(idx.name(i))
+            elif b == isa.BUCKET_VPU_TRANS:
+                time_w[j] = 4.0 / vpu
+            elif b in (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_INT):
+                time_w[j] = 1.0 / vpu
+            elif b == isa.BUCKET_MOVE:
+                time_w[j] = 1.0 / (vpu * 1.5)
+        m = self._vec_n
+        self._coeff_vec = np.concatenate([self._coeff_vec[:m], coeff])
+        self._time_w = np.concatenate([self._time_w[:m], time_w])
+        self._mxu_inv_rate = np.concatenate([self._mxu_inv_rate[:m], inv_rate])
+        self._is_mxu = codes == isa.BUCKET_CODE[isa.BUCKET_MXU]
+        self._is_vpu_like = np.isin(codes, [
+            isa.BUCKET_CODE[b] for b in
+            (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_TRANS,
+             isa.BUCKET_VPU_INT, isa.BUCKET_MOVE)])
+        self._is_ici = codes == isa.BUCKET_CODE[isa.BUCKET_ICI]
+        self._is_dcn = codes == isa.BUCKET_CODE[isa.BUCKET_DCN]
+        self._vec_n = n
 
     # -- traffic truth -------------------------------------------------------
     def _f_hbm(self, c: OpCounts) -> float:
@@ -260,31 +310,28 @@ class _HiddenModel:
 
     def times(self, c: OpCounts):
         chip = self.chip
-        t_mxu = t_vpu = 0.0
-        for cls, units in c.units.items():
-            bucket = isa.bucket_of(cls)
-            if bucket == isa.BUCKET_MXU:
-                frac_aligned = (c.mxu_macs_aligned / c.mxu_macs_total
-                                if c.mxu_macs_total > 0 else 1.0)
-                eff = (frac_aligned * self.mxu_eff_aligned
-                       + (1 - frac_aligned) * self.mxu_eff_misaligned)
-                t_mxu += units / (self._mxu_rate(cls) * max(eff, 1e-3))
-            elif bucket == isa.BUCKET_VPU_TRANS:
-                t_vpu += units / (chip.vpu_throughput / 4.0)
-            elif bucket in (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_INT):
-                t_vpu += units / chip.vpu_throughput
-            elif bucket == isa.BUCKET_MOVE:
-                t_vpu += units / (chip.vpu_throughput * 1.5)
+        v = c._vec
+        n = v.size
+        t_mxu = t_vpu = ici_bytes = dcn_bytes = loop_units = 0.0
+        if n:
+            self._class_vectors(n)
+            frac_aligned = (c.mxu_macs_aligned / c.mxu_macs_total
+                            if c.mxu_macs_total > 0 else 1.0)
+            eff = (frac_aligned * self.mxu_eff_aligned
+                   + (1 - frac_aligned) * self.mxu_eff_misaligned)
+            t_mxu = float(v @ self._mxu_inv_rate[:n]) / max(eff, 1e-3)
+            t_vpu = float(v @ self._time_w[:n])
+            ici_bytes = float(v[self._is_ici[:n]].sum())
+            dcn_bytes = float(v[self._is_dcn[:n]].sum())
+            loop_units = float(v[_CTL_LOOP_ID]) if n > _CTL_LOOP_ID else 0.0
         t_hbm = self.hbm_bytes(c) / (chip.hbm_bandwidth * 0.88)
-        ici_bytes = sum(u for k, u in c.units.items() if k.startswith("ici."))
         t_ici = ici_bytes / (chip.ici_links * chip.ici_link_bandwidth * 0.85)
-        dcn_bytes = c.units.get("dcn.transfer", 0.0)
         t_dcn = dcn_bytes / max(chip.dcn_bandwidth, 1.0)
         parts = [t_mxu, t_vpu, t_hbm, t_ici, t_dcn]
         crit = max(parts) if parts else 0.0
         busy = crit + self.serial_frac * (sum(parts) - crit)
         gap = (c.dispatch_count * self.dispatch_lat_s
-               + c.units.get("ctl.loop", 0.0) * self.loop_lat_s)
+               + loop_units * self.loop_lat_s)
         t_iter = busy + gap
         util = busy / max(t_iter, 1e-12)
         return t_iter, t_mxu, t_vpu, t_hbm, t_ici + t_dcn, util
@@ -295,8 +342,9 @@ class _HiddenModel:
         return lo + self.toggle_spread * _stable_unit(self.seed, "tg:" + context)
 
     def random_access_frac(self, c: OpCounts) -> float:
-        rand_elems = sum(c.units.get(k, 0.0) for k in
-                         ("gather", "scatter", "scatter_dma", "dus"))
+        v = c._vec
+        rand_elems = float(sum(v[i] for i in _RANDOM_ACCESS_IDS
+                               if i < v.size))
         return min(rand_elems * 4.0 / max(c.boundary_bytes, 1.0), 1.0)
 
     def dynamic_energy(self, c: OpCounts, context: str = "") -> float:
@@ -308,17 +356,15 @@ class _HiddenModel:
         mxu_mult = (frac_aligned * 1.0
                     + (1 - frac_aligned) * self.misaligned_energy_mult)
         toggle = self.toggle_factor(context)
+        v = c._vec
+        n = v.size
         e = 0.0
-        for cls, units in c.units.items():
-            bucket = isa.bucket_of(cls)
-            k = self.coeff(cls)
-            if bucket == isa.BUCKET_MXU:
-                e += units * k * mxu_mult * toggle
-            elif bucket in (isa.BUCKET_VPU_SIMPLE, isa.BUCKET_VPU_TRANS,
-                            isa.BUCKET_VPU_INT, isa.BUCKET_MOVE):
-                e += units * k * vpu_mult * toggle
-            else:
-                e += units * k
+        if n:
+            self._class_vectors(n)
+            factor = np.ones(n)
+            factor[self._is_mxu[:n]] = mxu_mult * toggle
+            factor[self._is_vpu_like[:n]] = vpu_mult * toggle
+            e = float(np.sum(v * self._coeff_vec[:n] * factor))
         hbm_r, hbm_w, vmem_r, vmem_w = self.traffic(c)
         row_mult = 1.0 + self.random_access_mult * self.random_access_frac(c)
         # per-program access-pattern factor (row-buffer locality, banking)

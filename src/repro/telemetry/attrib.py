@@ -26,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core import isa
 from repro.core.opcount import OpCounts
 from repro.core.predict import Prediction, TablePredictor
 from repro.telemetry.align import AlignedWindow
@@ -35,7 +36,13 @@ _EPS = 1e-12
 
 @dataclasses.dataclass
 class StepAttribution:
-    """One window's measured-vs-predicted verdict."""
+    """One window's measured-vs-predicted verdict.
+
+    The per-class *measured* split (the prediction's class shares rescaled
+    onto the measured dynamic joules) is carried as a vector over
+    ``isa.CLASS_INDEX`` (``measured_class_vec``); the dict form
+    (``by_class_measured``) materializes lazily on first read.
+    """
 
     step: int
     name: str
@@ -44,8 +51,14 @@ class StepAttribution:
     predicted_j: float
     measured_dyn_j: float       # measured minus (const+static) * duration
     predicted_dyn_j: float
-    by_class_measured: Dict[str, float]   # predicted shares × measured dyn J
+    measured_class_vec: np.ndarray   # predicted shares × measured dyn J
     prediction: Prediction
+
+    @property
+    def by_class_measured(self) -> Dict[str, float]:
+        v = self.measured_class_vec
+        name = isa.CLASS_INDEX.name
+        return {name(int(i)): float(v[i]) for i in np.nonzero(v)[0]}
 
     @property
     def residual_j(self) -> float:
@@ -189,12 +202,12 @@ class OnlineAttributor:
         meas_dyn = window.measured_j - overhead
         pred_dyn = max(pred.dynamic_j, _EPS)
         scale = meas_dyn / pred_dyn
-        by_meas = {cls: e * scale for cls, e in pred.by_class.items()}
         att = StepAttribution(
             step=window.step, name=window.name,
             duration_s=window.duration_s, measured_j=window.measured_j,
             predicted_j=pred.total_j, measured_dyn_j=meas_dyn,
-            predicted_dyn_j=pred.dynamic_j, by_class_measured=by_meas,
+            predicted_dyn_j=pred.dynamic_j,
+            measured_class_vec=pred.class_energy_vec * scale,
             prediction=pred)
         self.attributions.append(att)
         self.drift = self.detector.update(att.dyn_ratio)
@@ -226,8 +239,13 @@ class OnlineAttributor:
         return mape_pct(self.attributions)
 
     def top_measured_classes(self, k: int = 10):
-        agg: Dict[str, float] = {}
+        if not self.attributions:
+            return []
+        n = max(a.measured_class_vec.size for a in self.attributions)
+        agg = np.zeros(n)
         for a in self.attributions:
-            for cls, e in a.by_class_measured.items():
-                agg[cls] = agg.get(cls, 0.0) + e
-        return sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+            v = a.measured_class_vec
+            agg[:v.size] += v
+        top = np.argsort(-agg)[:k]
+        name = isa.CLASS_INDEX.name
+        return [(name(int(i)), float(agg[i])) for i in top if agg[i] != 0.0]

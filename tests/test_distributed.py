@@ -28,8 +28,8 @@ def test_compressed_psum_close_to_exact():
     from jax.experimental.shard_map import shard_map
     from repro.parallel.compression import compressed_psum
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=P("data", None),
@@ -53,8 +53,8 @@ def test_error_feedback_converges():
     from jax.experimental.shard_map import shard_map
     from repro.parallel.compression import make_error_feedback
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     step = make_error_feedback()
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 256)) * 0.01
 
@@ -125,8 +125,8 @@ def test_hlo_collective_accounting_on_real_compile():
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.hlo import collective_bytes
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     def step(x, ws):
         def body(h, w):
@@ -194,8 +194,8 @@ def test_opcount_shard_map_collectives():
     from jax.experimental.shard_map import shard_map
     from repro.core.opcount import count_fn
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=P("data", None),
                        out_specs=P("data", None))

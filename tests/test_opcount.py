@@ -1,10 +1,12 @@
-"""Unit tests for the jaxpr op counter (the profiler)."""
+"""Unit tests for the jaxpr op counter (the profiler) and the array-backed
+``OpCounts`` currency (``core.counting``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import isa, opcount
+from repro.core import counting, isa, opcount
+from repro.core.counting import OpCounts
 
 
 def _sds(shape, dtype=jnp.float32):
@@ -117,3 +119,118 @@ def test_grouping_folds_modifiers():
     assert isa.group_class("log1p.f32") == "log.f32"
     assert isa.group_class("shift_left.int") == "shift.int"
     assert isa.group_class("exp.bf16") == "exp.bf16"
+
+
+# ---------------------------------------------------------------------------
+# Array-backed OpCounts: the vectorized currency.
+# ---------------------------------------------------------------------------
+def test_class_index_ids_are_stable_and_append_only():
+    i1 = isa.CLASS_INDEX.intern("dot.bf16")
+    assert isa.CLASS_INDEX.intern("dot.bf16") == i1
+    n_before = len(isa.CLASS_INDEX)
+    j = isa.CLASS_INDEX.intern("totally_new_op.f32")
+    assert j >= n_before                      # appended, nothing reindexed
+    assert isa.CLASS_INDEX.intern("dot.bf16") == i1
+    assert isa.CLASS_INDEX.name(j) == "totally_new_op.f32"
+    # bucket codes align with bucket_of
+    codes = isa.CLASS_INDEX.bucket_codes()
+    assert isa.BUCKET_ORDER[codes[i1]] == isa.BUCKET_MXU
+
+
+def test_units_round_trips_through_dict_view():
+    c = OpCounts()
+    c.add("dot.bf16", 1e9)
+    c.add("exp.f32", 5e5)
+    c.add("weird_new_prim.f32", 3.0)         # interned raw class
+    d = dict(c.units.items())
+    back = OpCounts(units=d)
+    assert back.units == c.units
+    assert dict(back.units.items()) == d
+    n = len(isa.CLASS_INDEX)
+    np.testing.assert_array_equal(back.vector(n), c.vector(n))
+
+
+def test_units_view_reads_like_defaultdict():
+    c = OpCounts()
+    c.add("add.f32", 7.0)
+    assert c.units["add.f32"] == 7.0
+    assert c.units["never_seen.f32"] == 0.0      # missing reads as 0.0
+    assert c.units.get("never_seen.f32") is None
+    assert "add.f32" in c.units and "mul.f32" not in c.units
+    assert len(c.units) == 1 and list(c.units) == ["add.f32"]
+
+
+def test_merge_and_scale_equal_elementwise_vector_arithmetic():
+    x = OpCounts()
+    x.add("add.f32", 3.0)
+    x.add("dot.bf16", 10.0)
+    y = OpCounts()
+    y.add("add.f32", 4.0)
+    y.add("exp.f32", 5.0)
+    n = len(isa.CLASS_INDEX)
+    want = x.vector(n) + 2.5 * y.vector(n)
+    z = x.scaled(1.0)
+    z.merge(y, 2.5)
+    np.testing.assert_array_equal(z.vector(n), want)
+    np.testing.assert_array_equal(x.scaled(3.0).vector(n), x.vector(n) * 3.0)
+
+
+def test_units_dict_mutation_warns_once_and_redirects(monkeypatch):
+    monkeypatch.setattr(counting, "_MUTATION_WARNED", False)
+    c = OpCounts()
+    with pytest.warns(DeprecationWarning, match="OpCounts.add"):
+        c.units["add.f32"] = 9.0
+    assert c.units["add.f32"] == 9.0             # write went through the index
+    assert c.vector()[isa.CLASS_INDEX.id("add.f32")] == 9.0
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as record:  # warn-once
+        _warnings.simplefilter("always")
+        c.units["add.f32"] = 10.0
+    assert not [w for w in record
+                if issubclass(w.category, DeprecationWarning)]
+    assert c.units["add.f32"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-vs-HLO front-end parity on a shared compiled fixture.
+# ---------------------------------------------------------------------------
+def test_jaxpr_and_hlo_counters_agree_on_compiled_fixture():
+    from repro.hlo.opcount import count_hlo_text
+
+    def fn(a, b):
+        h = jnp.tanh(a @ b)
+        return (h + 1.5).sum()
+
+    args = (_sds((256, 512)), _sds((512, 128)))
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    cj = opcount.count_fn(fn, *args)
+    ch = count_hlo_text(txt)
+    # structural classes agree exactly: both front-ends price through the
+    # shared core (counting.add_dot / group_class / add_reduce)
+    assert ch.units["dot.f32"] == cj.units["dot.f32"] == 256 * 512 * 128
+    assert ch.mxu_macs_total == cj.mxu_macs_total
+    assert ch.mxu_macs_aligned == cj.mxu_macs_aligned
+    assert ch.units["tanh.f32"] == cj.units["tanh.f32"]
+    assert ch.units["add.f32"] == cj.units["add.f32"]
+    # XLA may restructure reductions (reduce-window chains); totals stay close
+    assert ch.units["reduce.add.f32"] == pytest.approx(
+        cj.units["reduce.add.f32"], rel=0.05)
+    assert ch.flops == pytest.approx(cj.flops, rel=0.01)
+    # both observe the tanh+add chain as fused (VMEM-resident) traffic
+    assert cj.fused_bytes > 0 and ch.fused_bytes > 0
+
+
+def test_hlo_counter_has_no_private_accumulation():
+    """The HLO front-end must price through the shared core: no local
+    collective-wire table, dtype-grouping table, or MMA-form selection."""
+    import inspect
+
+    import repro.hlo.opcount as hlo_oc
+    src = inspect.getsource(hlo_oc)
+    assert "dot_group" not in src            # MMA selection is the core's
+    assert "dot_small" not in src
+    assert "(n - 1)" not in src              # wire formulas are the core's
+    assert "_DTYPE_TAG = {" not in src       # dtype grouping is the core's
+    for fn in ("add_dot", "add_conv", "add_collective", "merge_loop_body",
+               "merge_best_branch", "add_reduce", "convert_class"):
+        assert f"counting.{fn}" in src

@@ -115,3 +115,50 @@ def test_opcounts_merge_additive(a_units, b_units, bbytes):
     z.merge(y)
     assert math.isclose(z.units["add.f32"], a_units + b_units, rel_tol=1e-12)
     assert math.isclose(z.boundary_bytes, 1.5 * bbytes, rel_tol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Array-backed currency invariants (the PR-3 vectorization).
+# ---------------------------------------------------------------------------
+_CLASS_NAMES = st.sampled_from(sorted(isa.CLASS_BY_NAME))
+_UNIT_DICTS = st.dictionaries(_CLASS_NAMES, st.floats(1e-3, 1e9),
+                              min_size=0, max_size=12)
+
+
+@given(_UNIT_DICTS)
+@settings(max_examples=40)
+def test_opcounts_round_trip_through_dict_view(d):
+    c = OpCounts(units=d)
+    assert dict(c.units.items()) == {k: v for k, v in d.items() if v != 0.0}
+    back = OpCounts(units=dict(c.units.items()))
+    n = len(isa.CLASS_INDEX)
+    np.testing.assert_array_equal(back.vector(n), c.vector(n))
+    assert back.units == c.units
+
+
+@given(_UNIT_DICTS, _UNIT_DICTS, st.floats(0.0, 1e4))
+@settings(max_examples=40)
+def test_merge_mult_equals_elementwise_arithmetic(da, db, mult):
+    x, y = OpCounts(units=da), OpCounts(units=db)
+    n = len(isa.CLASS_INDEX)
+    want = x.vector(n) + y.vector(n) * mult
+    z = x.scaled(1.0)
+    z.merge(y, mult)
+    np.testing.assert_array_equal(z.vector(n), want)
+
+
+@given(st.lists(st.tuples(_UNIT_DICTS, st.floats(0.01, 100.0)),
+                min_size=1, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_predict_batch_bitwise_equals_per_program_loop(jobs):
+    from repro.core.predict import TablePredictor
+    predictor = TablePredictor(TABLE)
+    counts = [OpCounts(units=d) for d, _ in jobs]
+    durs = [dur for _, dur in jobs]
+    loop = [predictor.predict(c, t, counters={}) for c, t in zip(counts, durs)]
+    batch = predictor.predict_batch(counts, durs, [{}] * len(jobs))
+    for a, b in zip(loop, batch):
+        assert a.total_j == b.total_j          # bitwise, not approx
+        assert a.dynamic_j == b.dynamic_j
+        assert a.coverage == b.coverage
+        assert a.by_class == b.by_class
