@@ -1,0 +1,110 @@
+"""Calibration-pipeline throughput — the training half's hot path.
+
+Times three calibration protocols against one system (short steady-state
+durations; throughput, not table quality):
+
+* ``full``       — the complete plan/measure/solve/extend pipeline into a
+                   fresh run directory;
+* ``fractional`` — ``profile_fraction=0.25`` with a donor table: only the
+                   sampled quarter of the suite is measured, everything
+                   else is affine-mapped (the Fig. 14 bring-up path);
+* ``resumed``    — the full campaign re-run against its completed run
+                   directory: every record is loaded instead of re-measured,
+                   leaving only plan + solve + extend (the
+                   interrupted-calibration recovery cost).
+
+Emits JSON (``--out``, default ``results/BENCH_calibrate_throughput.json``)
+so the perf trajectory populates run over run, plus the repo's CSV line
+format on stdout.  Run as a CI smoke step with artifact upload, same shape
+as ``predict_throughput``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+from benchmarks.common import record
+from repro.core import calibrate as cal
+
+SYSTEM = "sim-v5e-air"
+DONOR_SYSTEM = "sim-v5e-liquid"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_calibrate_throughput.json")
+    ap.add_argument("--duration", type=float, default=8.0,
+                    help="steady-state seconds per benchmark")
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--fraction", type=float, default=0.25)
+    ap.add_argument("--min-resume-speedup", type=float, default=0.0,
+                    help="fail unless the resumed pass beats full by this")
+    args = ap.parse_args(argv)
+
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="bench_calibrate_"))
+    kw = dict(duration_s=args.duration, repeats=args.repeats)
+
+    t0 = time.perf_counter()
+    table_full = cal.calibrate(SYSTEM, run_dir=tmp / "full", **kw)
+    t_full = time.perf_counter() - t0
+
+    # donor for the fractional pass: reuse the freshly calibrated table as
+    # an affine source for the *other* system (throughput only)
+    t0 = time.perf_counter()
+    table_frac = cal.calibrate(DONOR_SYSTEM, run_dir=tmp / "frac",
+                               profile_fraction=args.fraction,
+                               donor=table_full, **kw)
+    t_frac = time.perf_counter() - t0
+
+    # resume against the completed full run: records load, nothing re-runs
+    t0 = time.perf_counter()
+    table_resumed = cal.calibrate(SYSTEM, run_dir=tmp / "full", **kw)
+    t_resume = time.perf_counter() - t0
+
+    identical = table_resumed == table_full
+    n_specs = len(cal.plan(SYSTEM, **kw).specs)
+    resume_speedup = t_full / max(t_resume, 1e-12)
+
+    result = {
+        "benchmark": "calibrate_throughput",
+        "duration_s_per_bench": args.duration,
+        "repeats": args.repeats,
+        "n_specs": n_specs,
+        "full_s": t_full,
+        "fractional_s": t_frac,
+        "fractional_fraction": args.fraction,
+        "fractional_n_measured": int(table_frac.provenance["n_measured"]),
+        "resumed_s": t_resume,
+        "resume_speedup_vs_full": resume_speedup,
+        "resumed_bitwise_identical": identical,
+        "full_residual_rel": table_full.meta["residual_rel"],
+        "fractional_r2_fit": table_frac.meta["r2_fit"],
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    record("calibrate_full", t_full * 1e6, f"n_specs={n_specs}")
+    record("calibrate_fractional", t_frac * 1e6,
+           f"measured={result['fractional_n_measured']}/{n_specs - 2}")
+    record("calibrate_resumed", t_resume * 1e6,
+           f"speedup_vs_full=x{resume_speedup:.1f} identical={identical}")
+    print(f"wrote {out}")
+
+    if not identical:
+        print("FAIL: resumed table is not bitwise-identical to the full run",
+              file=sys.stderr)
+        return 1
+    if resume_speedup < args.min_resume_speedup:
+        print(f"FAIL: resume speedup x{resume_speedup:.1f} < required "
+              f"x{args.min_resume_speedup:.1f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

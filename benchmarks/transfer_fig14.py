@@ -1,8 +1,11 @@
-"""Figure 14: cross-system affine transfer of the energy table.
+"""Figure 14: cross-system bootstrap of the energy table.
 
-Fit air->liquid on a random 10% / 50% subset of classes, predict the rest,
-and show workload MAPE stays at the fully-profiled level (plus the R² of
-the underlying linear relationship, paper: 0.988)."""
+Calibrate the liquid-cooled system through the unified pipeline while
+*measuring* only a random 10% / 50% of its microbenchmark suite
+(``EnergyModel.train(profile_fraction=..., donor=...)``), affine-mapping
+every other class from the air-cooled donor table, and show workload MAPE
+stays at the fully-profiled level (plus the R² of the underlying linear
+relationship, paper: 0.988)."""
 from __future__ import annotations
 
 from benchmarks.common import timed
@@ -15,15 +18,15 @@ from repro.core.evaluate import evaluate_system
 def fig14():
     air = EnergyModel.from_store("sim-v5e-air").table
     liq_model = EnergyModel.from_store("sim-v5e-liquid")
-    liq = liq_model.table
-    r2 = transfer.r2_between(air, liq)
-    chip = liq_model.device.chip
+    r2 = transfer.r2_between(air, liq_model.table)
     out = [f"R2={r2:.3f}"]
     for frac in (0.1, 0.5):
-        hybrid, _ = transfer.transfer_table(air, liq, frac, seed=3, chip=chip)
+        hybrid = EnergyModel.train("sim-v5e-liquid", profile_fraction=frac,
+                                   donor=air, seed=3).table
         rep = evaluate_system("sim-v5e-liquid", table=hybrid,
                               with_accelwattch=False, with_guser=False)
-        out.append(f"{int(frac*100)}%={rep.mape_table()['wattchmen_pred']:.1f}%")
+        out.append(f"{int(frac*100)}%={rep.mape_table()['wattchmen_pred']:.1f}%"
+                   f"(n={int(hybrid.provenance['n_measured'])})")
     rep_full = evaluate_system("sim-v5e-liquid", model=liq_model,
                                with_accelwattch=False, with_guser=False)
     out.append(f"100%={rep_full.mape_table()['wattchmen_pred']:.1f}%")

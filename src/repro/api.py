@@ -159,12 +159,37 @@ class EnergyModel:
     # -- construction -------------------------------------------------------
     @classmethod
     def train(cls, system: str, *, store: Union[bool, TableStore] = False,
+              resume: bool = False,
+              profile_fraction: Optional[float] = None,
+              donor: Union["EnergyModel", EnergyTable, str, None] = None,
               **train_kwargs) -> "EnergyModel":
-        """Train a fresh table now; ``store=True`` persists it."""
-        table = train_table(system, **train_kwargs)
-        if store:
-            (store if isinstance(store, TableStore)
-             else default_store()).put(table)
+        """Calibrate a table now through the staged pipeline.
+
+        ``store=True`` persists the result.  ``resume=True`` runs the
+        campaign against its persistent run directory (under the store), so
+        an interrupted calibration continues from the completed measurement
+        records.  ``profile_fraction`` + ``donor`` select the Fig. 14
+        bootstrap: measure only the sampled fraction of the suite on this
+        system and affine-map everything else from the donor table (an
+        ``EnergyTable``, another ``EnergyModel``, or a system name resolved
+        through the store).
+        """
+        from repro.core.calibrate import calibrate
+        store_obj = (store if isinstance(store, TableStore)
+                     else default_store() if store else None)
+        run_dir = None
+        if resume:
+            run_dir = (store_obj or default_store()).run_dir(system)
+            if profile_fraction is not None:
+                # fractional campaigns measure a different (sampled) plan —
+                # keep their records apart from the full-profile run
+                run_dir = run_dir.with_name(
+                    f"{run_dir.name}__frac{int(profile_fraction * 1000)}"
+                    f"_s{train_kwargs.get('seed', 0)}")
+        table = calibrate(system, profile_fraction=profile_fraction,
+                          donor=donor, run_dir=run_dir, resume=resume,
+                          on_plan_mismatch="discard", store=store_obj,
+                          **train_kwargs)
         return cls(table, system=system)
 
     @classmethod
@@ -179,11 +204,16 @@ class EnergyModel:
 
         On a store miss (or stale schema) the table is trained once and
         written back, so the *next* process — or the next fleet node sharing
-        the store — skips training entirely.
+        the store — skips training entirely.  Training runs through the
+        resumable calibration pipeline: its measurement records persist
+        incrementally under the store, so even an interrupted first
+        training continues instead of restarting.
         """
         store = store or default_store()
         if train_if_missing:
-            table = store.get_or_train(system, train_table)
+            table = store.get_or_train(
+                system, lambda s: train_table(s, run_dir=store.run_dir(s),
+                                              resume=True))
         else:
             table = store.get(system)
             if table is None:

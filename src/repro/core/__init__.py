@@ -4,8 +4,11 @@ These modules are the *engine*; the public surface is the ``EnergyModel``
 facade in ``repro.api`` (train/load/from_store + profile/predict/measure/
 compare/attribute/monitor).  Engine map:
 
-Training phase:  ``trainer.train_table(system)`` -> ``EnergyTable``
-Persistence:     ``store.TableStore`` (on-disk, schema-versioned JSON)
+Training phase:  ``calibrate.calibrate(system)`` -> ``EnergyTable``
+                 (staged + resumable: plan -> measure -> solve -> extend ->
+                 publish; ``trainer.train_table`` is the one-shot shim)
+Persistence:     ``store.TableStore`` (on-disk, schema-versioned JSON +
+                 per-run calibration records)
 Prediction:      ``predict.TablePredictor`` (amortized lookups) /
                  ``predict.predict`` (one-shot)
 Profiler:        ``opcount.count_fn`` (jaxpr) + ``repro.hlo`` (compiled HLO)

@@ -1,0 +1,591 @@
+"""The training half as a staged, resumable pipeline — paper Fig. 2 (top).
+
+``trainer.train_table`` used to be a serial monolith: probe, run all ~76
+steady-state microbenchmarks, solve, extend — all in one process lifetime,
+losing everything on interruption.  This module splits it into composable
+stages over the same vector currency (``isa.CLASS_INDEX``) prediction has
+used since the batching refactor:
+
+  **plan**     the microbenchmark suite, idle/NANOSLEEP probes, repeat
+               schedule — and, in ``profile_fraction`` mode, the sampled
+               subset of classes to actually measure — as *data*
+               (``CalibrationPlan``);
+  **measure**  each probe/benchmark executed to steady state and persisted
+               *incrementally* to a per-run directory (one JSON record per
+               spec, atomic writes), so an interrupted calibration resumes
+               from the completed records and re-runs nothing;
+  **solve**    NNLS over the stacked counts matrix (square in full mode;
+               donor-affine-pinned reduced solve in fractional mode);
+  **extend**   coverage extension (scaling + bucketing, §3.4);
+  **publish**  atomic write into the ``TableStore``.
+
+Measurement records are *order independent*: every run draws its sensor
+noise from a deterministic substream keyed on (device seed, spec id,
+repeat) — ``SimDevice.noise_rng`` — so a calibration interrupted after k
+benchmarks and resumed later produces a table bit-identical to the
+uninterrupted run.
+
+Fractional mode folds the paper's §6/Fig. 14 bootstrap into calibration
+proper: measure only a sampled fraction of the suite on the new system,
+fit the donor->target affine map on the sampled classes, pin the
+unmeasured columns to affine-mapped donor energies in the solve, and
+affine-predict every remaining donor class (including ones the target
+suite never benches).  ``calibrate_fleet`` runs the measure/solve stages
+for several systems concurrently — new systems are brought up the way
+``TablePredictor`` already prices batches of programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import warnings
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Union)
+
+import numpy as np
+
+from repro.core import coverage, measure as measure_mod, microbench, solver
+from repro.core.table import EnergyTable
+from repro.core.transfer import TransferFit, hybrid_direct, sample_classes
+from repro.hw.device import Program, SimDevice
+from repro.hw.systems import get_device
+
+BENCH_TARGET_SECONDS = 120.0   # steady-state duration per benchmark (§6: 180s
+                               # on hardware; the plateau is reached well
+                               # before that on the simulated systems too)
+REPEATS = 3                    # medians over repeats (paper: 5)
+IDLE_SECONDS = 30.0            # constant-power probe duration
+
+RECORD_VERSION = 1
+
+KIND_IDLE = "idle"
+KIND_NANOSLEEP = "nanosleep"
+KIND_BENCH = "bench"
+
+
+class CalibrationError(RuntimeError):
+    """A pipeline stage cannot proceed (mismatched plan, missing records)."""
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: plan.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """One unit of measurement: a probe or microbenchmark × repeat count."""
+
+    spec_id: str               # stable id: record filename + noise-key stem
+    kind: str                  # idle | nanosleep | bench
+    name: str
+    target: Optional[str]      # benched op class (bench kind only)
+    repeats: int
+    duration_s: float
+
+
+@dataclasses.dataclass
+class CalibrationPlan:
+    """The whole campaign as data: what to run, what to solve."""
+
+    system: str
+    isa_gen: int
+    duration_s: float
+    repeats: int
+    seed: int
+    profile_fraction: Optional[float]      # None => full calibration
+    donor_system: Optional[str]
+    suite: List[microbench.MicroBench]
+    targets: List[str]                     # benched classes, suite order
+    measured: List[str]                    # classes actually run, suite order
+    specs: List[ProbeSpec]
+    donor_table: Optional[EnergyTable] = None
+
+    @property
+    def is_fractional(self) -> bool:
+        return self.profile_fraction is not None
+
+    def spec_ids(self) -> List[str]:
+        return [s.spec_id for s in self.specs]
+
+    def fingerprint(self) -> Dict[str, Any]:
+        """Identity of the campaign — resumed runs must match exactly."""
+        return {
+            "record_version": RECORD_VERSION,
+            "system": self.system,
+            "isa_gen": self.isa_gen,
+            "duration_s": self.duration_s,
+            "repeats": self.repeats,
+            "seed": self.seed,
+            "profile_fraction": self.profile_fraction,
+            "donor_system": self.donor_system,
+            "spec_ids": self.spec_ids(),
+        }
+
+
+def plan(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
+         repeats: int = REPEATS,
+         profile_fraction: Optional[float] = None,
+         donor: Optional[EnergyTable] = None,
+         seed: int = 0,
+         device: Optional[SimDevice] = None) -> CalibrationPlan:
+    """Build the campaign: suite + probes + (optionally sampled) schedule."""
+    dev = device or get_device(system)
+    gen = dev.chip.isa_gen
+    suite = microbench.build_suite(isa_gen=gen)
+    targets = microbench.benched_classes(suite)
+    # The square-system property: one benchmark per benched class (§3.1).
+    assert len(targets) == len(set(targets)) == len(suite), \
+        "system of equations must stay square"
+
+    if profile_fraction is not None:
+        if donor is None:
+            raise CalibrationError(
+                "profile_fraction calibration needs a donor table "
+                "(the Fig. 14 affine-transfer source)")
+        if not 0.0 < profile_fraction <= 1.0:
+            raise CalibrationError(
+                f"profile_fraction must be in (0, 1], got {profile_fraction}")
+        common = set(targets) & set(donor.direct)
+        candidates = sorted(c for c in common if donor.direct[c] > 0)
+        sampled = set(sample_classes(candidates, population=len(common),
+                                     fraction=profile_fraction, seed=seed))
+        # classes the donor cannot predict must be measured regardless
+        forced = set(targets) - set(candidates)
+        keep = sampled | forced
+        measured = [t for t in targets if t in keep]
+    else:
+        measured = list(targets)
+
+    specs = [
+        ProbeSpec(spec_id="idle", kind=KIND_IDLE, name="IDLE_probe",
+                  target=None, repeats=repeats, duration_s=IDLE_SECONDS),
+        ProbeSpec(spec_id="nanosleep", kind=KIND_NANOSLEEP,
+                  name="CTL_NANOSLEEP_probe", target="ctl.loop",
+                  repeats=repeats, duration_s=duration_s),
+    ]
+    keep = set(measured)
+    specs += [ProbeSpec(spec_id=f"bench:{b.name}", kind=KIND_BENCH,
+                        name=b.name, target=b.target, repeats=repeats,
+                        duration_s=duration_s)
+              for b in suite if b.target in keep]
+    return CalibrationPlan(
+        system=dev.name, isa_gen=gen, duration_s=duration_s, repeats=repeats,
+        seed=seed, profile_fraction=profile_fraction,
+        donor_system=donor.system if donor is not None else None,
+        suite=suite, targets=targets, measured=measured, specs=specs,
+        donor_table=donor)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: measure (incremental, resumable).
+# ---------------------------------------------------------------------------
+class RunLedger:
+    """Per-campaign record set, optionally persisted one file per spec.
+
+    With a ``run_dir`` every completed record is written atomically as JSON
+    under ``<run_dir>/records/``, and the campaign fingerprint is pinned in
+    ``<run_dir>/plan.json`` so a resume against a different plan fails loud
+    instead of mixing incompatible records.  Without a directory the ledger
+    is an in-memory dict (the one-shot ``train_table`` path).
+    """
+
+    def __init__(self, run_dir: Optional[Union[str, os.PathLike]] = None):
+        self.run_dir = pathlib.Path(run_dir) if run_dir is not None else None
+        self.records: Dict[str, Dict[str, Any]] = {}
+
+    # -- layout -------------------------------------------------------------
+    def _records_dir(self) -> pathlib.Path:
+        assert self.run_dir is not None
+        return self.run_dir / "records"
+
+    @staticmethod
+    def _fname(spec_id: str) -> str:
+        return spec_id.replace(":", "__") + ".json"
+
+    def _write_json(self, path: pathlib.Path, payload: Mapping[str, Any]):
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    # -- plan binding -------------------------------------------------------
+    def bind(self, p: CalibrationPlan, resume: bool = True,
+             on_mismatch: str = "raise") -> None:
+        """Attach to the plan: load completed records, pin the fingerprint.
+
+        ``on_mismatch`` decides what happens when the directory holds
+        records for a *different* plan: ``"raise"`` (explicit callers —
+        never mix incompatible records silently) or ``"discard"`` (warn and
+        start over; the unattended ``from_store``/``get_or_train`` path,
+        where stale records from an obsolete plan could otherwise wedge
+        every future load).
+        """
+        self.records.clear()
+        if self.run_dir is None:
+            return
+        fp_path = self.run_dir / "plan.json"
+        want = p.fingerprint()
+        if fp_path.exists():
+            have = json.loads(fp_path.read_text())
+            if have != want:
+                if resume and on_mismatch != "discard":
+                    raise CalibrationError(
+                        f"run directory {self.run_dir} holds records for a "
+                        f"different calibration plan; pass resume=False to "
+                        f"discard them or use a fresh run_dir")
+                if resume:
+                    warnings.warn(
+                        f"discarding calibration records in {self.run_dir}: "
+                        f"they belong to a different (obsolete) plan",
+                        RuntimeWarning, stacklevel=2)
+                shutil.rmtree(self.run_dir)
+        elif self.run_dir.exists() and not resume:
+            shutil.rmtree(self.run_dir)
+        self._write_json(fp_path, want)
+        rdir = self._records_dir()
+        if not resume or not rdir.is_dir():
+            return
+        for spec in p.specs:
+            path = rdir / self._fname(spec.spec_id)
+            if path.exists():
+                rec = json.loads(path.read_text())
+                if rec.get("record_version") == RECORD_VERSION:
+                    self.records[spec.spec_id] = rec
+
+    # -- record io ----------------------------------------------------------
+    def put(self, record: Dict[str, Any]) -> None:
+        self.records[record["spec_id"]] = record
+        if self.run_dir is not None:
+            self._write_json(
+                self._records_dir() / self._fname(record["spec_id"]), record)
+
+    def missing(self, p: CalibrationPlan) -> List[ProbeSpec]:
+        return [s for s in p.specs if s.spec_id not in self.records]
+
+    def complete(self, p: CalibrationPlan) -> bool:
+        return not self.missing(p)
+
+
+def _measure_one(dev: SimDevice, p: CalibrationPlan,
+                 spec: ProbeSpec) -> Dict[str, Any]:
+    """Execute one spec (all repeats) and reduce it to its record payload.
+
+    Records hold only the derived observables the solve needs (powers,
+    total joules, profiler counters) — a few hundred bytes per benchmark
+    instead of full sensor traces.
+    """
+    repeats: List[Dict[str, Any]] = []
+    for r in range(spec.repeats):
+        key = f"calib:{spec.spec_id}:r{r}"
+        if spec.kind == KIND_IDLE:
+            trace = dev.idle(spec.duration_s, noise_key=key)
+            repeats.append(
+                {"p_const_w": measure_mod.constant_power(trace)})
+        elif spec.kind == KIND_NANOSLEEP:
+            counts = microbench._nanosleep_counts()
+            prog = Program(spec.name, counts,
+                           iters=dev.iters_for_duration(counts,
+                                                        spec.duration_s),
+                           is_nanosleep=True)
+            rec = dev.run(prog, noise_key=key)
+            ss = measure_mod.detect_steady_state(rec.trace)
+            repeats.append({"ss_power_w": float(ss.power_w)})
+        else:
+            bench = next(b for b in p.suite if b.name == spec.name)
+            iters = dev.iters_for_duration(bench.counts, spec.duration_s)
+            prog = Program(bench.name, bench.counts, iters=iters,
+                           is_nanosleep=bench.is_nanosleep)
+            rec = dev.run(prog, noise_key=key)
+            repeats.append({
+                "total_j": measure_mod.total_energy(rec),
+                "duration_s": float(rec.duration_s),
+                "iters": int(rec.iters),
+                "counters": {k: float(v) for k, v in rec.counters.items()},
+            })
+    return {"record_version": RECORD_VERSION, "spec_id": spec.spec_id,
+            "kind": spec.kind, "name": spec.name, "target": spec.target,
+            "repeats": repeats}
+
+
+def run_measurements(p: CalibrationPlan,
+                     ledger: Optional[RunLedger] = None,
+                     device: Optional[SimDevice] = None,
+                     *, limit: Optional[int] = None,
+                     progress: Optional[Callable[[ProbeSpec, int, int],
+                                                 None]] = None) -> RunLedger:
+    """Execute (up to ``limit``) pending specs, persisting each record.
+
+    Already-recorded specs are skipped — calling this again after an
+    interruption continues exactly where the campaign stopped.
+    """
+    ledger = ledger or RunLedger()
+    dev = device or get_device(p.system)
+    pending = ledger.missing(p)
+    total = len(p.specs)
+    for i, spec in enumerate(pending):
+        if limit is not None and i >= limit:
+            break
+        if progress is not None:
+            progress(spec, total - len(pending) + i, total)
+        ledger.put(_measure_one(dev, p, spec))
+    return ledger
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: solve.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _SolveRecord:
+    """The slice of a ``RunRecord`` the system assembly consumes."""
+
+    iters: int
+    counters: Dict[str, float]
+
+
+def _powers(ledger: RunLedger) -> tuple:
+    idle = ledger.records.get("idle")
+    ns = ledger.records.get("nanosleep")
+    if idle is None or ns is None:
+        raise CalibrationError("idle/nanosleep probe records missing")
+    p_const = float(np.median([r["p_const_w"] for r in idle["repeats"]]))
+    p_static = float(np.median([max(r["ss_power_w"] - p_const, 0.0)
+                                for r in ns["repeats"]]))
+    return p_const, p_static
+
+
+def solve(p: CalibrationPlan, ledger: RunLedger) -> EnergyTable:
+    """Median-reduce the records and solve the (square or pinned) system."""
+    missing = ledger.missing(p)
+    if missing:
+        raise CalibrationError(
+            f"cannot solve: {len(missing)} measurement records pending "
+            f"(first: {missing[0].spec_id}); resume the measure stage first")
+    p_const, p_static = _powers(ledger)
+
+    bench_by_target = {b.target: b for b in p.suite}
+    rows, recs, dyn = [], [], []
+    for target in p.measured:
+        bench = bench_by_target[target]
+        rec = ledger.records[f"bench:{bench.name}"]
+        energies = [max(rep["total_j"]
+                        - (p_const + p_static) * rep["duration_s"], 0.0)
+                    for rep in rec["repeats"]]
+        med = int(np.argsort(energies)[len(energies) // 2])
+        rep = rec["repeats"][med]
+        rows.append(bench)
+        recs.append(_SolveRecord(iters=rep["iters"],
+                                 counters=dict(rep["counters"])))
+        dyn.append(energies[med])
+
+    meta = {"n_benchmarks": float(len(rows)), "isa_gen": float(p.isa_gen)}
+    provenance: Dict[str, Any] = {
+        "pipeline": "core.calibrate",
+        "mode": "fractional" if p.is_fractional else "full",
+        "seed": p.seed,
+        "repeats": p.repeats,
+        "duration_s": p.duration_s,
+        "n_measured": len(p.measured),
+        "n_targets": len(p.targets),
+    }
+
+    if not p.is_fractional:
+        system_eq = solver.build_system(rows, recs, dyn, p.measured)
+        sol = solver.solve_nonnegative(system_eq)
+        direct = sol.energies
+        meta["residual_rel"] = sol.residual_rel
+    else:
+        donor = p.donor_table
+        if donor is None:
+            raise CalibrationError("fractional solve needs plan.donor_table")
+        direct, fit, resid = _solve_fractional(p, rows, recs, dyn, donor)
+        meta.update({"residual_rel": resid,
+                     "fraction": float(p.profile_fraction),
+                     "r2_fit": fit.r2})
+        provenance.update({"donor": p.donor_system,
+                           "profile_fraction": p.profile_fraction,
+                           "r2_fit": fit.r2})
+
+    return EnergyTable(system=p.system, p_const=p_const, p_static=p_static,
+                       direct=direct, meta=meta, provenance=provenance)
+
+
+def _solve_fractional(p: CalibrationPlan, rows, recs, dyn,
+                      donor: EnergyTable):
+    """Reduced solve: measured columns free, unmeasured pinned to the donor.
+
+    The donor->target affine map is fit by a *global energy regression*:
+    under e ≈ slope·d + icept, every measured benchmark's dynamic energy
+    satisfies ``y ≈ slope·(A @ d) + icept·(A @ 1)`` — two unknowns against
+    all measured rows.  Because each row's big contributors (memory bytes,
+    MXU MACs) dominate that regression, the map is anchored on exactly the
+    classes that dominate application energy, which a per-class fit over a
+    small sampled subset extrapolates to poorly (at a 10% fraction the
+    sample rarely contains a memory class at all).  The unmeasured columns
+    are then pinned to the mapped donor energies and the sampled columns
+    solved by NNLS as usual; the per-class fit quality on the solved values
+    is reported as ``r2`` (the paper's R² = 0.988 observable).
+    """
+    system_eq = solver.build_system(rows, recs, dyn, p.targets)
+    measured = set(p.measured)
+    unmeasured = [t for t in p.targets if t not in measured]
+    fit_on = [t for t in p.measured if donor.direct.get(t, 0.0) > 0]
+    donor_fit = np.asarray([donor.direct[c] for c in fit_on])
+    donor_unmeasured = np.asarray(
+        [donor.direct[c] for c in unmeasured]) if unmeasured else np.empty(0)
+
+    # global 2-parameter fit: y ≈ slope * (A @ d) + icept * (A @ 1)
+    d_all = np.asarray([donor.direct.get(c, 0.0) for c in p.targets])
+    design = np.vstack([system_eq.matrix @ d_all,
+                        system_eq.matrix.sum(axis=1)]).T
+    (slope, icept), *_ = np.linalg.lstsq(design, system_eq.rhs, rcond=None)
+    fit = TransferFit(float(slope), float(icept), 0.0, len(fit_on))
+
+    fixed = dict(zip(unmeasured, fit.apply(donor_unmeasured)))
+    sol = solver.solve_with_fixed(system_eq, fixed)
+    # diagnostic r2: how well the map explains the independently solved
+    # sampled classes (the Fig. 14 linear-relationship observable)
+    if len(fit_on) >= 2:
+        ys = np.asarray([sol.energies[c] for c in fit_on])
+        pred = fit.apply(donor_fit)
+        ss_tot = float(((ys - ys.mean()) ** 2).sum())
+        fit = dataclasses.replace(
+            fit, r2=1.0 - float(((ys - pred) ** 2).sum()) / max(ss_tot, 1e-30))
+    # donor classes beyond the target suite are affine-predicted too
+    direct = hybrid_direct(donor, sol.energies, fit)
+    return direct, fit, sol.residual_rel
+
+
+# ---------------------------------------------------------------------------
+# Stages 4-5: extend, publish.
+# ---------------------------------------------------------------------------
+def extend(table: EnergyTable, chip=None) -> EnergyTable:
+    """Coverage extension (scaling + bucketing, §3.4)."""
+    coverage.extend_table(table, chip)
+    return table
+
+
+def publish(table: EnergyTable, store,
+            allow_downgrade: bool = False) -> Optional[pathlib.Path]:
+    """Atomic write into the table store; returns the written path.
+
+    A *fractional* table is an approximation: it never silently replaces a
+    fully-profiled table already in the store (returns ``None`` with a
+    warning) unless ``allow_downgrade=True`` — bootstrap tables are for
+    systems that do not have a full profile yet.
+    """
+    if (table.provenance.get("mode") == "fractional"
+            and not allow_downgrade):
+        existing = store.get(table.system, table.isa_gen)
+        if (existing is not None
+                and existing.provenance.get("mode") != "fractional"):
+            warnings.warn(
+                f"not publishing fractional calibration for "
+                f"{table.system!r}: the store already holds a "
+                f"fully-profiled table (pass allow_downgrade=True to "
+                f"overwrite)", RuntimeWarning, stacklevel=2)
+            return None
+    return store.put(table)
+
+
+# ---------------------------------------------------------------------------
+# The composed pipeline.
+# ---------------------------------------------------------------------------
+def _resolve_donor(donor, store=None) -> Optional[EnergyTable]:
+    if donor is None or isinstance(donor, EnergyTable):
+        return donor
+    if isinstance(donor, str):
+        from repro.core.store import default_store
+        s = store if store is not None else default_store()
+        return s.get_or_train(donor)
+    table = getattr(donor, "table", None)     # EnergyModel duck-typing
+    if isinstance(table, EnergyTable):
+        return table
+    raise TypeError(f"donor must be an EnergyTable, EnergyModel or system "
+                    f"name, got {type(donor).__name__}")
+
+
+def calibrate(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
+              repeats: int = REPEATS,
+              profile_fraction: Optional[float] = None,
+              donor=None, seed: int = 0,
+              device: Optional[SimDevice] = None,
+              run_dir: Optional[Union[str, os.PathLike]] = None,
+              resume: bool = True,
+              on_plan_mismatch: str = "raise",
+              store=None,
+              progress: Optional[Callable] = None) -> EnergyTable:
+    """plan -> measure -> solve -> extend -> publish, end to end.
+
+    ``run_dir`` enables incremental persistence + resume (``resume=False``
+    discards stale records; ``on_plan_mismatch="discard"`` also discards
+    records left by an obsolete plan instead of raising); ``store``
+    publishes the finished table.  ``donor`` + ``profile_fraction`` select
+    the Fig. 14 bootstrap mode.
+    """
+    dev = device or get_device(system)
+    donor_table = _resolve_donor(donor, store)
+    p = plan(system, duration_s=duration_s, repeats=repeats,
+             profile_fraction=profile_fraction, donor=donor_table,
+             seed=seed, device=dev)
+    ledger = RunLedger(run_dir)
+    ledger.bind(p, resume=resume, on_mismatch=on_plan_mismatch)
+    n_resumed = len(ledger.records)
+    run_measurements(p, ledger, dev, progress=progress)
+    table = solve(p, ledger)
+    if n_resumed:
+        table.provenance["n_resumed_records"] = n_resumed
+    extend(table, dev.chip)
+    if store is not None:
+        publish(table, store)
+    return table
+
+
+def calibrate_fleet(systems: Sequence[str], *, concurrency: int = 4,
+                    store=None, **kwargs) -> Dict[str, EnergyTable]:
+    """Calibrate several systems concurrently.
+
+    Plans are built serially (JAX tracing and class-index interning are not
+    thread-safe); the measure/solve/extend stages — pure NumPy over already-
+    interned classes, plus per-system record IO — fan out on a thread pool.
+    Each system gets its own device and (when a store is given) its own
+    run directory, so campaigns neither share nor clobber state.
+    """
+    from repro.core.store import default_store
+    s = store if store is not None else default_store()
+    plans: Dict[str, CalibrationPlan] = {}
+    devices: Dict[str, SimDevice] = {}
+    donor_table = _resolve_donor(kwargs.pop("donor", None), s)
+    resume = kwargs.pop("resume", True)
+    plan_kw = {k: kwargs.pop(k) for k in
+               ("duration_s", "repeats", "profile_fraction", "seed")
+               if k in kwargs}
+    if kwargs:
+        raise TypeError(f"calibrate_fleet got unexpected keyword arguments "
+                        f"{sorted(kwargs)}")
+    for name in systems:
+        devices[name] = get_device(name)
+        plans[name] = plan(name, donor=donor_table, device=devices[name],
+                           **plan_kw)
+
+    def _one(name: str) -> EnergyTable:
+        p = plans[name]
+        ledger = RunLedger(s.run_dir(name))
+        ledger.bind(p, resume=resume)
+        run_measurements(p, ledger, devices[name])
+        table = solve(p, ledger)
+        extend(table, devices[name].chip)
+        publish(table, s)
+        return table
+
+    with ThreadPoolExecutor(max_workers=max(concurrency, 1)) as pool:
+        tables = list(pool.map(_one, systems))
+    return dict(zip(systems, tables))

@@ -4,16 +4,20 @@
 *Scaling* derives unmeasured memory-hierarchy entries from measured ratios.
 *Bucketing* averages known energies per micro-architectural bucket and uses
 the average for any class without a direct or scaled entry.
+
+Since the calibration refactor all three run on the array-backed table:
+known energies are read as dense vectors over ``isa.CLASS_INDEX`` and the
+per-bucket means are two ``np.bincount`` calls over the index's bucket
+codes instead of a per-class ``bucket_of`` walk.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core import isa
-from repro.core.table import EnergyTable
+from repro.core.table import SCALED, EnergyTable
 from repro.hw.spec import ChipSpec
 
 
@@ -27,21 +31,32 @@ def apply_scaling(table: EnergyTable, chip: Optional[ChipSpec] = None) -> None:
     d = table.direct
     if ("vmem.write" not in d and "vmem.read" in d
             and d.get("hbm.read", 0) > 0 and "hbm.write" in d):
-        table.scaled["vmem.write"] = (
-            d["vmem.read"] * d["hbm.write"] / d["hbm.read"])
+        table.set_energy(
+            "vmem.write", d["vmem.read"] * d["hbm.write"] / d["hbm.read"],
+            SCALED)
     if "dcn.transfer" not in d and "ici.all_to_all" in d and chip is not None:
         ratio = chip.ici_link_bandwidth / max(chip.dcn_bandwidth, 1.0)
-        table.scaled["dcn.transfer"] = d["ici.all_to_all"] * ratio
+        table.set_energy("dcn.transfer", d["ici.all_to_all"] * ratio, SCALED)
 
 
 def compute_bucket_means(table: EnergyTable) -> None:
-    """Per-bucket averages over *known* energies (direct + scaled)."""
-    groups: Dict[str, list] = defaultdict(list)
-    for cls, e in {**table.direct, **table.scaled}.items():
-        b = isa.bucket_of(cls)
-        if b is not None and e > 0:
-            groups[b].append(e)
-    table.bucket_means = {b: float(np.mean(v)) for b, v in groups.items() if v}
+    """Per-bucket averages over *known* (direct + scaled) positive energies.
+
+    One pass over the class index: gather the known-energy vector, mask to
+    positive entries, and reduce per bucket with ``bincount`` over the
+    index's bucket codes.
+    """
+    n = len(isa.CLASS_INDEX)
+    known, mask = table.known_energies(n)
+    sel = mask & (known > 0)
+    codes = isa.CLASS_INDEX.bucket_codes(n)[sel]
+    n_buckets = len(isa.BUCKET_ORDER)
+    sums = np.bincount(codes, weights=known[sel], minlength=n_buckets)
+    counts = np.bincount(codes, minlength=n_buckets)
+    unknown = isa.BUCKET_CODE[isa.UNKNOWN_BUCKET]
+    table.bucket_means = {
+        isa.BUCKET_ORDER[b]: float(sums[b] / counts[b])
+        for b in np.nonzero(counts)[0] if b != unknown}
 
 
 def extend_table(table: EnergyTable, chip: Optional[ChipSpec] = None) -> None:

@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import isa
 from repro.core.counting import counts_matrix
 from repro.core.opcount import OpCounts
-from repro.core.table import DIRECT, EnergyTable
+from repro.core.table import EnergyTable
 
 # How predicted traffic is split when no profiled counters are available
 # (pure static prediction from a lowered program).
@@ -139,42 +139,24 @@ _COUNTER_IDS = np.asarray([isa.CLASS_INDEX.intern(c)
 
 
 class TablePredictor:
-    """Prediction engine bound to one table, amortizing lookups across calls.
+    """Prediction engine bound to one table's resolved energy vectors.
 
-    ``EnergyTable.lookup`` walks direct -> scaled -> bucket per class per
-    call; the predictor instead resolves the table once into dense energy
-    vectors over ``isa.CLASS_INDEX`` — ``e_pred`` (Wattchmen-Pred: direct ->
-    scaled -> bucket) and ``e_direct`` (Wattchmen-Direct: direct hits only,
-    0 J elsewhere) — and every prediction is vector arithmetic against them.
-    The vectors extend lazily as the index grows (new raw classes observed
-    by a counter).
-
-    The vectors snapshot the table: mutate the bound ``EnergyTable`` after
-    construction (e.g. re-running ``coverage.extend_table``) and call
-    ``invalidate()``, or predictions keep using the old energies.
+    Since the array-backed table refactor, ``EnergyTable`` itself resolves
+    into dense energy vectors over ``isa.CLASS_INDEX`` — ``e_pred``
+    (Wattchmen-Pred: direct -> scaled -> bucket) and ``e_direct``
+    (Wattchmen-Direct: direct hits only, 0 J elsewhere) — cached per table
+    version and extended lazily as the index grows.  The predictor is the
+    prediction *kernel* over those vectors; mutations through the table's
+    dict views invalidate them automatically, and ``invalidate()`` remains
+    for out-of-band mutation of table internals.
     """
 
     def __init__(self, table: EnergyTable):
         self.table = table
-        self._n = 0                      # resolved prefix of the class index
-        self._e_pred = np.zeros(0)
-        self._e_direct = np.zeros(0)
 
     def _vectors(self, n: int):
         """(e_direct, e_pred) resolved for the first ``n`` class ids."""
-        if n > self._n:
-            idx = isa.CLASS_INDEX
-            lookup = self.table.lookup
-            e_p = np.empty(n - self._n)
-            e_d = np.empty(n - self._n)
-            for j, i in enumerate(range(self._n, n)):
-                e_pred, how = lookup(idx.name(i), mode="pred")
-                e_p[j] = e_pred
-                e_d[j] = e_pred if how == DIRECT else 0.0
-            self._e_pred = np.concatenate([self._e_pred[:self._n], e_p])
-            self._e_direct = np.concatenate([self._e_direct[:self._n], e_d])
-            self._n = n
-        return self._e_direct[:n], self._e_pred[:n]
+        return self.table.energy_vectors(n)
 
     def warm(self) -> None:
         """Precompute the class->energy vectors for the whole index.
@@ -186,9 +168,7 @@ class TablePredictor:
 
     def invalidate(self) -> None:
         """Drop the resolved vectors after a mutation of the bound table."""
-        self._n = 0
-        self._e_pred = np.zeros(0)
-        self._e_direct = np.zeros(0)
+        self.table.invalidate_cache()
 
     # -- the kernel ---------------------------------------------------------
     def _predict_rows(self, counts_list: Sequence[OpCounts],

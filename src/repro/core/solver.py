@@ -83,3 +83,32 @@ def solve_nonnegative(system: EnergySystem) -> Solution:
     resid = float(np.linalg.norm(a @ x - b) / max(np.linalg.norm(b), 1e-30))
     energies = {c: float(v) for c, v in zip(system.classes, x)}
     return Solution(energies=energies, residual_rel=resid, system=system)
+
+
+def solve_with_fixed(system: EnergySystem,
+                     fixed: Dict[str, float]) -> Solution:
+    """NNLS over the free columns with some class energies pinned.
+
+    The fractional-calibration path (paper §6 / Fig. 14): classes whose
+    energies are already known — affine-mapped from a donor table — have
+    their contribution ``A[:, fixed] @ e_fixed`` subtracted from the RHS,
+    and the remaining (sampled) columns are solved as usual.  The returned
+    ``energies`` cover both groups; the residual is over the *full* system
+    so a bad donor map still shows up.
+    """
+    free_ix = [j for j, c in enumerate(system.classes) if c not in fixed]
+    fixed_ix = [j for j, c in enumerate(system.classes) if c in fixed]
+    e_fixed = np.asarray([fixed[system.classes[j]] for j in fixed_ix])
+    rhs = system.rhs - system.matrix[:, fixed_ix] @ e_fixed
+    sub = EnergySystem(classes=[system.classes[j] for j in free_ix],
+                       matrix=system.matrix[:, free_ix],
+                       rhs=np.maximum(rhs, 0.0),
+                       bench_names=list(system.bench_names))
+    sol = solve_nonnegative(sub)
+    energies = dict(sol.energies)
+    energies.update({system.classes[j]: float(e)
+                     for j, e in zip(fixed_ix, e_fixed)})
+    x = np.asarray([energies[c] for c in system.classes])
+    resid = float(np.linalg.norm(system.matrix @ x - system.rhs)
+                  / max(np.linalg.norm(system.rhs), 1e-30))
+    return Solution(energies=energies, residual_rel=resid, system=system)

@@ -10,26 +10,59 @@ fleet and loaded in milliseconds instead of retrained.
 
 Layout: one JSON file per key under the store root, e.g.
 
-    sim-v5e-air__gen0__v1.json
+    sim-v5e-air__gen0__v2.json
+
+plus one *run directory* per key under ``<root>/runs/`` holding the
+incremental measurement records of an in-flight calibration
+(``core.calibrate``), so an interrupted training campaign resumes from the
+completed records instead of re-running minutes of steady-state benchmarks.
 
 The root defaults to ``$REPRO_TABLE_STORE`` or ``~/.cache/repro/tables``.
 Schema validation happens in ``EnergyTable.load``; files with a stale or
 alien schema are reported (and treated as misses by ``get``), never
-silently deserialized.
+silently deserialized — except v1 files, which carry the same class-name
+payload the array-backed v2 table is built from and are migrated in place
+at load time (``migrate_table_dict``).
 """
 from __future__ import annotations
 
+import json
 import os
 import pathlib
 import re
 import tempfile
 import warnings
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.table import SCHEMA_VERSION, EnergyTable, TableSchemaError
 
 _ENV_ROOT = "REPRO_TABLE_STORE"
 _KEY_RE = re.compile(r"^(?P<system>.+)__gen(?P<gen>\d+)__v(?P<ver>\d+)$")
+
+
+# ---------------------------------------------------------------------------
+# Schema migration.  v1 (pre array-backed table) serialized the same
+# name-keyed payload v2 reads; v2 added the required ``provenance`` record.
+# ---------------------------------------------------------------------------
+def migrate_table_dict(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Migrate a raw serialized-table payload to the current schema.
+
+    Returns a new dict with ``schema == SCHEMA_VERSION``; raises
+    ``TableSchemaError`` for versions with no migration path.
+    """
+    version = d.get("schema")
+    if version == SCHEMA_VERSION:
+        return dict(d)
+    if version == 1:
+        out = dict(d)
+        out["schema"] = SCHEMA_VERSION
+        prov = dict(out.get("provenance") or {})
+        prov["migrated_from_schema"] = 1
+        out["provenance"] = prov
+        return out
+    raise TableSchemaError(
+        f"no migration path from schema version {version!r} to "
+        f"{SCHEMA_VERSION}")
 
 
 def default_root() -> pathlib.Path:
@@ -65,12 +98,50 @@ class TableStore:
     def path_for(self, system: str, isa_gen: Optional[int] = None) -> pathlib.Path:
         return self.root / (self.key_for(system, isa_gen) + ".json")
 
+    def run_dir(self, system: str,
+                isa_gen: Optional[int] = None) -> pathlib.Path:
+        """Per-key directory for incremental calibration records."""
+        return self.root / "runs" / self.key_for(system, isa_gen)
+
     # -- read ---------------------------------------------------------------
+    def _migrate_older(self, system: str,
+                       isa_gen: Optional[int]) -> Optional[EnergyTable]:
+        """Load + upgrade an older-schema file for this key, if one exists.
+
+        The migrated table is published back under the current-version path
+        (atomic), so the next reader — this process or a fleet node sharing
+        the store — loads v2 directly.
+        """
+        key = self.key_for(system, isa_gen)
+        stem = key.rsplit("__v", 1)[0]
+        for old in range(SCHEMA_VERSION - 1, 0, -1):
+            path = self.root / f"{stem}__v{old}.json"
+            if not path.exists():
+                continue
+            try:
+                d = json.loads(path.read_text())
+                if not isinstance(d, dict):
+                    raise TableSchemaError(f"{path}: not a JSON object")
+                table = EnergyTable.from_dict(
+                    {k: v for k, v in migrate_table_dict(d).items()
+                     if k != "schema"}, origin=str(path))
+            except (TableSchemaError, ValueError) as e:
+                warnings.warn(f"ignoring unmigratable energy table {path}: "
+                              f"{e}", RuntimeWarning, stacklevel=3)
+                return None
+            self.put(table)
+            return table
+        return None
+
     def get(self, system: str, isa_gen: Optional[int] = None) -> Optional[EnergyTable]:
-        """Load a table, or None on miss / stale schema (warned, not raised)."""
+        """Load a table, or None on miss / stale schema (warned, not raised).
+
+        Older-schema files for the same system+gen are migrated in place
+        (a migration is milliseconds; the retrain it avoids is minutes).
+        """
         path = self.path_for(system, isa_gen)
         if not path.exists():
-            return None
+            return self._migrate_older(system, isa_gen)
         try:
             return EnergyTable.load(path)
         except (TableSchemaError, ValueError) as e:
@@ -82,13 +153,23 @@ class TableStore:
     def get_or_train(self, system: str,
                      train: Optional[Callable[[str], EnergyTable]] = None,
                      ) -> EnergyTable:
-        """Store-through training: load on hit, train + persist on miss."""
+        """Store-through training: load on hit, train + persist on miss.
+
+        The default trainer is the staged calibration pipeline with its
+        run directory under this store — an interrupted training campaign
+        resumes from the completed measurement records on the next call.
+        """
         table = self.get(system)
         if table is not None:
             return table
         if train is None:
-            from repro.core.trainer import train_table
-            train = train_table
+            from repro.core.calibrate import calibrate
+
+            def train(s: str) -> EnergyTable:
+                # unattended path: records from an obsolete plan are
+                # discarded (warned), never allowed to wedge the load
+                return calibrate(s, run_dir=self.run_dir(s), resume=True,
+                                 on_plan_mismatch="discard")
         table = train(system)
         self.put(table)
         return table

@@ -1,10 +1,25 @@
-"""The per-instruction energy table artifact (training-phase output, §3.5)."""
+"""The per-instruction energy table artifact (training-phase output, §3.5).
+
+Since the calibration refactor the table is *array-backed*: per-class
+energies live in dense NumPy vectors over ``isa.CLASS_INDEX`` (one energy
+vector + one provenance-mask pair per coverage tier), the same currency axis
+``OpCounts`` and ``TablePredictor`` already use.  ``direct`` / ``scaled``
+remain available as dict-compatible **views** for existing callers and for
+the JSON round-trip — class *names* stay the serialization format; integer
+ids are process-lifetime stable only.
+
+Mutations through the views (``table.direct[c] = e``) write through to the
+vectors and bump an internal version, so resolved energy vectors
+(``energy_vectors``) and any ``TablePredictor`` bound to the table re-derive
+automatically.
+"""
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Tuple
+
+import numpy as np
 
 from repro.core import isa
 
@@ -16,24 +31,338 @@ MISS = "miss"
 # Serialized-table schema.  Bump whenever the on-disk shape of the table (its
 # fields or their meaning) changes; the ``TableStore`` keys files by this
 # version so stale artifacts are never silently deserialized.
-SCHEMA_VERSION = 1
+#
+#   v1  dict-of-dicts dataclass dump (pre array-backed table)
+#   v2  adds the required ``provenance`` record (calibration pipeline
+#       lineage: stages run, donor table, profile fraction, resume count)
+#
+# ``TableStore`` migrates v1 files to v2 at load time (``core.store``).
+SCHEMA_VERSION = 2
+
+_REQUIRED_FIELDS = ("system", "p_const", "p_static", "direct")
+_KNOWN_FIELDS = ("system", "p_const", "p_static", "direct", "scaled",
+                 "bucket_means", "meta", "provenance")
 
 
 class TableSchemaError(ValueError):
     """A serialized table does not match the current schema."""
 
 
-@dataclasses.dataclass
-class EnergyTable:
-    """Output of the training phase: powers + per-class energies."""
+class ClassVecView(Mapping):
+    """Dict-compatible view over one coverage tier of an ``EnergyTable``.
 
-    system: str
-    p_const: float                      # W
-    p_static: float                     # W (all-resources-active)
-    direct: Dict[str, float]            # J/unit, from the NNLS solve
-    scaled: Dict[str, float] = dataclasses.field(default_factory=dict)
-    bucket_means: Dict[str, float] = dataclasses.field(default_factory=dict)
-    meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+    Reads behave like the old per-tier dict (``direct`` / ``scaled``):
+    membership is provenance-mask membership (an explicit 0.0 J entry is
+    *present* — NNLS legitimately zeroes classes).  Writes go through the
+    table's vectors and bump its version so resolved energy vectors stay
+    coherent.
+    """
+
+    __slots__ = ("_table", "_tier")
+
+    def __init__(self, table: "EnergyTable", tier: str):
+        self._table = table
+        self._tier = tier
+
+    def _arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        t = self._table
+        return ((t._e_direct, t._m_direct) if self._tier == DIRECT
+                else (t._e_scaled, t._m_scaled))
+
+    # -- reads --------------------------------------------------------------
+    def __getitem__(self, cls: str) -> float:
+        e, m = self._arrays()
+        i = isa.CLASS_INDEX.id(cls)
+        if i is None or i >= m.size or not m[i]:
+            raise KeyError(cls)
+        return float(e[i])
+
+    def get(self, cls: str, default=None):
+        e, m = self._arrays()
+        i = isa.CLASS_INDEX.id(cls)
+        if i is None or i >= m.size or not m[i]:
+            return default
+        return float(e[i])
+
+    def __contains__(self, cls) -> bool:
+        _, m = self._arrays()
+        i = isa.CLASS_INDEX.id(cls)
+        return i is not None and i < m.size and bool(m[i])
+
+    def __iter__(self) -> Iterator[str]:
+        _, m = self._arrays()
+        name = isa.CLASS_INDEX.name
+        return iter([name(int(i)) for i in np.nonzero(m)[0]])
+
+    def __len__(self) -> int:
+        _, m = self._arrays()
+        return int(np.count_nonzero(m))
+
+    def items(self) -> List[Tuple[str, float]]:
+        e, m = self._arrays()
+        name = isa.CLASS_INDEX.name
+        return [(name(int(i)), float(e[i])) for i in np.nonzero(m)[0]]
+
+    def keys(self):
+        return list(self)
+
+    def values(self):
+        e, m = self._arrays()
+        return [float(e[i]) for i in np.nonzero(m)[0]]
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.items())
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, ClassVecView):
+            return dict(self.items()) == dict(other.items())
+        if isinstance(other, Mapping):
+            return dict(self.items()) == dict(other)
+        return NotImplemented
+
+    def __ne__(self, other) -> bool:
+        eq = self.__eq__(other)
+        return NotImplemented if eq is NotImplemented else not eq
+
+    def __repr__(self) -> str:
+        return f"ClassVecView({self._tier}, {dict(self.items())!r})"
+
+    # -- writes (write-through to the vectors) ------------------------------
+    def __setitem__(self, cls: str, value: float) -> None:
+        self._table.set_energy(cls, float(value), self._tier)
+
+    def __delitem__(self, cls: str) -> None:
+        _, m = self._arrays()
+        i = isa.CLASS_INDEX.id(cls)
+        if i is None or i >= m.size or not m[i]:
+            raise KeyError(cls)
+        m[i] = False
+        self._table._bump()
+
+    def update(self, other: Mapping[str, float]) -> None:
+        for cls, e in other.items():
+            self[cls] = e
+
+    def pop(self, cls: str, *default):
+        try:
+            v = self[cls]
+        except KeyError:
+            if default:
+                return default[0]
+            raise
+        del self[cls]
+        return v
+
+    def setdefault(self, cls: str, default: float = 0.0) -> float:
+        v = self.get(cls)
+        if v is None:
+            self[cls] = default
+            return default
+        return v
+
+    def clear(self) -> None:
+        _, m = self._arrays()
+        m[:] = False
+        self._table._bump()
+
+
+class _BucketMeans(dict):
+    """Per-bucket mean energies; mutation bumps the owning table's version."""
+
+    __slots__ = ("_table",)
+
+    def __init__(self, table: "EnergyTable", *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._table = table
+
+    def _touch(self):
+        self._table._bump()
+
+    def __setitem__(self, k, v):
+        super().__setitem__(k, v)
+        self._touch()
+
+    def __delitem__(self, k):
+        super().__delitem__(k)
+        self._touch()
+
+    def update(self, *args, **kwargs):
+        super().update(*args, **kwargs)
+        self._touch()
+
+    def pop(self, *args):
+        v = super().pop(*args)
+        self._touch()
+        return v
+
+    def setdefault(self, k, default=None):
+        v = super().setdefault(k, default)
+        self._touch()
+        return v
+
+    def popitem(self):
+        v = super().popitem()
+        self._touch()
+        return v
+
+    def __ior__(self, other):
+        super().update(other)
+        self._touch()
+        return self
+
+    def clear(self):
+        super().clear()
+        self._touch()
+
+
+class EnergyTable:
+    """Output of the training phase: powers + per-class energies.
+
+    Array-backed over ``isa.CLASS_INDEX``; ``direct``/``scaled`` are
+    write-through dict views, ``energy_vectors`` the resolved dense form.
+    """
+
+    def __init__(self, system: str, p_const: float, p_static: float,
+                 direct: Optional[Mapping[str, float]] = None,
+                 scaled: Optional[Mapping[str, float]] = None,
+                 bucket_means: Optional[Mapping[str, float]] = None,
+                 meta: Optional[Mapping[str, float]] = None,
+                 provenance: Optional[Mapping[str, Any]] = None):
+        self.system = system
+        self.p_const = float(p_const)
+        self.p_static = float(p_static)
+        n = len(isa.CLASS_INDEX)
+        self._e_direct = np.zeros(n)
+        self._m_direct = np.zeros(n, dtype=bool)
+        self._e_scaled = np.zeros(n)
+        self._m_scaled = np.zeros(n, dtype=bool)
+        self._bucket_means = _BucketMeans(
+            self, {str(b): float(v) for b, v in (bucket_means or {}).items()})
+        self.meta: Dict[str, float] = dict(meta or {})
+        self.provenance: Dict[str, Any] = dict(provenance or {})
+        self._version = 0
+        self._vec_cache: Optional[Tuple[int, np.ndarray, np.ndarray]] = None
+        for cls, e in (direct or {}).items():
+            self.set_energy(cls, float(e), DIRECT)
+        for cls, e in (scaled or {}).items():
+            self.set_energy(cls, float(e), SCALED)
+
+    # -- vector plumbing ----------------------------------------------------
+    def _bump(self) -> None:
+        self._version += 1
+        self._vec_cache = None
+
+    def _ensure(self, n: int) -> None:
+        if self._e_direct.size < n:
+            grow = max(n, len(isa.CLASS_INDEX))
+            for attr in ("_e_direct", "_e_scaled"):
+                v = np.zeros(grow)
+                v[:getattr(self, attr).size] = getattr(self, attr)
+                setattr(self, attr, v)
+            for attr in ("_m_direct", "_m_scaled"):
+                m = np.zeros(grow, dtype=bool)
+                m[:getattr(self, attr).size] = getattr(self, attr)
+                setattr(self, attr, m)
+
+    def set_energy(self, cls: str, energy: float, tier: str = DIRECT) -> None:
+        """Set one class energy in a tier (the supported write path)."""
+        i = isa.CLASS_INDEX.intern(cls)
+        self._ensure(i + 1)
+        if tier == DIRECT:
+            self._e_direct[i] = energy
+            self._m_direct[i] = True
+        elif tier == SCALED:
+            self._e_scaled[i] = energy
+            self._m_scaled[i] = True
+        else:
+            raise ValueError(f"unknown tier {tier!r} (expected direct/scaled)")
+        self._bump()
+
+    def invalidate_cache(self) -> None:
+        """Drop resolved vectors (call after out-of-band mutation)."""
+        self._bump()
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter; resolved vectors key on it."""
+        return self._version
+
+    def _bucket_vec(self) -> np.ndarray:
+        v = np.zeros(len(isa.BUCKET_ORDER))
+        for b, e in self._bucket_means.items():
+            code = isa.BUCKET_CODE.get(b)
+            if code is not None:
+                v[code] = e
+        return v
+
+    def energy_vectors(self, n: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(e_direct, e_pred)`` resolved over the first ``n`` class ids.
+
+        ``e_direct`` is Wattchmen-Direct (table hits only, 0 J elsewhere);
+        ``e_pred`` is Wattchmen-Pred (direct -> scaled -> bucket-mean, §3.4).
+        Cached per table version; extended as the class index grows.
+        """
+        want = len(isa.CLASS_INDEX) if n is None else int(n)
+        cache = self._vec_cache
+        if cache is not None and cache[0] == self._version \
+                and cache[1].size >= want:
+            return cache[1][:want], cache[2][:want]
+        self._ensure(want)
+        ed, md = self._e_direct[:want], self._m_direct[:want]
+        es, ms = self._e_scaled[:want], self._m_scaled[:want]
+        codes = isa.CLASS_INDEX.bucket_codes(want)
+        e_pred = np.where(md, ed, np.where(ms, es, self._bucket_vec()[codes]))
+        e_direct = np.where(md, ed, 0.0)
+        self._vec_cache = (self._version, e_direct, e_pred)
+        return e_direct, e_pred
+
+    def known_energies(self, n: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(values, mask)`` of measured-or-scaled energies per class id.
+
+        The pre-bucketing tiers only (direct wins over scaled on overlap) —
+        what the coverage machinery averages into bucket means.
+        """
+        want = len(isa.CLASS_INDEX) if n is None else int(n)
+        self._ensure(want)
+        md, ms = self._m_direct[:want], self._m_scaled[:want]
+        values = np.where(md, self._e_direct[:want],
+                          np.where(ms, self._e_scaled[:want], 0.0))
+        return values, md | ms
+
+    # -- dict-compatible surface --------------------------------------------
+    @property
+    def direct(self) -> ClassVecView:
+        return ClassVecView(self, DIRECT)
+
+    @direct.setter
+    def direct(self, value: Mapping[str, float]) -> None:
+        self._m_direct[:] = False
+        for cls, e in value.items():
+            self.set_energy(cls, float(e), DIRECT)
+        self._bump()
+
+    @property
+    def scaled(self) -> ClassVecView:
+        return ClassVecView(self, SCALED)
+
+    @scaled.setter
+    def scaled(self, value: Mapping[str, float]) -> None:
+        self._m_scaled[:] = False
+        for cls, e in value.items():
+            self.set_energy(cls, float(e), SCALED)
+        self._bump()
+
+    @property
+    def bucket_means(self) -> _BucketMeans:
+        return self._bucket_means
+
+    @bucket_means.setter
+    def bucket_means(self, value: Mapping[str, float]) -> None:
+        self._bucket_means = _BucketMeans(
+            self, {str(b): float(v) for b, v in value.items()})
+        self._bump()
 
     # ------------------------------------------------------------------
     def lookup(self, cls: str, mode: str = "pred") -> Tuple[float, str]:
@@ -42,17 +371,16 @@ class EnergyTable:
         ``direct`` mode = Wattchmen-Direct (table hits only);
         ``pred`` mode = Wattchmen-Pred (direct -> scaled -> bucket, §3.4).
         """
-        v = self.direct.get(cls)
-        if v is not None:
-            return v, DIRECT
+        i = isa.CLASS_INDEX.id(cls)
+        if i is not None and i < self._m_direct.size and self._m_direct[i]:
+            return float(self._e_direct[i]), DIRECT
         if mode == "direct":
             return 0.0, MISS
-        v = self.scaled.get(cls)
-        if v is not None:
-            return v, SCALED
+        if i is not None and i < self._m_scaled.size and self._m_scaled[i]:
+            return float(self._e_scaled[i]), SCALED
         bucket = isa.bucket_of(cls)
-        if bucket is not None and bucket in self.bucket_means:
-            return self.bucket_means[bucket], BUCKET
+        if bucket is not None and bucket in self._bucket_means:
+            return self._bucket_means[bucket], BUCKET
         return 0.0, MISS
 
     # ------------------------------------------------------------------
@@ -60,12 +388,62 @@ class EnergyTable:
     def isa_gen(self) -> int:
         return int(self.meta.get("isa_gen", 0))
 
+    def __eq__(self, other) -> bool:
+        """Physical-artifact equality: powers, energies, meta.
+
+        ``provenance`` (calibration lineage — resume counts, donor, stage
+        notes) deliberately does not participate: a resumed calibration
+        must compare equal to the uninterrupted run that measured the same
+        records.
+        """
+        if not isinstance(other, EnergyTable):
+            return NotImplemented
+        return (self.system == other.system
+                and self.p_const == other.p_const
+                and self.p_static == other.p_static
+                and dict(self.direct.items()) == dict(other.direct.items())
+                and dict(self.scaled.items()) == dict(other.scaled.items())
+                and dict(self._bucket_means) == dict(other._bucket_means)
+                and self.meta == other.meta)
+
+    def __repr__(self) -> str:
+        return (f"EnergyTable(system={self.system!r}, "
+                f"direct={len(self.direct)}, scaled={len(self.scaled)}, "
+                f"p_const={self.p_const:.1f}W, p_static={self.p_static:.1f}W)")
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": SCHEMA_VERSION,
+            "system": self.system,
+            "p_const": self.p_const,
+            "p_static": self.p_static,
+            "direct": dict(self.direct.items()),
+            "scaled": dict(self.scaled.items()),
+            "bucket_means": dict(self._bucket_means),
+            "meta": dict(self.meta),
+            "provenance": dict(self.provenance),
+        }
+
     def save(self, path) -> None:
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        d = dataclasses.asdict(self)
-        d["schema"] = SCHEMA_VERSION
-        p.write_text(json.dumps(d, indent=1))
+        p.write_text(json.dumps(self.to_dict(), indent=1))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any],
+                  origin: str = "<dict>") -> "EnergyTable":
+        """Construct from an already schema-checked v2 payload."""
+        unknown = sorted(set(d) - set(_KNOWN_FIELDS))
+        if unknown:
+            raise TableSchemaError(
+                f"{origin}: unknown table fields {unknown} (known: "
+                f"{sorted(_KNOWN_FIELDS)})")
+        missing = sorted(k for k in _REQUIRED_FIELDS if k not in d)
+        if missing:
+            raise TableSchemaError(f"{origin}: missing required fields "
+                                   f"{missing}")
+        return cls(**d)
 
     @classmethod
     def load(cls, path) -> "EnergyTable":
@@ -78,16 +456,5 @@ class EnergyTable:
             raise TableSchemaError(
                 f"{path}: schema version {version!r} does not match "
                 f"current version {SCHEMA_VERSION} — retrain or migrate "
-                f"the table")
-        known = {f.name for f in dataclasses.fields(cls)}
-        unknown = sorted(set(d) - known)
-        if unknown:
-            raise TableSchemaError(
-                f"{path}: unknown table fields {unknown} (known: "
-                f"{sorted(known)})")
-        missing = sorted(k for k in ("system", "p_const", "p_static",
-                                     "direct") if k not in d)
-        if missing:
-            raise TableSchemaError(f"{path}: missing required fields "
-                                   f"{missing}")
-        return cls(**d)
+                f"the table (TableStore migrates v1 files automatically)")
+        return cls.from_dict(d, origin=str(path))

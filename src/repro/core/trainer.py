@@ -1,80 +1,36 @@
 """Training phase driver — paper Fig. 2 (top half).
 
-Runs the microbenchmark suite on a (simulated) system, measures steady-state
-energies, isolates constant/static power, solves the square non-negative
-system, and extends coverage — producing the ``EnergyTable`` artifact.
+Since the calibration refactor the actual work lives in
+``repro.core.calibrate`` as a staged, resumable pipeline (plan -> measure ->
+solve -> extend -> publish).  This module keeps the historical one-call
+surface: ``train_table`` runs the pipeline end to end with an ephemeral
+(in-memory) ledger, exactly the old serial semantics.
 """
 from __future__ import annotations
 
 import functools
 import warnings
-from typing import List, Optional
+from typing import Optional
 
-import numpy as np
-
-from repro.core import coverage, measure, microbench, solver
+from repro.core.calibrate import BENCH_TARGET_SECONDS, REPEATS, calibrate
 from repro.core.table import EnergyTable
-from repro.hw.device import Program, SimDevice
-from repro.hw.systems import SYSTEMS, get_device
-
-BENCH_TARGET_SECONDS = 120.0   # steady-state duration per benchmark (§6: 180s
-                               # on hardware; the plateau is reached well
-                               # before that on the simulated systems too)
-REPEATS = 3                    # medians over repeats (paper: 5)
+from repro.hw.device import SimDevice
 
 
 def train_table(system: str, duration_s: float = BENCH_TARGET_SECONDS,
                 repeats: int = REPEATS,
-                device: Optional[SimDevice] = None) -> EnergyTable:
-    dev = device or get_device(system)
-    gen = dev.chip.isa_gen
-    suite = microbench.build_suite(isa_gen=gen)
+                device: Optional[SimDevice] = None, *,
+                run_dir=None, resume: bool = True) -> EnergyTable:
+    """One-shot calibration; pass ``run_dir`` for incremental persistence
+    + resume (see ``core.calibrate`` for the staged pipeline).
 
-    # The square-system property: one benchmark per benched class (§3.1).
-    targets = microbench.benched_classes(suite)
-    assert len(targets) == len(set(targets)) == len(suite), \
-        "system of equations must stay square"
-
-    # 1. constant power from idle probes (median across repeats).
-    p_const = float(np.median([measure.constant_power(dev.idle(30.0))
-                               for _ in range(repeats)]))
-
-    # 2. static power from the NANOSLEEP probe.
-    nanosleep = microbench.MicroBench(
-        name="CTL_NANOSLEEP_probe", target="ctl.loop",
-        counts=microbench._nanosleep_counts(), is_nanosleep=True)
-    ns_prog = Program(nanosleep.name, nanosleep.counts,
-                      iters=dev.iters_for_duration(nanosleep.counts, duration_s),
-                      is_nanosleep=True)
-    p_static = float(np.median([
-        measure.static_power(dev.run(ns_prog), p_const)
-        for _ in range(repeats)]))
-
-    # 3. run every benchmark to steady state; median dynamic energy.
-    records, dyn = [], []
-    for bench in suite:
-        iters = dev.iters_for_duration(bench.counts, duration_s)
-        prog = Program(bench.name, bench.counts, iters=iters,
-                       is_nanosleep=bench.is_nanosleep)
-        runs = [dev.run(prog) for _ in range(repeats)]
-        energies = [measure.dynamic_energy(r, p_const, p_static)
-                    for r in runs]
-        med = int(np.argsort(energies)[len(energies) // 2])
-        records.append(runs[med])
-        dyn.append(energies[med])
-
-    # 4. square non-negative solve.
-    system_eq = solver.build_system(suite, records, dyn, targets)
-    sol = solver.solve_nonnegative(system_eq)
-
-    table = EnergyTable(system=dev.name, p_const=p_const, p_static=p_static,
-                        direct=sol.energies,
-                        meta={"residual_rel": sol.residual_rel,
-                              "n_benchmarks": float(len(suite)),
-                              "isa_gen": float(gen)})
-    # 5. coverage extension (scaling + bucketing, §3.4).
-    coverage.extend_table(table, dev.chip)
-    return table
+    As the unattended surface, records left by an obsolete plan (e.g. a
+    suite change between versions) are discarded with a warning instead of
+    wedging every future training attempt.
+    """
+    return calibrate(system, duration_s=duration_s, repeats=repeats,
+                     device=device, run_dir=run_dir, resume=resume,
+                     on_plan_mismatch="discard")
 
 
 @functools.lru_cache(maxsize=None)
@@ -90,4 +46,4 @@ def cached_table(system: str) -> EnergyTable:
         "repro.api.EnergyModel.from_store(system) (persistent TableStore)",
         DeprecationWarning, stacklevel=2)
     from repro.core.store import default_store
-    return default_store().get_or_train(system, train_table)
+    return default_store().get_or_train(system)

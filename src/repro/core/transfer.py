@@ -5,15 +5,26 @@ air- and water-cooled V100 per-instruction energy tables and exploits it:
 fit an affine map on a random subset (10% / 50%) of classes measured on the
 new system, predict the rest from the old system's table, and keep the same
 prediction accuracy while profiling a fraction of the suite.
+
+Since the calibration refactor this module is the *vector* form of that
+machinery, shared with the pipeline's ``profile_fraction`` mode
+(``core.calibrate``): fits and applications are array operations over
+``isa.CLASS_INDEX``, and a hybrid table predicts **every** donor class the
+sampled fraction never measured — including classes measured only on the
+donor system (the previous implementation silently dropped those, which is
+exactly the coverage Fig. 14 is meant to buy).
+
+``transfer_table`` is kept as a thin compatibility shim over the shared
+pieces (sampling + ``fit_affine`` + ``hybrid_direct``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import coverage
+from repro.core import coverage, isa
 from repro.core.table import EnergyTable
 
 
@@ -24,18 +35,32 @@ class TransferFit:
     r2: float
     n_common: int
 
+    def apply(self, energies: np.ndarray) -> np.ndarray:
+        """Affine-map donor energies onto the target system (clipped >= 0)."""
+        return np.maximum(self.slope * np.asarray(energies, dtype=float)
+                          + self.intercept, 0.0)
 
-def fit_affine(src: EnergyTable, dst: EnergyTable,
-               classes: List[str]) -> TransferFit:
-    xs = np.array([src.direct[c] for c in classes])
-    ys = np.array([dst.direct[c] for c in classes])
+
+def fit_affine_xy(xs: np.ndarray, ys: np.ndarray) -> TransferFit:
+    """Least-squares affine fit ``y ≈ slope*x + intercept`` on raw vectors."""
+    xs = np.asarray(xs, dtype=float)
+    ys = np.asarray(ys, dtype=float)
     a = np.vstack([xs, np.ones_like(xs)]).T
     (slope, intercept), *_ = np.linalg.lstsq(a, ys, rcond=None)
     pred = slope * xs + intercept
     ss_res = float(((ys - pred) ** 2).sum())
     ss_tot = float(((ys - ys.mean()) ** 2).sum())
     r2 = 1.0 - ss_res / max(ss_tot, 1e-30)
-    return TransferFit(float(slope), float(intercept), r2, len(classes))
+    return TransferFit(float(slope), float(intercept), r2, len(xs))
+
+
+def fit_affine(src: EnergyTable, dst: EnergyTable,
+               classes: Sequence[str]) -> TransferFit:
+    """Fit the donor->target map on the classes measured on both systems."""
+    ids = np.asarray([isa.CLASS_INDEX.intern(c) for c in classes])
+    e_src, _ = src.energy_vectors()
+    e_dst, _ = dst.energy_vectors()
+    return fit_affine_xy(e_src[ids], e_dst[ids])
 
 
 def r2_between(src: EnergyTable, dst: EnergyTable) -> float:
@@ -44,29 +69,55 @@ def r2_between(src: EnergyTable, dst: EnergyTable) -> float:
     return fit_affine(src, dst, common).r2
 
 
+def hybrid_direct(src: EnergyTable, measured: Mapping[str, float],
+                  fit: TransferFit) -> Dict[str, float]:
+    """Direct entries of a hybrid table: measured wins, donor affine-fills.
+
+    Every donor class without a measurement is predicted through the fit —
+    including classes the target suite never benches at all (src-only),
+    which previously fell out of the hybrid entirely.
+    """
+    direct = dict(measured)
+    donor = [(c, e) for c, e in src.direct.items() if c not in direct]
+    if donor:
+        predicted = fit.apply(np.asarray([e for _, e in donor]))
+        direct.update({c: float(p) for (c, _), p in zip(donor, predicted)})
+    return direct
+
+
+def sample_classes(candidates: Sequence[str], population: int,
+                   fraction: float, seed: int = 0) -> List[str]:
+    """The Fig. 14 random subset: ``fraction`` of ``population`` classes,
+    drawn (without replacement) from the measurable ``candidates``."""
+    rng = np.random.default_rng(seed)
+    k = max(int(round(fraction * population)), 2)
+    return list(rng.choice(list(candidates), size=min(k, len(candidates)),
+                           replace=False))
+
+
 def transfer_table(src: EnergyTable, dst: EnergyTable, fraction: float,
                    seed: int = 0, chip=None) -> Tuple[EnergyTable, TransferFit]:
     """Build a dst-system table measuring only ``fraction`` of its classes.
 
-    The sampled classes keep their measured (dst) energies; the rest are
-    affine-mapped from the src system's table (Fig. 14 methodology).
+    Compatibility shim over the shared transfer pieces: the sampled classes
+    keep their measured (dst) energies; everything else in the donor table
+    is affine-mapped (Fig. 14 methodology).  The pipeline equivalent is
+    ``EnergyModel.train(system, profile_fraction=..., donor=...)``, which
+    measures only the sampled microbenchmarks in the first place.
     """
-    rng = np.random.default_rng(seed)
     common = sorted(set(src.direct) & set(dst.direct))
     nonzero = [c for c in common if src.direct[c] > 0]
-    k = max(int(round(fraction * len(common))), 2)
-    sample = list(rng.choice(nonzero, size=min(k, len(nonzero)),
-                             replace=False))
+    sample = sample_classes(nonzero, population=len(common),
+                            fraction=fraction, seed=seed)
     fit = fit_affine(src, dst, sample)
-    direct: Dict[str, float] = {}
-    for c in common:
-        if c in sample:
-            direct[c] = dst.direct[c]
-        else:
-            direct[c] = max(fit.slope * src.direct[c] + fit.intercept, 0.0)
+    direct = hybrid_direct(src, {c: dst.direct[c] for c in sample}, fit)
     out = EnergyTable(system=f"{dst.system}-transfer{int(fraction*100)}",
                       p_const=dst.p_const, p_static=dst.p_static,
                       direct=direct,
-                      meta={"fraction": fraction, "r2_fit": fit.r2})
+                      meta={"fraction": fraction, "r2_fit": fit.r2},
+                      provenance={"mode": "transfer_shim",
+                                  "donor": src.system,
+                                  "profile_fraction": fraction,
+                                  "n_sampled": len(sample)})
     coverage.extend_table(out, chip)
     return out, fit

@@ -401,13 +401,31 @@ class SimDevice:
                  name: Optional[str] = None, coeff_scale: float = 1.0):
         self.chip = chip
         self.cooling = cooling
+        self.seed = seed
         self.name = name or f"sim-{chip.name}-{cooling}"
         self._hidden = _HiddenModel(chip, cooling, seed, coeff_scale)
         self._rng = np.random.default_rng(seed ^ 0x5EED)
 
+    def noise_rng(self, noise_key: Optional[str]) -> np.random.Generator:
+        """Sensor-noise stream for a run.
+
+        Real sensors are stateless: the noise a measurement sees does not
+        depend on which measurements ran before it.  A ``noise_key`` gives a
+        run its own deterministic substream keyed on (device seed, key), so
+        a measurement campaign can be interrupted, resumed, or reordered and
+        every record stays bit-identical.  Without a key, runs share the
+        device-lifetime stream (legacy sequential behaviour).
+        """
+        if noise_key is None:
+            return self._rng
+        digest = hashlib.sha256(
+            f"{self.seed}:noise:{noise_key}".encode()).digest()
+        return np.random.default_rng(int.from_bytes(digest[:8], "big"))
+
     # -- telemetry synthesis --------------------------------------------------
     def _sample_trace(self, duration_s: float, p_dyn: float, util: float,
-                      startup_s: float, static_mix: float = 1.0) -> SensorTrace:
+                      startup_s: float, static_mix: float = 1.0,
+                      rng: Optional[np.random.Generator] = None) -> SensorTrace:
         h = self._hidden
         n = max(int(duration_s * SENSOR_HZ), 4)
         ts = np.arange(n) / SENSOR_HZ
@@ -429,9 +447,10 @@ class SimDevice:
                              + (h.static_power(u, t_cur, static_mix)
                                 if u > 0 else 0.0)
                              + p_dyn * ramp * max(dyn_leak, 0.7))
-        noise = self._rng.normal(0.0, SENSOR_NOISE_W, n)
+        rng = self._rng if rng is None else rng
+        noise = rng.normal(0.0, SENSOR_NOISE_W, n)
         power_meas = np.round((power_true + noise) / SENSOR_QUANT_W) * SENSOR_QUANT_W
-        keep = self._rng.random(n) >= SENSOR_DROP_P
+        keep = rng.random(n) >= SENSOR_DROP_P
         keep[0] = keep[-1] = True
         util_arr = np.clip(np.minimum(ts / max(startup_s, 1e-9), 1.0) * util, 0, 1)
         trace = SensorTrace(ts[keep], power_meas[keep], util_arr[keep], temp[keep])
@@ -440,11 +459,14 @@ class SimDevice:
         trace._energy_true = energy  # type: ignore[attr-defined]
         return trace
 
-    def idle(self, duration_s: float = 30.0) -> SensorTrace:
+    def idle(self, duration_s: float = 30.0, *,
+             noise_key: Optional[str] = None) -> SensorTrace:
         """Sensor samples while the device is idle (constant-power probe)."""
-        return self._sample_trace(duration_s, p_dyn=0.0, util=0.0, startup_s=1e9)
+        return self._sample_trace(duration_s, p_dyn=0.0, util=0.0,
+                                  startup_s=1e9, rng=self.noise_rng(noise_key))
 
-    def run(self, program: Program) -> RunRecord:
+    def run(self, program: Program, *,
+            noise_key: Optional[str] = None) -> RunRecord:
         h = self._hidden
         c = program.counts_per_iter
         if program.is_nanosleep:
@@ -466,7 +488,7 @@ class SimDevice:
         duration = h.startup_s + program.iters * t_iter
         p_dyn = (program.iters * e_iter) / max(duration - h.startup_s, 1e-9)
         trace = self._sample_trace(duration, p_dyn, util, h.startup_s,
-                                   static_mix)
+                                   static_mix, rng=self.noise_rng(noise_key))
         energy = trace._energy_true  # type: ignore[attr-defined]
         hbm_r, hbm_w, vmem_r, vmem_w = h.traffic(c)
         counters = {

@@ -39,6 +39,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 10,
         fail_at: Optional[int] = None, microbatches: int = 1,
         energy_system: Optional[str] = "sim-v5e-air",
+        energy_donor: Optional[str] = None,
+        energy_profile_fraction: Optional[float] = None,
         seed: int = 0, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     shape = ShapeSpec("run", seq_len, global_batch, "train")
@@ -61,14 +63,23 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
 
     # Wattchmen integration: profile the step once, monitor every step —
     # live=True adds the telemetry stream (measured J/step + drift repair).
+    # A first-seen energy_system trains through the resumable calibration
+    # pipeline; with a donor it is bootstrapped from a fraction of the
+    # microbenchmark suite instead of a full profile (Fig. 14).
     monitor = None
     if energy_system:
         example = model_batch(cfg, shape, dcfg, 0)
         counts = count_fn(make_train_step(cfg, opt_cfg,
                                           microbatches=microbatches),
                           state, example)
-        monitor = EnergyModel.from_store(energy_system).monitor(
-            live=True, step_counts=counts)
+        if energy_donor is not None:
+            model = EnergyModel.train(
+                energy_system, resume=True, store=True,
+                profile_fraction=energy_profile_fraction or 0.5,
+                donor=energy_donor)
+        else:
+            model = EnergyModel.from_store(energy_system)
+        monitor = model.monitor(live=True, step_counts=counts)
 
     straggler = StragglerMonitor()
     losses = []
@@ -112,11 +123,21 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--energy-system", default="sim-v5e-air")
+    ap.add_argument("--energy-donor", default=None,
+                    help="bootstrap the energy table by affine transfer "
+                         "from this system's table (Fig. 14)")
+    ap.add_argument("--energy-profile-fraction", type=float, default=None,
+                    help="fraction of the microbenchmark suite to measure "
+                         "when bootstrapping from --energy-donor")
     args = ap.parse_args(argv)
     _, losses, _ = run(args.arch, smoke=args.smoke, steps=args.steps,
                        seq_len=args.seq_len, global_batch=args.global_batch,
                        ckpt_dir=args.ckpt_dir, fail_at=args.fail_at,
-                       microbatches=args.microbatches)
+                       microbatches=args.microbatches,
+                       energy_system=args.energy_system,
+                       energy_donor=args.energy_donor,
+                       energy_profile_fraction=args.energy_profile_fraction)
     ok = np.isfinite(losses).all() and losses[-1] < losses[0]
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if ok else 'check'})")

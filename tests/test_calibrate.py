@@ -1,0 +1,253 @@
+"""The staged calibration pipeline: resume identity, schema migration,
+fractional donor bootstrap, and dict-view/vector-path parity."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import EnergyModel
+from repro.core import calibrate as cal
+from repro.core import coverage, isa
+from repro.core.store import TableStore, migrate_table_dict
+from repro.core.table import (DIRECT, MISS, SCALED, SCHEMA_VERSION,
+                              EnergyTable, TableSchemaError)
+
+SYSTEM = "sim-v5e-air"
+FAST = dict(duration_s=3.0, repeats=2)     # throughput settings, not quality
+
+
+@pytest.fixture(scope="module")
+def fast_plan():
+    return cal.plan(SYSTEM, **FAST)
+
+
+# ---------------------------------------------------------------------------
+# Plan stage.
+# ---------------------------------------------------------------------------
+def test_plan_is_square_and_probed(fast_plan):
+    p = fast_plan
+    assert len(p.targets) == len(set(p.targets)) == len(p.suite)
+    assert p.measured == p.targets                 # full calibration
+    kinds = [s.kind for s in p.specs]
+    assert kinds[:2] == [cal.KIND_IDLE, cal.KIND_NANOSLEEP]
+    assert kinds[2:] == [cal.KIND_BENCH] * len(p.suite)
+
+
+def test_fractional_plan_samples_and_forces(fast_plan):
+    donor = EnergyTable(system="donor", p_const=40.0, p_static=50.0,
+                        direct={t: 1e-11 for t in fast_plan.targets[:-3]})
+    p = cal.plan(SYSTEM, profile_fraction=0.25, donor=donor, seed=1, **FAST)
+    assert 0 < len(p.measured) < len(p.targets)
+    # classes the donor cannot predict must always be measured
+    for t in fast_plan.targets[-3:]:
+        assert t in p.measured
+    with pytest.raises(cal.CalibrationError, match="donor"):
+        cal.plan(SYSTEM, profile_fraction=0.25, **FAST)
+
+
+# ---------------------------------------------------------------------------
+# Measure + resume: the acceptance criterion.
+# ---------------------------------------------------------------------------
+def test_interrupted_resume_is_bitwise_identical(fast_plan, tmp_path):
+    p = fast_plan
+    dev = None  # each stage call resolves its own device: order independence
+
+    one_shot = cal.RunLedger(tmp_path / "oneshot")
+    one_shot.bind(p)
+    cal.run_measurements(p, one_shot)
+    table_a = cal.extend(cal.solve(p, one_shot))
+
+    # interrupt after k records, then resume from disk in a "new process"
+    k = 9
+    first = cal.RunLedger(tmp_path / "resumed")
+    first.bind(p)
+    cal.run_measurements(p, first, limit=k)
+    assert len(first.records) == k
+    with pytest.raises(cal.CalibrationError, match="pending"):
+        cal.solve(p, first)
+
+    second = cal.RunLedger(tmp_path / "resumed")
+    second.bind(p)                      # loads the k completed records
+    assert len(second.records) == k
+    cal.run_measurements(p, second)
+    table_b = cal.extend(cal.solve(p, second))
+
+    assert table_a == table_b           # bitwise: == on every float
+    np.testing.assert_array_equal(table_a.energy_vectors()[1],
+                                  table_b.energy_vectors()[1])
+    assert table_b.meta["residual_rel"] < 0.05
+
+
+def test_ledger_rejects_mismatched_plan(fast_plan, tmp_path):
+    ledger = cal.RunLedger(tmp_path / "run")
+    ledger.bind(fast_plan)
+    cal.run_measurements(fast_plan, ledger, limit=1)
+    other = cal.plan(SYSTEM, duration_s=5.0, repeats=1)
+    fresh = cal.RunLedger(tmp_path / "run")
+    with pytest.raises(cal.CalibrationError, match="different calibration"):
+        fresh.bind(other)
+    fresh.bind(other, resume=False)     # explicit discard starts over
+    assert fresh.records == {}
+
+
+def test_calibrate_end_to_end_publishes(tmp_path):
+    store = TableStore(tmp_path)
+    table = cal.calibrate(SYSTEM, run_dir=store.run_dir(SYSTEM),
+                          store=store, **FAST)
+    assert store.get(SYSTEM) == table
+    assert table.provenance["mode"] == "full"
+    assert len(table.direct) == len(cal.plan(SYSTEM, **FAST).targets)
+
+
+def test_unattended_path_discards_obsolete_records(tmp_path):
+    store = TableStore(tmp_path)
+    run_dir = store.run_dir(SYSTEM)
+    stale = cal.plan(SYSTEM, duration_s=7.0, repeats=1)   # "old version" plan
+    ledger = cal.RunLedger(run_dir)
+    ledger.bind(stale)
+    cal.run_measurements(stale, ledger, limit=2)
+    # explicit callers fail loud on the mismatched plan ...
+    with pytest.raises(cal.CalibrationError, match="different calibration"):
+        cal.calibrate(SYSTEM, run_dir=run_dir, **FAST)
+    # ... the unattended store path warns, discards, and recovers
+    with pytest.warns(RuntimeWarning, match="obsolete"):
+        table = store.get_or_train(
+            SYSTEM, lambda s: cal.calibrate(
+                s, run_dir=run_dir, on_plan_mismatch="discard", **FAST))
+    assert table.provenance["mode"] == "full"
+
+
+def test_fractional_table_never_shadows_full_profile(tmp_path):
+    store = TableStore(tmp_path)
+    full = cal.calibrate(SYSTEM, store=store, **FAST)
+    donor = cal.calibrate("sim-v5e-liquid", **FAST)
+    frac = cal.calibrate(SYSTEM, profile_fraction=0.3, donor=donor,
+                         seed=1, **FAST)
+    with pytest.warns(RuntimeWarning, match="fully-profiled"):
+        assert cal.publish(frac, store) is None
+    assert store.get(SYSTEM) == full                 # full table untouched
+    assert cal.publish(frac, store, allow_downgrade=True) is not None
+    assert store.get(SYSTEM).provenance["mode"] == "fractional"
+    # with no full profile in the store, bootstrap publishing just works
+    store.evict(SYSTEM)
+    assert cal.publish(frac, store) is not None
+
+
+# ---------------------------------------------------------------------------
+# v1 -> v2 schema migration.
+# ---------------------------------------------------------------------------
+def _v1_payload():
+    return {
+        "schema": 1,
+        "system": SYSTEM,
+        "p_const": 41.5,
+        "p_static": 48.25,
+        "direct": {"add.f32": 1e-11, "dot.bf16": 1.3e-12, "hbm.read": 4.5e-11,
+                   "exp.f32": 3.4e-11, "slice": 0.0},
+        "scaled": {"vmem.write": 1.7e-12},
+        "bucket_means": {"vpu_simple": 1e-11, "mxu": 1.3e-12},
+        "meta": {"isa_gen": 0.0, "residual_rel": 0.01},
+    }
+
+
+def test_v1_table_loads_through_store_migration(tmp_path):
+    store = TableStore(tmp_path)
+    v1_path = tmp_path / f"{SYSTEM}__gen0__v1.json"
+    v1_path.write_text(json.dumps(_v1_payload()))
+
+    table = store.get(SYSTEM)
+    assert table is not None
+    assert table.p_const == 41.5
+    assert dict(table.direct.items()) == _v1_payload()["direct"]
+    assert dict(table.scaled.items()) == _v1_payload()["scaled"]
+    assert table.provenance["migrated_from_schema"] == 1
+    # migrated table is republished under the current-version path
+    v2_path = store.path_for(SYSTEM)
+    assert v2_path.exists()
+    assert json.loads(v2_path.read_text())["schema"] == SCHEMA_VERSION
+    assert store.get(SYSTEM) == table
+
+
+def test_migrate_table_dict_paths():
+    d = migrate_table_dict(_v1_payload())
+    assert d["schema"] == SCHEMA_VERSION
+    assert d["provenance"]["migrated_from_schema"] == 1
+    with pytest.raises(TableSchemaError, match="no migration path"):
+        migrate_table_dict({"schema": -1})
+
+
+# ---------------------------------------------------------------------------
+# Dict-view / vector-path parity on the array-backed table.
+# ---------------------------------------------------------------------------
+def test_lookup_parity_dict_view_vs_vector_path():
+    table = EnergyTable.from_dict(
+        {k: v for k, v in _v1_payload().items() if k != "schema"})
+    # include an interned-but-unknown class so the bucket path is exercised
+    isa.CLASS_INDEX.intern("mystery.f32")
+    n = len(isa.CLASS_INDEX)
+    e_direct, e_pred = table.energy_vectors(n)
+    for i in range(n):
+        cls = isa.CLASS_INDEX.name(i)
+        v_pred, how = table.lookup(cls, mode="pred")
+        v_direct, how_d = table.lookup(cls, mode="direct")
+        assert e_pred[i] == v_pred, cls
+        assert e_direct[i] == (v_direct if how_d == DIRECT else 0.0), cls
+    # explicit zero direct entries are hits, not misses
+    assert table.lookup("slice") == (0.0, DIRECT)
+    assert table.lookup("vmem.write") == (1.7e-12, SCALED)
+    assert table.lookup("does.not.exist")[1] == MISS
+
+
+def test_view_mutation_invalidates_vectors():
+    table = EnergyTable.from_dict(
+        {k: v for k, v in _v1_payload().items() if k != "schema"})
+    i = isa.CLASS_INDEX.id("add.f32")
+    assert table.energy_vectors()[1][i] == 1e-11
+    table.direct["add.f32"] *= 2          # write-through dict view
+    assert table.energy_vectors()[1][i] == 2e-11
+    del table.direct["add.f32"]
+    assert "add.f32" not in table.direct
+    table.bucket_means["vpu_simple"] = 9e-12
+    _, e_pred = table.energy_vectors()
+    assert e_pred[i] == 9e-12             # direct gone -> bucket mean
+    # inherited dict mutators must invalidate too
+    table.bucket_means.setdefault("vpu_trans", 5e-12)
+    j = isa.CLASS_INDEX.id("exp.f32")
+    assert table.energy_vectors()[1][j] == 3.4e-11    # direct entry
+    del table.direct["exp.f32"]
+    assert table.energy_vectors()[1][j] == 5e-12      # setdefault'd bucket
+    table.direct.setdefault("exp.f32", 1e-12)
+    assert table.energy_vectors()[1][j] == 1e-12
+
+
+def test_bucket_means_bincount_matches_naive():
+    table = EnergyTable.from_dict(
+        {k: v for k, v in _v1_payload().items() if k != "schema"})
+    coverage.compute_bucket_means(table)
+    naive = {}
+    for cls, e in list(table.direct.items()) + list(table.scaled.items()):
+        b = isa.bucket_of(cls)
+        if b is not None and e > 0:
+            naive.setdefault(b, []).append(e)
+    want = {b: float(np.mean(v)) for b, v in naive.items()}
+    assert set(table.bucket_means) == set(want)
+    for b in want:
+        assert table.bucket_means[b] == pytest.approx(want[b], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fractional (Fig. 14) mode through the pipeline + facade.
+# ---------------------------------------------------------------------------
+def test_fractional_calibration_smoke(tmp_path):
+    donor = cal.calibrate(SYSTEM, run_dir=tmp_path / "donor", **FAST)
+    model = EnergyModel.train("sim-v5e-liquid", profile_fraction=0.3,
+                              donor=donor, seed=3, **FAST)
+    t = model.table
+    assert t.provenance["mode"] == "fractional"
+    assert t.provenance["n_measured"] < t.provenance["n_targets"]
+    # every donor class is represented: measured or affine-predicted
+    assert set(t.direct) >= set(donor.direct)
+    assert t.meta["r2_fit"] > 0.8
+    # the hybrid prices work sensibly (same order as the donor's energies)
+    for cls in ("dot.bf16", "hbm.read"):
+        assert 0.1 * donor.direct[cls] < t.direct[cls] < 10 * donor.direct[cls]

@@ -4,8 +4,8 @@ EXPERIMENTS.md)."""
 import numpy as np
 import pytest
 
+from repro.api import EnergyModel
 from repro.core.evaluate import evaluate_system
-from repro.core.trainer import cached_table
 from repro.hw.systems import get_device
 
 
@@ -47,7 +47,7 @@ def test_new_generation_bucketing_recovers_coverage(system):
 def test_coefficient_recovery_scale():
     """Recovered energies must be the right order of magnitude (the NNLS
     redistributes within collinear groups, but never by orders)."""
-    tab = cached_table("sim-v5e-air")
+    tab = EnergyModel.from_store("sim-v5e-air").table
     hid = get_device("sim-v5e-air")._hidden
     ratios = []
     for cls, est in tab.direct.items():

@@ -90,6 +90,6 @@ def test_square_system_property():
 
 def test_solver_residual_near_zero_on_device():
     """Paper: 'we monitor the residual ... it remains zero'."""
-    from repro.core.trainer import cached_table
-    tab = cached_table("sim-v5e-air")
+    from repro.api import EnergyModel
+    tab = EnergyModel.from_store("sim-v5e-air").table
     assert tab.meta["residual_rel"] < 0.02

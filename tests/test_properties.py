@@ -147,6 +147,31 @@ def test_merge_mult_equals_elementwise_arithmetic(da, db, mult):
     np.testing.assert_array_equal(z.vector(n), want)
 
 
+_ENERGY_DICTS = st.dictionaries(_CLASS_NAMES, st.floats(0.0, 1e-10),
+                                min_size=0, max_size=16)
+_BUCKETS = st.dictionaries(st.sampled_from(list(isa.ALL_BUCKETS)),
+                           st.floats(1e-13, 1e-10), max_size=4)
+
+
+@given(_ENERGY_DICTS, _ENERGY_DICTS, _BUCKETS)
+@settings(max_examples=40)
+def test_table_lookup_parity_dict_view_vs_vector_path(direct, scaled, bums):
+    """The array-backed table's resolved vectors agree with per-class
+    ``lookup`` for every interned class, in both modes — including explicit
+    zero entries (hits) and bucket-mean fallbacks."""
+    from repro.core.table import DIRECT as D
+    t = EnergyTable(system="p", p_const=1.0, p_static=2.0, direct=direct,
+                    scaled=scaled, bucket_means=bums)
+    assert dict(t.direct.items()) == direct
+    n = len(isa.CLASS_INDEX)
+    e_direct, e_pred = t.energy_vectors(n)
+    for i in range(n):
+        cls = isa.CLASS_INDEX.name(i)
+        v, how = t.lookup(cls, mode="pred")
+        assert e_pred[i] == v
+        assert e_direct[i] == (v if how == D else 0.0)
+
+
 @given(st.lists(st.tuples(_UNIT_DICTS, st.floats(0.01, 100.0)),
                 min_size=1, max_size=8))
 @settings(max_examples=25, deadline=None)

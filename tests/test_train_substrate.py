@@ -2,14 +2,26 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
+from repro.api import EnergyModel
 from repro.core import transfer
 from repro.core.fleet import EnergyMonitor
 from repro.core.opcount import OpCounts
-from repro.core.trainer import cached_table
 from repro.data.pipeline import DataConfig, host_batch
 from repro.train import optimizer as opt_mod
 from repro.train.elastic import StragglerMonitor, scale_batch
+
+
+@pytest.fixture(scope="module")
+def air_table():
+    # store-backed (persistent TableStore): trained at most once per machine
+    return EnergyModel.from_store("sim-v5e-air").table
+
+
+@pytest.fixture(scope="module")
+def liquid_table():
+    return EnergyModel.from_store("sim-v5e-liquid").table
 
 
 # ---- optimizer -------------------------------------------------------------
@@ -94,24 +106,35 @@ def test_straggler_ignores_one_off_spike():
 
 
 # ---- transfer (Fig. 14) --------------------------------------------------------
-def test_air_to_liquid_tables_strongly_linear():
-    air = cached_table("sim-v5e-air")
-    liq = cached_table("sim-v5e-liquid")
-    assert transfer.r2_between(air, liq) > 0.95
+def test_air_to_liquid_tables_strongly_linear(air_table, liquid_table):
+    assert transfer.r2_between(air_table, liquid_table) > 0.95
 
 
-def test_transfer_with_subset_keeps_structure():
-    air = cached_table("sim-v5e-air")
-    liq = cached_table("sim-v5e-liquid")
-    hybrid, fit = transfer.transfer_table(air, liq, 0.5, seed=0)
+def test_transfer_with_subset_keeps_structure(air_table, liquid_table):
+    hybrid, fit = transfer.transfer_table(air_table, liquid_table, 0.5,
+                                          seed=0)
     assert fit.r2 > 0.9
-    assert set(hybrid.direct) >= set(air.direct) & set(liq.direct)
+    assert set(hybrid.direct) >= set(air_table.direct) & set(liquid_table.direct)
+
+
+def test_transfer_predicts_src_only_classes(air_table, liquid_table):
+    # classes measured only on the donor must be affine-predicted into the
+    # hybrid, not silently dropped (the point of Fig. 14)
+    extra = dict(air_table.direct.items())
+    extra["dot.fp8"] = 4.2e-13          # donor-only class (not in dst suite)
+    donor = type(air_table)(system=air_table.system,
+                            p_const=air_table.p_const,
+                            p_static=air_table.p_static, direct=extra)
+    assert "dot.fp8" not in liquid_table.direct
+    hybrid, fit = transfer.transfer_table(donor, liquid_table, 0.5, seed=0)
+    assert "dot.fp8" in hybrid.direct
+    expected = max(fit.slope * extra["dot.fp8"] + fit.intercept, 0.0)
+    assert hybrid.direct["dot.fp8"] == pytest.approx(expected)
 
 
 # ---- fleet monitor (QMCPACK machinery) -------------------------------------------
-def test_fleet_monitor_flags_spike():
-    table = cached_table("sim-v5e-air")
-    mon = EnergyMonitor(table, window=8, spike_ratio=1.5, min_share=0.01)
+def test_fleet_monitor_flags_spike(air_table):
+    mon = EnergyMonitor(air_table, window=8, spike_ratio=1.5, min_share=0.01)
     base = OpCounts()
     base.add("dot.bf16", 1e9)
     base.add("exp.f32", 1e7)
