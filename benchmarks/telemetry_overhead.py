@@ -1,24 +1,36 @@
 """Telemetry ingestion overhead — the streaming hot path must stay cheap.
 
 A production collector polls every device at NVML-ish rates; the per-sample
-cost of ring append + incremental integration + plateau update + marker
-alignment bounds how many devices one monitor process can watch.  Reports
-nanoseconds per sample through the full pipeline and through the integrator
-alone.
+cost of ring write + incremental integration + plateau update + marker
+alignment bounds how many devices one monitor process can watch.  This
+benchmark times the **per-sample reference path** against **chunked ndarray
+ingestion** (several chunk sizes), end-to-end through the full pipeline and
+through the integrator alone, and checks the two agree bitwise.
+
+Emits JSON (``--out``, default ``results/BENCH_telemetry_overhead.json``)
+recording ns/sample for both paths plus the devices-per-monitor headroom
+each implies, and the repo's CSV line format on stdout.  ``--min-speedup``
+turns it into a CI gate.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import record
 from repro.telemetry.align import StreamAligner, contiguous_markers
 from repro.telemetry.sampler import PowerSample, SampleRing
 from repro.telemetry.stream import OnlineSteadyState, StreamingIntegrator
 
 N_SAMPLES = 200_000
 SAMPLES_PER_STEP = 100          # marker cadence
+CHUNK_SIZES = (64, 512, 4096)
+SENSOR_HZ = 10.0                # NVML-ish poll rate, for the headroom math
 
 
 def _synthetic(n: int):
@@ -28,21 +40,9 @@ def _synthetic(n: int):
     return ts, ps
 
 
-@timed("telemetry_integrator_only")
-def bench_integrator() -> str:
-    ts, ps = _synthetic(N_SAMPLES)
-    integ = StreamingIntegrator()
-    t0 = time.perf_counter()
-    for i in range(N_SAMPLES):
-        integ.add(ts[i], ps[i])
-    ns = (time.perf_counter() - t0) / N_SAMPLES * 1e9
-    return f"ns_per_sample={ns:.0f} energy_j={integ.energy_j:.0f}"
-
-
-@timed("telemetry_full_pipeline")
-def bench_pipeline() -> str:
-    ts, ps = _synthetic(N_SAMPLES)
-    bounds = ts[::SAMPLES_PER_STEP]
+def _pipeline(ts, ps, bounds, chunk: int | None):
+    """Run the full stack; returns (ns_per_sample, total_energy, windows)."""
+    n = len(ts)
     ring = SampleRing(4096)
     integ = StreamingIntegrator()
     plateau = OnlineSteadyState()
@@ -50,20 +50,124 @@ def bench_pipeline() -> str:
     for m in contiguous_markers(bounds):
         aligner.add_marker(m)
     t0 = time.perf_counter()
-    for i in range(N_SAMPLES):
-        s = PowerSample(ts[i], ps[i])
-        ring.append(s)
-        integ.add(s.t_s, s.power_w)
-        plateau.update(s.t_s, s.power_w)
-        aligner.add_sample(s)
-    ns = (time.perf_counter() - t0) / N_SAMPLES * 1e9
+    if chunk is None:
+        for i in range(n):
+            s = PowerSample(ts[i], ps[i])
+            ring.append(s)
+            integ.add(s.t_s, s.power_w)
+            plateau.update(s.t_s, s.power_w)
+            aligner.add_sample(s)
+    else:
+        for lo in range(0, n, chunk):
+            t, p = ts[lo:lo + chunk], ps[lo:lo + chunk]
+            ring.extend(t, p)
+            integ.extend(t, p)
+            plateau.update_chunk(t, p)
+            aligner.add_samples(t, p)
+    ns = (time.perf_counter() - t0) / n * 1e9
     aligner.close()
-    return (f"ns_per_sample={ns:.0f} windows={len(aligner.windows)} "
-            f"dropped={ring.dropped}")
+    return ns, integ.energy_j, [w.measured_j for w in aligner.windows]
 
 
-ALL = [bench_integrator, bench_pipeline]
+def _integrator_only(ts, ps, chunk: int | None):
+    n = len(ts)
+    integ = StreamingIntegrator()
+    t0 = time.perf_counter()
+    if chunk is None:
+        for i in range(n):
+            integ.add(ts[i], ps[i])
+    else:
+        for lo in range(0, n, chunk):
+            integ.extend(ts[lo:lo + chunk], ps[lo:lo + chunk])
+    return (time.perf_counter() - t0) / n * 1e9, integ.energy_j
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_telemetry_overhead.json")
+    ap.add_argument("--samples", type=int, default=N_SAMPLES)
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless the best chunked full pipeline beats "
+                         "the per-sample path by this factor")
+    args = ap.parse_args(argv)
+
+    ts, ps = _synthetic(args.samples)
+    bounds = ts[::SAMPLES_PER_STEP]
+
+    # warm numpy / allocator paths once
+    _pipeline(ts[:2048], ps[:2048], ts[:2048:SAMPLES_PER_STEP], 512)
+
+    scalar_ns, scalar_e, scalar_w = _pipeline(ts, ps, bounds, None)
+    scalar_integ_ns, scalar_integ_e = _integrator_only(ts, ps, None)
+
+    chunked = {}
+    identical = True
+    for cs in CHUNK_SIZES:
+        full_ns, e, w = _pipeline(ts, ps, bounds, cs)
+        integ_ns, ie = _integrator_only(ts, ps, cs)
+        identical &= (e == scalar_e and ie == scalar_integ_e
+                      and w == scalar_w)
+        chunked[str(cs)] = {"full_ns_per_sample": full_ns,
+                            "integrator_ns_per_sample": integ_ns}
+
+    best_cs, best = min(chunked.items(),
+                        key=lambda kv: kv[1]["full_ns_per_sample"])
+    speedup = scalar_ns / max(best["full_ns_per_sample"], 1e-12)
+
+    def devices(ns_per_sample: float) -> int:
+        # one monitor process, SENSOR_HZ polls per device per second
+        return int(1e9 / (ns_per_sample * SENSOR_HZ))
+
+    result = {
+        "benchmark": "telemetry_overhead",
+        "n_samples": args.samples,
+        "samples_per_step": SAMPLES_PER_STEP,
+        "scalar": {"full_ns_per_sample": scalar_ns,
+                   "integrator_ns_per_sample": scalar_integ_ns,
+                   "devices_per_monitor_at_10hz": devices(scalar_ns)},
+        "chunked": chunked,
+        "best_chunk_size": int(best_cs),
+        "best_full_ns_per_sample": best["full_ns_per_sample"],
+        "devices_per_monitor_at_10hz": devices(best["full_ns_per_sample"]),
+        "speedup_chunked_vs_scalar": speedup,
+        "outputs_bitwise_identical": identical,
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    record("telemetry_scalar_pipeline", scalar_ns / 1e3,
+           f"ns_per_sample={scalar_ns:.0f}")
+    for cs, row in chunked.items():
+        record(f"telemetry_chunked_{cs}", row["full_ns_per_sample"] / 1e3,
+               f"ns_per_sample={row['full_ns_per_sample']:.0f}")
+    record("telemetry_integrator_chunked",
+           chunked[str(CHUNK_SIZES[-1])]["integrator_ns_per_sample"] / 1e3,
+           f"scalar_ns={scalar_integ_ns:.0f}")
+    print(f"speedup x{speedup:.1f} at chunk={best_cs} "
+          f"({best['full_ns_per_sample']:.0f} ns/sample, "
+          f"{result['devices_per_monitor_at_10hz']} devices/monitor @10Hz) "
+          f"identical={identical}")
+    print(f"wrote {out}")
+
+    if not identical:
+        print("FAIL: chunked outputs are not bitwise-identical to the "
+              "per-sample path", file=sys.stderr)
+        return 1
+    if speedup < args.min_speedup:
+        print(f"FAIL: speedup x{speedup:.1f} < required "
+              f"x{args.min_speedup:.1f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def bench_telemetry_overhead():
+    """Harness entry (benchmarks.run): the full canonical configuration,
+    so the JSON under results/ is never overwritten with a reduced run."""
+    main([])
+
+
+ALL = [bench_telemetry_overhead]
 
 if __name__ == "__main__":
-    for b in ALL:
-        b()
+    sys.exit(main())

@@ -10,6 +10,12 @@ energies run 40% hot against the trained table — an aged part or a
 firmware DVFS change).  Watch the drift detector flag it and the
 recalibration trigger repair the table live.
 
+Ingestion is chunked: the monitor loop calls ``service.poll_all`` to drain
+every session's sampler a few array-chunks at a time (sub-µs per sample
+through the whole pipeline), rendering a fleet snapshot between passes —
+exactly the cadence of a real dashboard refreshing while collectors pour
+telemetry in.
+
     PYTHONPATH=src python examples/live_dashboard.py
 """
 import jax
@@ -32,9 +38,12 @@ ARGS = (jax.ShapeDtypeStruct((2048, 1024), jnp.bfloat16),
 service = TelemetryService()
 
 # -- node 0: healthy -------------------------------------------------------
+CHUNK = 64        # small chunks so the poll cadence is visible in a demo
+
 model = EnergyModel.from_store("sim-v5e-air")
 prof = model.profile(decode_like, *ARGS)
-healthy = model.monitor(live=True, step_counts=prof.counts)
+healthy = model.monitor(live=True, step_counts=prof.counts,
+                        telemetry_chunk=CHUNK)
 service.register(healthy.live, key="node0/decode")
 
 # -- node 1: drifted silicon (same table, coefficients 40% hot) ------------
@@ -42,7 +51,8 @@ cfg = SYSTEMS["sim-v5e-air"]
 drifted_model = EnergyModel.from_store("sim-v5e-air")
 drifted_model._device = SimDevice(cfg.chip, cfg.cooling, cfg.seed,
                                   name="sim-v5e-air-aged", coeff_scale=1.4)
-aged = drifted_model.monitor(live=True, step_counts=prof.counts)
+aged = drifted_model.monitor(live=True, step_counts=prof.counts,
+                             telemetry_chunk=CHUNK)
 service.register(aged.live, key="node1/decode")
 
 # -- the "serving loops": each decode step is an MTSM sync point -----------
@@ -55,8 +65,19 @@ for i in range(STEPS):
 # workload (in production this is the burn-in history of the part)
 aged.live.attributor.detector.baseline = 1.0
 
+# -- chunked consume loop: one poll_all pass drains the whole fleet --------
+healthy.live.start()
+aged.live.start()
+passes = 0
+while service.poll_all(max_chunks=4):
+    passes += 1
+    snap = service.snapshot()["fleet"]
+    print(f"[poll {passes:2d}] {snap['samples']:5d} samples in  "
+          f"{snap['measured_j']:9.1f} J measured  "
+          f"drifting={snap['drifting'] or '-'}")
+
 for mon, label in ((healthy, "node0"), (aged, "node1")):
-    s = mon.live.finish()
+    s = mon.live.finish()        # already drained: just the summary
     flag = " ** DRIFT -> recalibrated **" if s.recalibrations else ""
     print(f"[{label}] {s.steps} steps  measured {s.measured_total_j:9.1f} J  "
           f"predicted {s.predicted_total_j:9.1f} J  "

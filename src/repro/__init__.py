@@ -28,6 +28,7 @@ _LAZY = {
     "CountsSource": "repro.api",
     "PredictJob": "repro.api",
     "Comparison": "repro.api",
+    "ProfileCache": "repro.api",
     "EnergyTable": "repro.core.table",
     "TableSchemaError": "repro.core.table",
     "TableStore": "repro.core.store",

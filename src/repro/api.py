@@ -30,16 +30,21 @@ across every later call — the fleet-scale hot path.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 from typing import (Any, Callable, Iterable, List, Mapping, Optional,
                     Protocol, Sequence, Union, runtime_checkable)
 
-from repro.core.opcount import OpCounts, count_fn
+from repro.core.opcount import OpCounts, count_jaxpr
 from repro.core.predict import Prediction, TablePredictor
 from repro.core.store import TableStore, default_store
 from repro.core.table import EnergyTable
 from repro.core.trainer import train_table
 from repro.hw.device import Program, RunRecord, SimDevice
 from repro.hw.systems import get_device
+
+
+_UNSET = object()      # "keep the callee's default" sentinel
 
 
 # ---------------------------------------------------------------------------
@@ -61,9 +66,14 @@ class JaxprSource:
     kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     axis_sizes: Optional[Mapping[str, int]] = None
 
+    def trace(self):
+        """The closed jaxpr — the countable (and digestible) artifact."""
+        import jax
+        return jax.make_jaxpr(self.fn)(*self.args, **dict(self.kwargs))
+
     def op_counts(self, isa_gen: int) -> OpCounts:
-        return count_fn(self.fn, *self.args, axis_sizes=self.axis_sizes,
-                        isa_gen=isa_gen, **dict(self.kwargs))
+        return count_jaxpr(self.trace(), axis_sizes=self.axis_sizes,
+                           isa_gen=isa_gen)
 
 
 @dataclasses.dataclass
@@ -104,6 +114,70 @@ class Profile:
 
     def scaled(self, mult: float) -> OpCounts:
         return self.counts.scaled(mult)
+
+
+class ProfileCache:
+    """Content-addressed ``OpCounts`` cache for a model's profile sources.
+
+    Since prediction vectorized (~12 µs/call), *counting* dominates the
+    serve path (~180 µs for a jaxpr walk, and re-tracing costs more
+    still).  HLO sources key on a digest of their text; jaxpr sources key
+    on the callable plus its abstract-value signature (shapes/dtypes —
+    everything tracing can observe), so a hit skips the trace *and* the
+    counting walk.  LRU-bounded; hit/miss counters surface via
+    ``EnergyModel.stats()``.  The cache keeps a pristine copy of every
+    entry and hands out copies, so callers may mutate what they receive
+    without poisoning later lookups.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = int(maxsize)
+        self._entries: "OrderedDict[tuple, OpCounts]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_count(self, key: tuple, count: Callable[[], OpCounts]) -> OpCounts:
+        cached = self._entries.get(key)
+        if cached is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return cached.scaled(1.0)         # defensive copy (bitwise)
+        self.misses += 1
+        counts = count()
+        self._entries[key] = counts.scaled(1.0)   # pristine copy retained
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return counts
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries), "maxsize": self.maxsize}
+
+
+def _arg_signature(x):
+    """A hashable stand-in for what tracing can observe of one argument.
+
+    Arrays and ShapeDtypeStructs reduce to (shape, dtype, weak_type) —
+    concrete values cannot influence a jaxpr beyond their aval.  Plain
+    hashable Python values (static scalars, flags) key by value.  Returns
+    ``None`` for anything else: the source is then uncacheable.
+    """
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is not None and dtype is not None:
+        return ("aval", tuple(shape), str(dtype),
+                bool(getattr(x, "weak_type", False)))
+    try:
+        hash(x)
+    except TypeError:
+        return None
+    return ("val", x)
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +229,7 @@ class EnergyModel:
         self._device = device
         self.predictor = TablePredictor(table)
         self.predictor.warm()      # long-lived session: precompute vectors
+        self.profile_cache = ProfileCache()
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -247,11 +322,11 @@ class EnergyModel:
         """Trace a JAX callable and count its per-iteration work."""
         src = JaxprSource(fn, args, kwargs, axis_sizes=axis_sizes)
         return Profile(name or getattr(fn, "__name__", "fn"),
-                       src.op_counts(self.isa_gen))
+                       self._cached_counts(src))
 
     def profile_hlo(self, text: str, name: str = "hlo") -> Profile:
         """Count work from optimized HLO text (compiled artifact path)."""
-        return Profile(name, HloSource(text).op_counts(self.isa_gen))
+        return Profile(name, self._cached_counts(HloSource(text)))
 
     def profile_counts(self, counts: Union[OpCounts, Mapping[str, float]],
                        name: str = "counts") -> Profile:
@@ -261,6 +336,8 @@ class EnergyModel:
     def _resolve(self, source: Union[ProfileSource, OpCounts]) -> OpCounts:
         if isinstance(source, OpCounts):
             return source
+        if isinstance(source, (JaxprSource, HloSource)):
+            return self._cached_counts(source)
         if isinstance(source, ProfileSource):
             return source.op_counts(self.isa_gen)
         if callable(source):
@@ -268,6 +345,50 @@ class EnergyModel:
                 "got a bare callable; profile it first: "
                 "model.predict(model.profile(fn, *args), ...)")
         raise TypeError(f"not a ProfileSource or OpCounts: {source!r}")
+
+    def _cached_counts(self, source: Union["JaxprSource", "HloSource"],
+                       ) -> OpCounts:
+        """Counts for an addressable source, through the profile cache.
+
+        HLO text keys on its digest (the text is already in hand, hashing
+        is cheap).  A jaxpr source keys on the callable object plus the
+        abstract-value signature of its arguments — the full input to
+        tracing — so a hit skips both the re-trace and the counting walk;
+        rendering the jaxpr just to digest it would cost more than the
+        counting it saves.  The key holds a reference to the callable, so
+        an entry can never be confused with a later object reusing its
+        address.  Sources whose arguments defy a signature fall through to
+        a direct (uncached) count.
+        """
+        gen = self.isa_gen
+        if isinstance(source, HloSource):
+            key = ("hlo", gen,
+                   hashlib.sha256(source.text.encode()).hexdigest())
+            return self.profile_cache.get_or_count(
+                key, lambda: source.op_counts(gen))
+        arg_sigs = tuple(_arg_signature(a) for a in source.args)
+        kw_sigs = tuple((k, _arg_signature(v))
+                        for k, v in sorted(source.kwargs.items()))
+        try:
+            hash(source.fn)
+        except TypeError:
+            return source.op_counts(gen)      # unhashable callable
+        if any(s is None for s in arg_sigs) or \
+                any(s is None for _, s in kw_sigs):
+            return source.op_counts(gen)      # uncacheable arguments
+        axes = (tuple(sorted(source.axis_sizes.items()))
+                if source.axis_sizes else ())
+        key = ("jaxpr", gen, axes, source.fn, arg_sigs, kw_sigs)
+        return self.profile_cache.get_or_count(
+            key, lambda: source.op_counts(gen))
+
+    def stats(self) -> dict:
+        """Session counters (JSON-safe): profile-cache hits/misses, table."""
+        return {
+            "system": self.system,
+            "profile_cache": self.profile_cache.stats(),
+            "classes": len(self.table.direct),
+        }
 
     # -- prediction ---------------------------------------------------------
     def predict(self, source: Union[ProfileSource, OpCounts],
@@ -351,7 +472,8 @@ class EnergyModel:
         return Comparison(record=rec, prediction=pred)
 
     # -- streaming / evaluation ----------------------------------------------
-    def monitor(self, live=False, step_counts=None, **kwargs):
+    def monitor(self, live=False, step_counts=None, *,
+                telemetry_chunk=_UNSET, **kwargs):
         """A fleet ``EnergyMonitor`` bound to this model's predictor.
 
         ``step_counts`` sets the default per-step profile (one profile per
@@ -364,17 +486,26 @@ class EnergyModel:
         steps via ``monitor.live.step(...)`` and ``monitor.live.finish()``
         aligns measured joules to every step, feeding them back into the
         monitor's records alongside the predictions.
+
+        ``telemetry_chunk`` sets the live session's ingestion chunk size
+        (``None`` selects the per-sample reference path; unset keeps the
+        chunked default).
         """
         from repro.core.fleet import EnergyMonitor
         if step_counts is not None and not isinstance(step_counts, OpCounts):
             step_counts = self._resolve(step_counts)
+        if telemetry_chunk is not _UNSET and (live is None or live is False):
+            raise ValueError("telemetry_chunk= only applies to the live "
+                             "stream session; pass live=True (or a source)")
         mon = EnergyMonitor(self, step_counts=step_counts, **kwargs)
         if live is not None and live is not False:
             source = step_counts if live is True else live
             if source is None:
                 raise ValueError("monitor(live=True) needs step_counts=, or "
                                  "pass the profile source as live=")
-            mon.live = self.stream(source, monitor=mon)
+            stream_kw = {} if telemetry_chunk is _UNSET \
+                else {"chunk_size": telemetry_chunk}
+            mon.live = self.stream(source, monitor=mon, **stream_kw)
         return mon
 
     def stream(self, source: Union[ProfileSource, OpCounts], *,

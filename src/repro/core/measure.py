@@ -49,6 +49,29 @@ def rolling_std(p: np.ndarray, w: int) -> np.ndarray:
     return np.sqrt(var)
 
 
+def trailing_window_moments(t: np.ndarray, p: np.ndarray, window_s: float,
+                            start: int = 0):
+    """Per-sample stats of the trailing time window ending at each sample.
+
+    For every sample ``i >= start``, the window holds samples ``j`` with
+    ``t[i] - t[j] <= window_s`` (the online plateau detector's eviction
+    rule).  Returns ``(left, count, mean, std)`` arrays over ``i`` in
+    ``[start, len(t))``: the window's left index, its population count, and
+    its power mean/std via cumulative sums — one vectorized pass instead of
+    one deque walk per sample.
+    """
+    t = np.asarray(t, dtype=float)
+    p = np.asarray(p, dtype=float)
+    i = np.arange(start, t.size)
+    left = np.searchsorted(t, t[i] - window_s, side="left")
+    c1 = np.concatenate(([0.0], np.cumsum(p)))
+    c2 = np.concatenate(([0.0], np.cumsum(p * p)))
+    count = i + 1 - left
+    mean = (c1[i + 1] - c1[left]) / count
+    var = np.maximum((c2[i + 1] - c2[left]) / count - mean * mean, 0.0)
+    return left, count, mean, np.sqrt(var)
+
+
 @dataclasses.dataclass
 class SteadyState:
     power_w: float          # steady-state mean power

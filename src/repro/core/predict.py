@@ -208,10 +208,12 @@ class TablePredictor:
             mem[need_default, 1] = bw * f + 0.5 * leak
             mem[need_default, 2] = br * (1 - f)
             mem[need_default, 3] = bw * (1 - f)
-        for i, ctrs in enumerate(counters_list):
-            if ctrs is not None:
-                for j, (key, _) in enumerate(_COUNTER_ITEMS):
-                    mem[i, j] = ctrs.get(key, 0.0)
+        given = [i for i, c in enumerate(counters_list) if c is not None]
+        if given:
+            # one fancy assignment beats n_jobs*4 scalar ndarray stores on
+            # the batched-window ingestion path
+            mem[given] = [[counters_list[i].get(key, 0.0)
+                           for key, _ in _COUNTER_ITEMS] for i in given]
 
         for j, (_, cls) in enumerate(_COUNTER_ITEMS):
             ci = int(_COUNTER_IDS[j])

@@ -25,7 +25,7 @@ from repro.serve.step import make_serve_step
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
         prompt_len: int = 16, max_new: int = 16,
         energy_system: Optional[str] = "sim-v5e-air", seed: int = 0,
-        verbose: bool = True):
+        telemetry_chunk: Optional[int] = 4096, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     max_seq = prompt_len + max_new + 1
     params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
@@ -45,9 +45,10 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
                           jnp.zeros((batch, 1), jnp.int32))
         # live=True wires a telemetry StreamSession (monitor.live): each
         # decode step is an MTSM sync point; finish() aligns measured
-        # joules per step against the sampled power trace.
+        # joules per step against the sampled power trace, ingested
+        # chunk-wise (telemetry_chunk=None falls back to per-sample).
         monitor = EnergyModel.from_store(energy_system).monitor(
-            live=True, step_counts=counts)
+            live=True, step_counts=counts, telemetry_chunk=telemetry_chunk)
 
     rng = np.random.default_rng(seed)
     tok = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
@@ -86,9 +87,12 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--telemetry-chunk", type=int, default=4096,
+                    help="streaming ingestion chunk size (0 = per-sample)")
     args = ap.parse_args(argv)
     out, _ = run(args.arch, smoke=args.smoke, batch=args.batch,
-                 prompt_len=args.prompt_len, max_new=args.max_new)
+                 prompt_len=args.prompt_len, max_new=args.max_new,
+                 telemetry_chunk=args.telemetry_chunk or None)
     assert out.shape[1] == args.prompt_len + args.max_new
     return 0
 

@@ -41,6 +41,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         energy_system: Optional[str] = "sim-v5e-air",
         energy_donor: Optional[str] = None,
         energy_profile_fraction: Optional[float] = None,
+        telemetry_chunk: Optional[int] = 4096,
         seed: int = 0, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     shape = ShapeSpec("run", seq_len, global_batch, "train")
@@ -79,7 +80,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                 donor=energy_donor)
         else:
             model = EnergyModel.from_store(energy_system)
-        monitor = model.monitor(live=True, step_counts=counts)
+        monitor = model.monitor(live=True, step_counts=counts,
+                                telemetry_chunk=telemetry_chunk)
 
     straggler = StragglerMonitor()
     losses = []
@@ -130,6 +132,8 @@ def main(argv=None) -> int:
     ap.add_argument("--energy-profile-fraction", type=float, default=None,
                     help="fraction of the microbenchmark suite to measure "
                          "when bootstrapping from --energy-donor")
+    ap.add_argument("--telemetry-chunk", type=int, default=4096,
+                    help="streaming ingestion chunk size (0 = per-sample)")
     args = ap.parse_args(argv)
     _, losses, _ = run(args.arch, smoke=args.smoke, steps=args.steps,
                        seq_len=args.seq_len, global_batch=args.global_batch,
@@ -137,7 +141,8 @@ def main(argv=None) -> int:
                        microbatches=args.microbatches,
                        energy_system=args.energy_system,
                        energy_donor=args.energy_donor,
-                       energy_profile_fraction=args.energy_profile_fraction)
+                       energy_profile_fraction=args.energy_profile_fraction,
+                       telemetry_chunk=args.telemetry_chunk or None)
     ok = np.isfinite(losses).all() and losses[-1] < losses[0]
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if ok else 'check'})")

@@ -9,6 +9,13 @@ The runtime layer between raw power sensors and the fleet monitor:
     attrib   — measured-vs-predicted residuals, drift, recalibration
     service  — per-workload sessions + the multi-device aggregator
 
+Every stage has two ingestion surfaces: the per-sample ``PowerSample``
+reference path and a chunked ndarray fast path (``chunks(n)`` samplers,
+``SampleRing.extend``, ``StreamingIntegrator.extend``,
+``OnlineSteadyState.update_chunk``, ``StreamAligner.add_samples``,
+``OnlineAttributor.attribute_batch``) that is bitwise-identical and ~15×
+cheaper per sample — see ``benchmarks/telemetry_overhead.py``.
+
 Entry point: ``repro.api.EnergyModel.stream(...)`` /
 ``EnergyModel.monitor(live=...)``.
 """
@@ -17,8 +24,9 @@ from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
 from repro.telemetry.attrib import (DriftDetector, DriftState,
                                     OnlineAttributor, StepAttribution,
                                     rescale_table)
-from repro.telemetry.sampler import (DeviceSampler, FeedSampler, PowerSample,
-                                     SampleRing, TraceReplaySampler)
+from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
+                                     FeedSampler, PowerSample, SampleRing,
+                                     TraceReplaySampler, iter_chunks)
 from repro.telemetry.service import (StreamSession, StreamSummary,
                                      TelemetryService)
 from repro.telemetry.stream import (OnlineSteadyState, PlateauState,
@@ -32,4 +40,5 @@ __all__ = [
     "PowerSample", "SampleRing", "TraceReplaySampler", "StreamSession",
     "StreamSummary", "TelemetryService", "OnlineSteadyState", "PlateauState",
     "StreamingIntegrator", "rolling_std", "trapezoid_energy",
+    "DEFAULT_CHUNK", "iter_chunks",
 ]

@@ -110,7 +110,8 @@ class StreamAligner:
         self.windows: List[AlignedWindow] = []
         self._on_window = on_window
         self._active: deque = deque()       # _Accum, by marker time order
-        self._held: deque = deque()         # samples beyond the horizon
+        self._held: deque = deque()         # scalar samples beyond horizon
+        self._held_np: deque = deque()      # (t, p) array chunks beyond it
         self._horizon = -math.inf           # latest marker end seen
         self._t_prev: Optional[float] = None
         self._p_prev = 0.0
@@ -129,7 +130,30 @@ class StreamAligner:
         self._drain()
 
     def add_sample(self, sample: PowerSample) -> None:
+        if self._held_np:      # array chunks pending: keep one time order
+            self.add_samples(np.asarray([sample.t_s]),
+                             np.asarray([sample.power_w]))
+            return
         self._held.append((float(sample.t_s), float(sample.power_w)))
+        self._drain()
+
+    def add_samples(self, times_s, power_w) -> None:
+        """Chunked ingestion: one ndarray of samples, one vectorized pass.
+
+        Samples must still arrive in time order (within and across chunks,
+        and relative to any ``add_sample`` calls).  Held-back samples beyond
+        the marker horizon stay as array chunks and are split by
+        ``searchsorted`` as markers extend the horizon.
+        """
+        t = np.asarray(times_s, dtype=float)
+        p = np.asarray(power_w, dtype=float)
+        if t.size == 0:
+            return
+        if self._held:         # flush scalar held-backs ahead of the chunk
+            sc = np.asarray(self._held, dtype=float)
+            self._held.clear()
+            self._held_np.append((sc[:, 0], sc[:, 1]))
+        self._held_np.append((t, p))
         self._drain()
 
     def extend(self, samples: Iterable[PowerSample]) -> None:
@@ -149,6 +173,17 @@ class StreamAligner:
         while self._held and self._held[0][0] <= self._horizon:
             t, p = self._held.popleft()
             self._process(t, p)
+        while self._held_np:
+            t, p = self._held_np[0]
+            n = int(np.searchsorted(t, self._horizon, side="right"))
+            if n == 0:
+                return
+            self._held_np.popleft()
+            if n < t.size:
+                self._held_np.appendleft((t[n:], p[n:]))
+                self._process_chunk(t[:n], p[:n])
+                return
+            self._process_chunk(t, p)
 
     def _process(self, t: float, p: float) -> None:
         t0, p0 = self._t_prev, self._p_prev
@@ -170,6 +205,60 @@ class StreamAligner:
         while self._active and self._active[0].marker.t_end_s <= t:
             self._finalize(self._active.popleft())
         self._t_prev, self._p_prev = t, p
+
+    def _process_chunk(self, t: np.ndarray, p: np.ndarray) -> None:
+        """Vectorized ``_process`` over a released chunk.
+
+        Per active window: sample membership by ``searchsorted``, energy by
+        the same split-trapezoid expression the scalar path evaluates
+        (identical operation order, so the results are bitwise equal), with
+        per-window accumulation replicating the scalar left-to-right
+        ``+=`` sequence via a seeded ``cumsum``.
+        """
+        if t.size == 0:
+            return
+        if self._t_prev is not None:
+            tt = np.concatenate(([self._t_prev], t))
+            pp = np.concatenate(([self._p_prev], p))
+        else:
+            tt, pp = t, p
+        t0s, t1s = tt[:-1], tt[1:]
+        p0s, p1s = pp[:-1], pp[1:]
+        t_last = float(t[-1])
+        for acc in self._active:
+            m = acc.marker
+            if m.t_start_s > t_last:
+                break            # time-ordered: nothing later overlaps yet
+            acc.n_samples += int(
+                np.searchsorted(t, m.t_end_s, side="left")
+                - np.searchsorted(t, m.t_start_s, side="left"))
+            if not t0s.size:
+                continue
+            i0 = int(np.searchsorted(t1s, m.t_start_s, side="right"))
+            i1 = int(np.searchsorted(t0s, m.t_end_s, side="left"))
+            if i1 <= i0:
+                continue
+            seg_t0, seg_t1 = t0s[i0:i1], t1s[i0:i1]
+            a = np.maximum(seg_t0, m.t_start_s)
+            b = np.minimum(seg_t1, m.t_end_s)
+            dt = seg_t1 - seg_t0
+            mask = (b - a > _EPS) & (dt > 0)
+            if not mask.any():
+                continue
+            dt_safe = np.where(dt > 0, dt, 1.0)
+            seg_p0 = p0s[i0:i1]
+            dp = p1s[i0:i1] - seg_p0
+            pa = seg_p0 + dp * (a - seg_t0) / dt_safe
+            pb = seg_p0 + dp * (b - seg_t0) / dt_safe
+            areas = (0.5 * (pa + pb) * (b - a))[mask]
+            spans = (b - a)[mask]
+            acc.energy_j = float(np.cumsum(
+                np.concatenate(([acc.energy_j], areas)))[-1])
+            acc.covered_s = float(np.cumsum(
+                np.concatenate(([acc.covered_s], spans)))[-1])
+        while self._active and self._active[0].marker.t_end_s <= t_last:
+            self._finalize(self._active.popleft())
+        self._t_prev, self._p_prev = t_last, float(p[-1])
 
     def _finalize(self, acc: _Accum) -> None:
         win = acc.finish()

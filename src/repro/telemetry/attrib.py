@@ -192,12 +192,52 @@ class OnlineAttributor:
         self.attributions: List[StepAttribution] = []
         self.drift: DriftState = DriftState(False, 1.0, math.nan, 0, 0)
         self.recalibrations: List[float] = []   # applied ratios, in order
+        self._triggers = 0     # repair actions fired (any strategy)
 
     def attribute(self, window: AlignedWindow, counts: OpCounts,
                   counters: Optional[dict] = None) -> StepAttribution:
         """Fuse one aligned window with the prediction for its op counts."""
         pred = self.predictor.predict(counts, window.duration_s,
                                       counters=counters)
+        return self._fuse(window, pred)
+
+    def attribute_batch(self, windows: List[AlignedWindow],
+                        counts_list: List[OpCounts],
+                        counters_list: Optional[List[Optional[dict]]] = None,
+                        ) -> List[StepAttribution]:
+        """Fuse many finalized windows in one ``predict_batch`` pass.
+
+        Bitwise-identical to calling ``attribute`` per window (a single
+        prediction *is* a 1-row batch).  Drift state still advances window
+        by window; when a recalibration fires mid-batch the remaining
+        windows are re-predicted against the repaired table, exactly as the
+        per-window path would have seen it.
+        """
+        if counters_list is None:
+            counters_list = [None] * len(windows)
+        out: List[StepAttribution] = []
+        i, n = 0, len(windows)
+        while i < n:
+            preds = self.predictor.predict_batch(
+                counts_list[i:], [w.duration_s for w in windows[i:]],
+                counters_list[i:])
+            repaired = False
+            for j, pred in enumerate(preds):
+                before = self._triggers
+                out.append(self._fuse(windows[i + j], pred))
+                # a trigger may have mutated the table: re-predict the tail
+                # so later windows see the same table state the sequential
+                # path would have
+                if self._triggers != before and i + j + 1 < n:
+                    i += j + 1
+                    repaired = True
+                    break
+            if not repaired:
+                i = n
+        return out
+
+    def _fuse(self, window: AlignedWindow,
+              pred: Prediction) -> StepAttribution:
         overhead = (self.table.p_const + self.table.p_static) * window.duration_s
         meas_dyn = window.measured_j - overhead
         pred_dyn = max(pred.dynamic_j, _EPS)
@@ -218,6 +258,7 @@ class OnlineAttributor:
     def _trigger(self, state: DriftState) -> None:
         if self.recalibrate is None:
             return
+        self._triggers += 1
         if callable(self.recalibrate):
             self.recalibrate(self, state)
         elif self.recalibrate == "rescale":

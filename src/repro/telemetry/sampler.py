@@ -15,6 +15,15 @@ sources cover the deployment spectrum:
 
 ``SampleRing`` is the bounded buffer between producer and consumers: O(1)
 append, overwrite-oldest semantics with a drop counter, snapshot to arrays.
+
+Chunked ingestion is the first-class fast path: every sampler grows a
+``chunks(n)`` iterator yielding ``(times, power, util, temp)`` ndarray
+quadruples (``TraceReplaySampler`` serves zero-copy slices of the recorded
+arrays — no per-sample object construction at all), and ``SampleRing.extend``
+writes a whole chunk with at most two wrap-aware slice copies.  The
+per-sample ``PowerSample`` path is preserved as the reference implementation
+the chunked path is tested bitwise against.  ``iter_chunks`` adapts any
+sampler — chunk-native or per-sample — into the chunked consume loop.
 """
 from __future__ import annotations
 
@@ -25,6 +34,13 @@ from typing import Callable, Iterable, Iterator, Optional, Tuple
 import numpy as np
 
 from repro.hw.device import Program, RunRecord, SensorTrace, SimDevice
+
+DEFAULT_CHUNK = 4096
+
+#: (times_s, power_w, util, temp_c) arrays of equal length — the chunked
+#: currency every sampler's ``chunks(n)`` yields and the whole telemetry
+#: stack ingests.
+SampleChunk = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
 
 @dataclasses.dataclass
@@ -73,6 +89,49 @@ class SampleRing:
         self._count = min(self._count + 1, self.capacity)
         self.total += 1
 
+    def extend(self, times_s, power_w, util=None, temp_c=None) -> int:
+        """Bulk append: one wrap-aware slice copy (two when wrapping).
+
+        Accounting matches ``append`` called per sample exactly: ``total``
+        grows by the chunk length, and ``dropped`` counts every sample the
+        write pushed out of the visible window — including the head of a
+        chunk *larger than capacity*, whose samples are overwritten before
+        any snapshot could see them.
+        """
+        t = np.asarray(times_s, dtype=float)
+        n = int(t.size)
+        if n == 0:
+            return 0
+        p = np.asarray(power_w, dtype=float)
+        u = (np.full(n, math.nan) if util is None
+             else np.asarray(util, dtype=float))
+        c = (np.full(n, math.nan) if temp_c is None
+             else np.asarray(temp_c, dtype=float))
+        cap = self.capacity
+        self.dropped += max(self._count + n - cap, 0)
+        self.total += n
+        head = self._head
+        if n >= cap:
+            # only the chunk's tail is ever visible; lay it out so the
+            # oldest visible sample sits at the final head position
+            final_head = (head + n) % cap
+            for dst, src in ((self._t, t), (self._p, p),
+                             (self._u, u), (self._c, c)):
+                dst[final_head:] = src[n - cap:n - final_head]
+                dst[:final_head] = src[n - final_head:]
+            self._head = final_head
+            self._count = cap
+            return n
+        first = min(n, cap - head)
+        for dst, src in ((self._t, t), (self._p, p),
+                         (self._u, u), (self._c, c)):
+            dst[head:head + first] = src[:first]
+            if first < n:
+                dst[:n - first] = src[first:]
+        self._head = (head + n) % cap
+        self._count = min(self._count + n, cap)
+        return n
+
     def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
         """(times, power) of the buffered window, oldest first (copies)."""
         idx = self._order()
@@ -101,7 +160,7 @@ class SampleRing:
 # Sources.
 # ---------------------------------------------------------------------------
 class TraceReplaySampler:
-    """Streams a recorded ``SensorTrace`` sample by sample."""
+    """Streams a recorded ``SensorTrace`` — per sample, or as array chunks."""
 
     def __init__(self, trace: SensorTrace):
         self.trace = trace
@@ -112,6 +171,13 @@ class TraceReplaySampler:
         for i in range(len(t)):
             yield PowerSample(float(t[i]), float(p[i]), float(u[i]),
                               float(c[i]))
+
+    def chunks(self, n: int = DEFAULT_CHUNK) -> Iterator[SampleChunk]:
+        """Zero-copy array slices of the trace, ``n`` samples at a time."""
+        t, p, u, c = (self.trace.times_s, self.trace.power_w,
+                      self.trace.util, self.trace.temp_c)
+        for lo in range(0, len(t), n):
+            yield t[lo:lo + n], p[lo:lo + n], u[lo:lo + n], c[lo:lo + n]
 
 
 class FeedSampler:
@@ -141,6 +207,41 @@ class FeedSampler:
         else:
             for item in self._feed:
                 yield self._coerce(item)
+
+    def chunks(self, n: int = DEFAULT_CHUNK) -> Iterator[SampleChunk]:
+        """Batch the coerced feed into ndarray chunks of up to ``n``."""
+        return _batch_samples(iter(self), n)
+
+
+def _batch_samples(samples: Iterable[PowerSample],
+                   n: int) -> Iterator[SampleChunk]:
+    """Generic per-sample -> chunk adapter (the slow-source fallback)."""
+    buf_t, buf_p, buf_u, buf_c = [], [], [], []
+    for s in samples:
+        buf_t.append(s.t_s)
+        buf_p.append(s.power_w)
+        buf_u.append(s.util)
+        buf_c.append(s.temp_c)
+        if len(buf_t) >= n:
+            yield (np.asarray(buf_t), np.asarray(buf_p),
+                   np.asarray(buf_u), np.asarray(buf_c))
+            buf_t, buf_p, buf_u, buf_c = [], [], [], []
+    if buf_t:
+        yield (np.asarray(buf_t), np.asarray(buf_p),
+               np.asarray(buf_u), np.asarray(buf_c))
+
+
+def iter_chunks(sampler, n: int = DEFAULT_CHUNK) -> Iterator[SampleChunk]:
+    """Chunk view of *any* sampler.
+
+    Chunk-native samplers (anything with ``chunks(n)``) serve array slices
+    directly; per-sample iterables are batched through the fallback adapter,
+    so the downstream pipeline is always array-at-a-time.
+    """
+    chunks = getattr(sampler, "chunks", None)
+    if chunks is not None:
+        return chunks(n)
+    return _batch_samples(iter(sampler), n)
 
 
 class DeviceSampler:

@@ -36,7 +36,8 @@ from repro.hw.device import Program, RunRecord, SimDevice
 from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
                                    contiguous_markers)
 from repro.telemetry.attrib import DriftState, OnlineAttributor, mape_pct
-from repro.telemetry.sampler import DeviceSampler, SampleRing
+from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
+                                     SampleRing, iter_chunks)
 from repro.telemetry.stream import OnlineSteadyState, StreamingIntegrator
 
 _BYTE_COUNTERS = ("hbm_read_bytes", "hbm_write_bytes",
@@ -83,13 +84,18 @@ class StreamSession:
                  monitor=None, min_duration_s: float = 30.0,
                  ring_capacity: int = 4096,
                  recalibrate="rescale", store=None,
-                 detector=None, attributor: Optional[OnlineAttributor] = None):
+                 detector=None, attributor: Optional[OnlineAttributor] = None,
+                 chunk_size: Optional[int] = DEFAULT_CHUNK):
         self.predictor = predictor
         self.device = device
         self.counts = counts
         self.name = name
         self.monitor = monitor
         self.min_duration_s = float(min_duration_s)
+        # chunk_size=None/0 selects the per-sample reference path; any
+        # positive n ingests n-sample ndarray chunks through the whole
+        # pipeline (ring, integrator, plateau, aligner, batch attribution)
+        self.chunk_size = int(chunk_size) if chunk_size else None
         self.ring = SampleRing(ring_capacity)
         self.integrator = StreamingIntegrator()
         self.plateau = OnlineSteadyState()
@@ -103,8 +109,12 @@ class StreamSession:
         self.record: Optional[RunRecord] = None
         self.summary: Optional[StreamSummary] = None
         self._steps: List[_HostStep] = []
+        self._n = 0                  # marker windows (finish(steps=k) <= registered)
         self._group = 1.0            # device iterations per logical step
         self._group_counts = counts  # counts per marker window
+        self._aligner: Optional[StreamAligner] = None
+        self._source = None          # chunk/sample iterator while draining
+        self._pending: List[AlignedWindow] = []   # chunked: await batch fuse
         # session-local slices into a possibly shared attributor
         self._a0 = len(self.attributor.attributions)
         self._recal0 = len(self.attributor.recalibrations)
@@ -136,19 +146,33 @@ class StreamSession:
         """
         if self.summary is not None:
             raise RuntimeError("session already finished")
+        if self._aligner is not None:
+            raise RuntimeError("session already started; steps are fixed "
+                               "once sampling begins")
         idx = step if step is not None else len(self._steps)
         self._steps.append(_HostStep(idx, duration_s, work_units, counters))
 
-    def finish(self, steps: Optional[int] = None) -> StreamSummary:
-        """Sample the device run, align markers, attribute every window."""
-        if self.summary is not None:
-            return self.summary
+    @property
+    def started(self) -> bool:
+        return self._aligner is not None
+
+    def start(self, steps: Optional[int] = None) -> "StreamSession":
+        """Run the device and arm the pipeline without consuming samples.
+
+        After ``start``, ``poll()`` incrementally drains the sampler —
+        chunk-wise on the fast path — and ``finish()`` drains to the end.
+        ``TelemetryService.poll_all`` polls every started session in one
+        pass, which is how one monitor process watches a whole fleet.
+        """
+        if self.summary is not None or self._aligner is not None:
+            return self
         n = steps if steps is not None else len(self._steps)
         if n <= 0:
             raise ValueError("no steps registered; call session.step(...) "
                              "or finish(steps=N)")
         while len(self._steps) < n:
             self._steps.append(_HostStep(len(self._steps), None, 1.0, None))
+        self._n = n
 
         # Long enough to pass startup and reach a steady plateau; the extra
         # device iterations are folded evenly into the n logical windows.
@@ -162,20 +186,76 @@ class StreamSession:
             Program(self.name, self.counts, iters=iters))
         self.record = rec
 
-        aligner = StreamAligner(on_window=self._on_window)
+        self._aligner = StreamAligner(on_window=self._on_window)
         for m in self._markers(rec, n):
-            aligner.add_marker(m)
-        for s in sampler:
-            self.ring.append(s)
-            self.integrator.add(s.t_s, s.power_w)
-            self.plateau.update(s.t_s, s.power_w)
-            aligner.add_sample(s)
-        aligner.close()
+            self._aligner.add_marker(m)
+        self._source = (iter_chunks(sampler, self.chunk_size)
+                        if self.chunk_size else iter(sampler))
+        return self
 
+    def poll(self, max_chunks: int = 1) -> int:
+        """Ingest up to ``max_chunks`` chunks; returns samples consumed.
+
+        On the chunked path each chunk flows through the whole stack as
+        arrays: one wrap-aware ring write, one vectorized integration, one
+        windowed plateau pass, one searchsorted alignment, and one batched
+        attribution of every window the chunk finalized.  The per-sample
+        path (``chunk_size=None``) ingests the same number of samples one
+        ``PowerSample`` at a time — the reference implementation.  When the
+        sampler is exhausted the session closes and ``summary`` appears.
+        """
+        if self.summary is not None:
+            return 0
+        if self._aligner is None:
+            raise RuntimeError("session not started; call start() or "
+                               "finish()")
+        ingested = 0
+        if self.chunk_size:
+            for _ in range(max_chunks):
+                chunk = next(self._source, None)
+                if chunk is None:
+                    self._close()
+                    break
+                t, p, u, c = chunk
+                self.ring.extend(t, p, u, c)
+                self.integrator.extend(t, p)
+                self.plateau.update_chunk(t, p)
+                self._aligner.add_samples(t, p)
+                self._flush_pending()
+                ingested += int(np.asarray(t).size)
+        else:
+            for _ in range(max_chunks * DEFAULT_CHUNK):
+                s = next(self._source, None)
+                if s is None:
+                    self._close()
+                    break
+                self.ring.append(s)
+                self.integrator.add(s.t_s, s.power_w)
+                self.plateau.update(s.t_s, s.power_w)
+                self._aligner.add_sample(s)
+                ingested += 1
+        return ingested
+
+    def finish(self, steps: Optional[int] = None) -> StreamSummary:
+        """Sample the device run, align markers, attribute every window."""
+        if self.summary is not None:
+            return self.summary
+        self.start(steps)
+        while self.summary is None:
+            self.poll(max_chunks=64)
+        return self.summary
+
+    run = finish     # one-shot callers: ``model.stream(c).run(steps=N)``
+
+    def _close(self) -> None:
+        self._aligner.close()
+        self._flush_pending()
+        self._source = None
         host_dts = [h.host_duration_s for h in self._steps
                     if h.host_duration_s is not None]
         self.summary = StreamSummary(
-            name=self.name, steps=n, duration_s=rec.duration_s,
+            name=self.name, steps=self._n,
+            duration_s=self.record.duration_s,
             measured_total_j=self.integrator.energy_j,
             predicted_total_j=float(sum(
                 a.predicted_j for a in self.attributions)),
@@ -186,9 +266,6 @@ class StreamSession:
             host_duration_s=float(sum(host_dts)) if host_dts else None,
             n_samples=self.integrator.n_samples,
             dropped_samples=self.ring.dropped)
-        return self.summary
-
-    run = finish     # one-shot callers: ``model.stream(c).run(steps=N)``
 
     # -- internals -----------------------------------------------------------
     def _markers(self, rec: RunRecord, n: int) -> List[Marker]:
@@ -221,19 +298,49 @@ class StreamSession:
         if win.step < 0:                      # pre-marker span: not a step
             self.startup_j += win.measured_j
             return
+        if self.chunk_size:
+            self._pending.append(win)         # fused in batch per chunk
+            return
+        host, counters = self._host_and_counters(win)
+        self.attributor.attribute(win, self._group_counts, counters=counters)
+        self._observe(win, host, counters)
+
+    def _flush_pending(self) -> None:
+        """Batch-fuse every window the last chunk finalized.
+
+        Attribution (and therefore the summary) is bitwise-identical to the
+        per-sample path; only the optional ``monitor.observe`` calls differ
+        in interleaving — they run after the chunk's attributions, so a
+        monitor prediction issued in the same chunk as a drift repair sees
+        the repaired table slightly earlier than the scalar path would.
+        """
+        if not self._pending:
+            return
+        wins, self._pending = self._pending, []
+        hosts_counters = [self._host_and_counters(w) for w in wins]
+        self.attributor.attribute_batch(
+            wins, [self._group_counts] * len(wins),
+            [hc[1] for hc in hosts_counters])
+        for win, (host, counters) in zip(wins, hosts_counters):
+            self._observe(win, host, counters)
+
+    def _host_and_counters(self, win: AlignedWindow):
         host = self._steps[win.step] if win.step < len(self._steps) else None
         counters = host.counters if host and host.counters else \
             self._window_counters(win)
-        self.attributor.attribute(win, self._group_counts, counters=counters)
-        if self.monitor is not None:
-            # the window spans _group repetitions of the logical step, so
-            # its work is the host step's work scaled by the same factor —
-            # keeping joules_per_unit_work a true per-unit figure
-            work = (host.work_units if host else 1.0) * self._group
-            self.monitor.observe(
-                host.step if host else win.step, self._group_counts,
-                win.duration_s, counters=counters, work_units=work,
-                measured_j=win.measured_j)
+        return host, counters
+
+    def _observe(self, win: AlignedWindow, host, counters) -> None:
+        if self.monitor is None:
+            return
+        # the window spans _group repetitions of the logical step, so
+        # its work is the host step's work scaled by the same factor —
+        # keeping joules_per_unit_work a true per-unit figure
+        work = (host.work_units if host else 1.0) * self._group
+        self.monitor.observe(
+            host.step if host else win.step, self._group_counts,
+            win.duration_s, counters=counters, work_units=work,
+            measured_j=win.measured_j)
 
     def _window_counters(self, win: AlignedWindow) -> Optional[dict]:
         if self.record is None:
@@ -300,6 +407,29 @@ class TelemetryService:
 
     def sessions(self) -> Dict[str, StreamSession]:
         return dict(self._sessions)
+
+    def poll_all(self, max_chunks: int = 1) -> int:
+        """Drain every started session's sampler, one pass over the fleet.
+
+        Each session ingests up to ``max_chunks`` chunks through its full
+        pipeline (ring, integrator, plateau, alignment, batched
+        attribution).  Returns the total samples consumed; ``0`` means every
+        registered session is either finished or not yet started — the
+        monitor loop's termination condition:
+
+            while service.poll_all(max_chunks=4):
+                render(service.snapshot())
+        """
+        total = 0
+        for s in self._sessions.values():
+            if s.summary is None and s.started:
+                total += s.poll(max_chunks)
+        return total
+
+    def finish_all(self) -> Dict[str, "StreamSummary"]:
+        """Drain and summarize every started session; key -> summary."""
+        return {k: s.finish() for k, s in self._sessions.items()
+                if s.started or s.summary is not None}
 
     def snapshot(self) -> dict:
         per = {key: s.snapshot() for key, s in self._sessions.items()}

@@ -23,7 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.measure import rolling_std, trapezoid_energy
+from repro.core.measure import (rolling_std, trailing_window_moments,
+                                trapezoid_energy)
 
 __all__ = ["trapezoid_energy", "rolling_std", "StreamingIntegrator",
            "OnlineSteadyState", "PlateauState"]
@@ -54,7 +55,13 @@ class StreamingIntegrator:
         return seg
 
     def extend(self, times_s: np.ndarray, power_w: np.ndarray) -> float:
-        """Ingest a chunk of samples; returns the chunk's energy."""
+        """Ingest a chunk of samples; returns the chunk's energy.
+
+        Bitwise-identical to calling ``add`` per sample: segment areas are
+        computed elementwise with the same expression, and accumulated in
+        the same left-to-right order (``np.cumsum`` seeded with the running
+        total replicates the scalar ``energy_j += seg`` sequence exactly).
+        """
         t = np.asarray(times_s, dtype=float)
         p = np.asarray(power_w, dtype=float)
         if t.size == 0:
@@ -63,7 +70,10 @@ class StreamingIntegrator:
         if self._t_last is not None:
             t = np.concatenate(([self._t_last], t))
             p = np.concatenate(([self._p_last], p))
-        self.energy_j += trapezoid_energy(t, p)
+        if t.size >= 2:
+            segs = 0.5 * (p[1:] + p[:-1]) * (t[1:] - t[:-1])
+            self.energy_j = float(
+                np.cumsum(np.concatenate(([self.energy_j], segs)))[-1])
         self._t_last, self._p_last = float(t[-1]), float(p[-1])
         self.n_samples += int(np.asarray(times_s).size)
         return self.energy_j - before
@@ -111,7 +121,11 @@ class OnlineSteadyState:
         self._buf.append((float(t_s), float(power_w)))
         self._s1 += power_w
         self._s2 += power_w * power_w
-        while self._buf and t_s - self._buf[0][0] > self.window_s:
+        # eviction rule phrased exactly as the chunked path's searchsorted
+        # membership test (t_j < t_i - window_s), so the two paths always
+        # agree on which samples a window holds
+        horizon = t_s - self.window_s
+        while self._buf and self._buf[0][0] < horizon:
             _, old = self._buf.popleft()
             self._s1 -= old
             self._s2 -= old * old
@@ -127,3 +141,62 @@ class OnlineSteadyState:
             self.start_s = math.nan
         return PlateauState(steady=steady, start_s=self.start_s,
                             mean_w=mean, std_w=std)
+
+    def update_chunk(self, times_s, power_w, with_verdicts: bool = False):
+        """Chunked ``update``: one vectorized pass over the whole chunk.
+
+        Window stats come from cumulative sums over (retained window +
+        chunk) via ``core.measure.trailing_window_moments`` — one
+        searchsorted eviction instead of a deque walk per sample.  The
+        per-sample verdict sequence and the ``start_s`` transition logic
+        match the scalar path (window membership is decided by the identical
+        float comparison; means/stds agree to round-off because the chunk
+        path computes them from fresh sums rather than a running
+        add/subtract).  Returns the final ``PlateauState``; with
+        ``with_verdicts=True`` also the per-sample steady bool array.
+        """
+        t_new = np.asarray(times_s, dtype=float)
+        p_new = np.asarray(power_w, dtype=float)
+        if t_new.size == 0:
+            state = self._state_now()
+            return (state, np.zeros(0, dtype=bool)) if with_verdicts \
+                else state
+        if self._buf:
+            held = np.asarray(self._buf, dtype=float)
+            t = np.concatenate([held[:, 0], t_new])
+            p = np.concatenate([held[:, 1], p_new])
+            n0 = held.shape[0]
+        else:
+            t, p, n0 = t_new, p_new, 0
+        left, count, mean, std = trailing_window_moments(
+            t, p, self.window_s, start=n0)
+        steady = ((count >= self.min_samples)
+                  & (std < np.maximum(self.rel_tol * np.abs(mean),
+                                      self.abs_floor_w)))
+        prev = np.concatenate(([not math.isnan(self.start_s)], steady[:-1]))
+        if steady[-1]:
+            begins = np.nonzero(steady & ~prev)[0]
+            if begins.size:        # latest steady run began inside the chunk
+                self.start_s = float(t[left[begins[-1]]])
+            # else: the pre-chunk plateau never broke; start_s carries over
+        else:
+            self.start_s = math.nan
+        keep = int(left[-1])
+        kept = p[keep:]
+        self._buf = deque(zip(t[keep:].tolist(), kept.tolist()))
+        self._s1 = float(np.sum(kept))
+        self._s2 = float(np.sum(kept * kept))
+        state = PlateauState(steady=bool(steady[-1]), start_s=self.start_s,
+                             mean_w=float(mean[-1]), std_w=float(std[-1]))
+        return (state, steady) if with_verdicts else state
+
+    def _state_now(self) -> PlateauState:
+        """The verdict as of the latest ingested sample (no new samples)."""
+        n = len(self._buf)
+        if n == 0:
+            return PlateauState(steady=False, start_s=self.start_s,
+                                mean_w=math.nan, std_w=math.nan)
+        mean = self._s1 / n
+        std = math.sqrt(max(self._s2 / n - mean * mean, 0.0))
+        return PlateauState(steady=not math.isnan(self.start_s),
+                            start_s=self.start_s, mean_w=mean, std_w=std)

@@ -1,0 +1,467 @@
+"""Chunked telemetry ingestion: the fast path must equal the reference.
+
+Every stage of the streaming stack has a per-sample reference
+implementation and a chunked ndarray fast path.  These tests feed identical
+synthetic traces through both under randomized chunk boundaries (including
+chunk size 1 and chunks straddling marker boundaries) and assert the
+outputs are **bitwise identical** — ring contents and drop accounting,
+integrated energy, per-window measured joules, attribution vectors, drift
+verdicts, and the full ``StreamSummary``.  Plus the satellite coverage:
+``SampleRing`` accounting for chunks larger than capacity, the
+content-addressed profile cache, and ``TelemetryService.poll_all``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dev dependency (pip install .[dev])
+    HAVE_HYPOTHESIS = False
+
+from repro.api import EnergyModel
+from repro.core.opcount import OpCounts
+from repro.hw.device import SimDevice
+from repro.hw.systems import SYSTEMS
+from repro.telemetry import (FeedSampler, OnlineSteadyState, PowerSample,
+                             SampleRing, StreamAligner, StreamingIntegrator,
+                             TelemetryService, TraceReplaySampler,
+                             contiguous_markers, iter_chunks)
+
+SYSTEM = "sim-v5e-air"
+
+
+def _counts() -> OpCounts:
+    c = OpCounts()
+    c.add("dot.bf16", 2e8)
+    c.mxu_macs_total = c.mxu_macs_aligned = 2e8
+    c.add("exp.f32", 1e6)
+    c.add("add.f32", 5e6)
+    c.boundary_read_bytes = 4e6
+    c.boundary_write_bytes = 2e6
+    c.naive_bytes = 8e6
+    c.fused_bytes = 2e6
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+def _signal(n: int, seed: int = 0):
+    ts = np.arange(n) * 0.1
+    ps = (180.0 + 10.0 * np.sin(ts / 7.0)
+          + np.random.default_rng(seed).normal(0.0, 1.5, n))
+    return ts, ps
+
+
+def _random_chunks(n: int, rng, max_chunk: int = 700):
+    """Ragged chunk boundaries covering [0, n): includes size-1 chunks."""
+    bounds = [0]
+    while bounds[-1] < n:
+        bounds.append(min(n, bounds[-1] + int(rng.integers(1, max_chunk))))
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+# ---------------------------------------------------------------------------
+# SampleRing: bulk writes equal per-sample appends, accounting included.
+# ---------------------------------------------------------------------------
+def test_ring_extend_matches_append_randomized():
+    rng = np.random.default_rng(1)
+    ts, ps = _signal(20_000)
+    us, cs = np.linspace(0, 1, ts.size), np.full(ts.size, 55.0)
+    ref, fast = SampleRing(1000), SampleRing(1000)
+    for i in range(ts.size):
+        ref.append(PowerSample(ts[i], ps[i], us[i], cs[i]))
+    for lo, hi in _random_chunks(ts.size, rng, max_chunk=3000):
+        fast.extend(ts[lo:hi], ps[lo:hi], us[lo:hi], cs[lo:hi])
+    assert fast.total == ref.total
+    assert fast.dropped == ref.dropped
+    a, b = ref.to_trace(), fast.to_trace()
+    for f in ("times_s", "power_w", "util", "temp_c"):
+        assert np.array_equal(getattr(a, f), getattr(b, f))
+    assert fast.latest().power_w == ref.latest().power_w
+
+
+def test_ring_chunk_larger_than_capacity_counts_invisible_drops():
+    """Regression: a chunk bigger than the ring must count every sample it
+    overwrote-before-visibility in ``dropped``, and ``_order`` must stay
+    correct after the wrapping bulk write."""
+    ref, fast = SampleRing(8), SampleRing(8)
+    warm = np.arange(5, dtype=float)
+    big = np.arange(5, 30, dtype=float)          # 25 > capacity
+    for r, path in ((ref, "append"), (fast, "extend")):
+        if path == "append":
+            for v in np.concatenate([warm, big]):
+                r.append(PowerSample(v, v * 2.0))
+        else:
+            r.extend(warm, warm * 2.0)
+            r.extend(big, big * 2.0)
+    assert fast.total == ref.total == 30
+    assert fast.dropped == ref.dropped == 5 + 25 - 8
+    assert len(fast) == 8
+    t, p = fast.arrays()
+    np.testing.assert_array_equal(t, np.arange(22, 30, dtype=float))
+    np.testing.assert_array_equal(p, np.arange(22, 30, dtype=float) * 2.0)
+    # a second wrapping write keeps the order invariant
+    fast.extend(np.arange(30, 33, dtype=float), np.zeros(3))
+    assert np.all(np.diff(fast.arrays()[0]) > 0)
+    assert fast.dropped == ref.dropped + 3
+
+
+def test_ring_extend_empty_and_default_fills():
+    ring = SampleRing(16)
+    assert ring.extend(np.empty(0), np.empty(0)) == 0
+    ring.extend([1.0], [100.0])                  # util/temp default to nan
+    assert math.isnan(ring.latest().util)
+    assert ring.total == 1 and ring.dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# Integrator / plateau: chunked == scalar, bitwise.
+# ---------------------------------------------------------------------------
+def test_integrator_chunked_bitwise_identical():
+    rng = np.random.default_rng(2)
+    ts, ps = _signal(20_000)
+    ref, fast = StreamingIntegrator(), StreamingIntegrator()
+    for i in range(ts.size):
+        ref.add(ts[i], ps[i])
+    for lo, hi in _random_chunks(ts.size, rng):
+        fast.extend(ts[lo:hi], ps[lo:hi])
+    assert fast.energy_j == ref.energy_j          # bitwise, not approx
+    assert fast.n_samples == ref.n_samples
+    assert fast.t_last == ref.t_last and fast.p_last == ref.p_last
+
+
+def test_plateau_chunked_verdicts_and_start_match():
+    rng = np.random.default_rng(3)
+    # ramp -> plateau -> spike -> plateau: exercises start/reset transitions
+    ps = np.concatenate([np.linspace(60, 150, 50),
+                         150 + rng.normal(0, 1, 400),
+                         [400.0] * 5,
+                         150 + rng.normal(0, 1, 400)])
+    ts = np.arange(ps.size) * 0.1
+    ref, fast = OnlineSteadyState(), OnlineSteadyState()
+    verdicts_ref = [ref.update(ts[i], ps[i]).steady for i in range(ts.size)]
+    verdicts_fast = []
+    state = None
+    for lo, hi in _random_chunks(ts.size, rng, max_chunk=97):
+        state, v = fast.update_chunk(ts[lo:hi], ps[lo:hi],
+                                     with_verdicts=True)
+        verdicts_fast.extend(v.tolist())
+    assert verdicts_fast == verdicts_ref
+    assert state.steady == verdicts_ref[-1]
+    assert fast.start_s == ref.start_s or (
+        math.isnan(fast.start_s) and math.isnan(ref.start_s))
+    last = ref.update(ts[-1] + 0.1, 150.0)        # scalar after chunked state
+    mixed = fast.update(ts[-1] + 0.1, 150.0)
+    assert mixed.steady == last.steady
+
+
+# ---------------------------------------------------------------------------
+# Aligner: chunked alignment == per-sample alignment, bitwise.
+# ---------------------------------------------------------------------------
+def _assert_windows_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert (x.step, x.name) == (y.step, y.name)
+        assert x.measured_j == y.measured_j       # bitwise
+        assert x.covered_s == y.covered_s
+        assert x.n_samples == y.n_samples
+        assert x.clipped == y.clipped
+
+
+@pytest.mark.parametrize("chunk", [1, 37, 100, 5000])
+def test_aligner_chunked_bitwise_identical(chunk):
+    ts, ps = _signal(5_000, seed=4)
+    markers = contiguous_markers(ts[::100])       # chunks straddle windows
+    ref, fast = StreamAligner(), StreamAligner()
+    for m in markers:
+        ref.add_marker(m)
+        fast.add_marker(m)
+    for i in range(ts.size):
+        ref.add_sample(PowerSample(ts[i], ps[i]))
+    for lo in range(0, ts.size, chunk):
+        fast.add_samples(ts[lo:lo + chunk], ps[lo:lo + chunk])
+    _assert_windows_equal(ref.close(), fast.close())
+
+
+def test_aligner_late_markers_hold_chunks_back():
+    ts, ps = _signal(1_000, seed=5)
+    markers = contiguous_markers(ts[::250])
+    ref, fast = StreamAligner(), StreamAligner()
+    # samples first (held beyond the horizon), markers after
+    for i in range(ts.size):
+        ref.add_sample(PowerSample(ts[i], ps[i]))
+    fast.add_samples(ts, ps)
+    assert not fast.windows                       # everything held back
+    for m in markers:
+        ref.add_marker(m)
+        fast.add_marker(m)
+    _assert_windows_equal(ref.close(), fast.close())
+
+
+def test_aligner_mixed_scalar_and_chunk_ingestion():
+    ts, ps = _signal(600, seed=6)
+    markers = contiguous_markers(ts[::150])
+    ref, fast = StreamAligner(), StreamAligner()
+    for m in markers:
+        ref.add_marker(m)
+        fast.add_marker(m)
+    for i in range(ts.size):
+        ref.add_sample(PowerSample(ts[i], ps[i]))
+    fast.add_samples(ts[:200], ps[:200])
+    for i in range(200, 400):                     # scalar in the middle
+        fast.add_sample(PowerSample(ts[i], ps[i]))
+    fast.add_samples(ts[400:], ps[400:])
+    _assert_windows_equal(ref.close(), fast.close())
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline: chunked StreamSession == per-sample StreamSession.
+# ---------------------------------------------------------------------------
+def _session_pair(chunk_size, steps=24, drift=False, name="chunkeq"):
+    out = []
+    for cs in (None, chunk_size):
+        model = EnergyModel.from_store(SYSTEM)
+        counts = _counts()
+        if not drift:
+            s = model.stream(counts, name=name, recalibrate=None,
+                             chunk_size=cs)
+            out.append((s, s.finish(steps=steps)))
+            continue
+        shakedown = model.stream(counts, name=name, chunk_size=cs)
+        shakedown.finish(steps=steps)
+        cfg = SYSTEMS[SYSTEM]
+        model._device = SimDevice(cfg.chip, cfg.cooling, cfg.seed,
+                                  name=cfg.name, coeff_scale=1.5)
+        s = model.stream(counts, name=name, chunk_size=cs,
+                         attributor=shakedown.attributor)
+        out.append((s, s.finish(steps=40)))
+    return out
+
+
+def _assert_summaries_bitwise(a, b):
+    assert a.measured_total_j == b.measured_total_j
+    assert a.startup_j == b.startup_j
+    assert a.predicted_total_j == b.predicted_total_j
+    assert a.mape_pct == b.mape_pct
+    assert a.n_samples == b.n_samples
+    assert a.dropped_samples == b.dropped_samples
+    assert a.steps == b.steps and a.duration_s == b.duration_s
+    assert a.recalibrations == b.recalibrations
+    assert (a.drift.drifting, a.drift.ratio, a.drift.n) == \
+        (b.drift.drifting, b.drift.ratio, b.drift.n)
+
+
+@pytest.mark.parametrize("chunk_size", [1, 37, 4096])
+def test_session_chunked_summary_bitwise_identical(chunk_size):
+    (ref, ref_sum), (fast, fast_sum) = _session_pair(chunk_size)
+    _assert_summaries_bitwise(ref_sum, fast_sum)
+    _assert_windows_equal(ref.windows, fast.windows)
+    # per-window measured_j tiles the identical total on both paths
+    assert sum(w.measured_j for w in fast.windows) == pytest.approx(
+        fast_sum.measured_total_j, rel=1e-9)
+    for x, y in zip(ref.attributions, fast.attributions):
+        assert x.predicted_j == y.predicted_j
+        assert x.measured_j == y.measured_j
+        assert x.measured_dyn_j == y.measured_dyn_j
+        assert np.array_equal(x.measured_class_vec, y.measured_class_vec)
+    assert fast.plateau.start_s == ref.plateau.start_s or (
+        math.isnan(fast.plateau.start_s)
+        and math.isnan(ref.plateau.start_s))
+
+
+def test_session_chunked_drift_repair_bitwise_identical():
+    (_, ref_sum), (_, fast_sum) = _session_pair(256, drift=True)
+    assert ref_sum.recalibrations, "drift scenario never repaired"
+    _assert_summaries_bitwise(ref_sum, fast_sum)
+
+
+# ---------------------------------------------------------------------------
+# Samplers & service.
+# ---------------------------------------------------------------------------
+def test_trace_replay_chunks_are_zero_copy_slices():
+    model = EnergyModel.from_store(SYSTEM)
+    rec = model.measure(_counts(), target_seconds=5.0, name="zc")
+    sampler = TraceReplaySampler(rec.trace)
+    t_all = np.concatenate([c[0] for c in sampler.chunks(64)])
+    np.testing.assert_array_equal(t_all, rec.trace.times_s)
+    first = next(sampler.chunks(64))[0]
+    assert first.base is rec.trace.times_s        # a view, not a copy
+
+
+def test_iter_chunks_falls_back_for_per_sample_sources():
+    feed = FeedSampler([(0.0, 100.0), (1.0, 110.0, 0.5), (2.0, 120.0)])
+    chunks = list(iter_chunks(feed, 2))
+    assert [c[0].size for c in chunks] == [2, 1]
+    assert chunks[0][1][1] == 110.0 and chunks[0][2][1] == 0.5
+
+    class Bare:                                   # no chunks() method
+        def __iter__(self):
+            return iter([PowerSample(0.0, 90.0), PowerSample(1.0, 91.0)])
+
+    (t, p, u, c), = list(iter_chunks(Bare(), 8))
+    np.testing.assert_array_equal(p, [90.0, 91.0])
+    assert np.isnan(u).all()
+
+
+def test_service_poll_all_drains_the_fleet():
+    service = TelemetryService()
+    model = EnergyModel.from_store(SYSTEM)
+    s1 = model.stream(_counts(), name="a", recalibrate=None, service=service,
+                      chunk_size=64)
+    s2 = model.stream(_counts(), name="b", recalibrate=None, service=service,
+                      chunk_size=64)
+    assert service.poll_all() == 0                # nothing started yet
+    s1.start(steps=6)
+    s2.start(steps=6)
+    total = 0
+    passes = 0
+    while True:
+        got = service.poll_all(max_chunks=2)
+        if not got:
+            break
+        total += got
+        passes += 1
+    assert s1.summary is not None and s2.summary is not None
+    assert total == s1.summary.n_samples + s2.summary.n_samples
+    assert passes > 1                             # genuinely incremental
+    snap = service.snapshot()
+    assert snap["fleet"]["n_sessions"] == 2
+    assert snap["fleet"]["samples"] == total
+    assert service.finish_all().keys() == service.sessions().keys()
+
+
+def test_session_step_after_start_rejected():
+    model = EnergyModel.from_store(SYSTEM)
+    s = model.stream(_counts(), name="lock", recalibrate=None, chunk_size=32)
+    s.step(0)
+    s.start(steps=4)
+    with pytest.raises(RuntimeError):
+        s.step(1)
+    s.finish()
+    assert s.summary.steps == 4
+
+
+def test_finish_fewer_steps_than_registered_reports_marker_count():
+    model = EnergyModel.from_store(SYSTEM)
+    s = model.stream(_counts(), name="trunc", recalibrate=None)
+    for i in range(10):
+        s.step(i)
+    summary = s.finish(steps=5)                   # only 5 marker windows
+    assert summary.steps == 5
+    assert len(s.attributions) == 5
+
+
+def test_monitor_telemetry_chunk_requires_live():
+    model = EnergyModel.from_store(SYSTEM)
+    with pytest.raises(ValueError):
+        model.monitor(step_counts=_counts(), telemetry_chunk=64)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: content-addressed profile cache.
+# ---------------------------------------------------------------------------
+def test_profile_cache_hits_on_identical_programs():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    model = EnergyModel.from_store(SYSTEM)
+
+    def fn(x, w):
+        return jnp.sum(jax.nn.gelu(x @ w))
+
+    args = (jax.ShapeDtypeStruct((128, 64), jnp.bfloat16),
+            jax.ShapeDtypeStruct((64, 32), jnp.bfloat16))
+    p1 = model.profile(fn, *args)
+    p2 = model.profile(fn, *args)
+    stats = model.stats()["profile_cache"]
+    assert stats == {"hits": 1, "misses": 1, "entries": 1, "maxsize": 256}
+    assert p1.counts.as_dict() == p2.counts.as_dict()
+    # handed-out counts are copies: mutation cannot poison the cache
+    p2.counts.boundary_read_bytes += 1e9
+    p3 = model.profile(fn, *args)
+    assert p3.counts.as_dict() == p1.counts.as_dict()
+
+    hlo = "HloModule m\nENTRY e { ROOT r = f32[4,4] parameter(0) }\n"
+    h1 = model.profile_hlo(hlo)
+    h2 = model.profile_hlo(hlo)
+    assert h1.counts.as_dict() == h2.counts.as_dict()
+    stats = model.stats()["profile_cache"]
+    assert stats["hits"] == 3 and stats["misses"] == 2
+
+    # different program -> different digest -> miss
+    model.profile_hlo(hlo.replace("4,4", "8,8"))
+    assert model.stats()["profile_cache"]["misses"] == 3
+    assert model.stats()["system"] == SYSTEM
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_property_chunked_equals_scalar(data):
+        """Any trace, any chunking: chunked ingestion == the reference."""
+        n = data.draw(st.integers(min_value=2, max_value=200), label="n")
+        power = np.asarray(data.draw(
+            st.lists(st.floats(min_value=0.0, max_value=1000.0,
+                               allow_nan=False, allow_infinity=False),
+                     min_size=n, max_size=n), label="power"))
+        dts = np.asarray(data.draw(
+            st.lists(st.floats(min_value=1e-3, max_value=2.0),
+                     min_size=n, max_size=n), label="dts"))
+        ts = np.cumsum(dts)
+        every = data.draw(st.integers(min_value=1, max_value=max(n // 2, 1)),
+                          label="marker_every")
+        bounds = ts[::every]
+        markers = (contiguous_markers(bounds) if bounds.size >= 2 else [])
+
+        ref_i, fast_i = StreamingIntegrator(), StreamingIntegrator()
+        ref_p, fast_p = OnlineSteadyState(), OnlineSteadyState()
+        ref_a, fast_a = StreamAligner(), StreamAligner()
+        ref_r, fast_r = SampleRing(max(n // 3, 2)), SampleRing(max(n // 3, 2))
+        for m in markers:
+            ref_a.add_marker(m)
+            fast_a.add_marker(m)
+        verdicts_ref = []
+        for i in range(n):
+            ref_i.add(ts[i], power[i])
+            verdicts_ref.append(ref_p.update(ts[i], power[i]).steady)
+            ref_a.add_sample(PowerSample(ts[i], power[i]))
+            ref_r.append(PowerSample(ts[i], power[i]))
+        verdicts_fast = []
+        lo = 0
+        while lo < n:
+            hi = min(n, lo + data.draw(
+                st.integers(min_value=1, max_value=n), label="chunk"))
+            fast_i.extend(ts[lo:hi], power[lo:hi])
+            _, v = fast_p.update_chunk(ts[lo:hi], power[lo:hi],
+                                       with_verdicts=True)
+            verdicts_fast.extend(v.tolist())
+            fast_a.add_samples(ts[lo:hi], power[lo:hi])
+            fast_r.extend(ts[lo:hi], power[lo:hi])
+            lo = hi
+        assert fast_i.energy_j == ref_i.energy_j
+        assert verdicts_fast == verdicts_ref
+        _assert_windows_equal(ref_a.close(), fast_a.close())
+        assert fast_r.dropped == ref_r.dropped
+        assert np.array_equal(fast_r.arrays()[0], ref_r.arrays()[0])
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(optional dev dependency, pip install .[dev])")
+    def test_property_chunked_equals_scalar():
+        pass
+
+
+def test_profile_cache_lru_bounded():
+    from repro.api import ProfileCache
+    cache = ProfileCache(maxsize=2)
+    mk = OpCounts
+    cache.get_or_count(("k", 1), mk)
+    cache.get_or_count(("k", 2), mk)
+    cache.get_or_count(("k", 1), mk)              # refresh 1
+    cache.get_or_count(("k", 3), mk)              # evicts 2
+    assert len(cache) == 2
+    cache.get_or_count(("k", 2), mk)
+    assert cache.stats()["misses"] == 4 and cache.stats()["hits"] == 1
