@@ -15,9 +15,10 @@ import sys
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (case_backprop, case_qmc, linearity, mape_tables,
-                            roofline, telemetry_overhead, transfer_fig14)
+                            roofline, serve_energy, telemetry_overhead,
+                            transfer_fig14)
     for mod in (mape_tables, linearity, transfer_fig14, case_backprop,
-                case_qmc, roofline, telemetry_overhead):
+                case_qmc, roofline, telemetry_overhead, serve_energy):
         for bench in mod.ALL:
             try:
                 bench()

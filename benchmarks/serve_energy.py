@@ -1,0 +1,159 @@
+"""Serving-energy overhead — scheduling and attribution must stay off the
+critical path.
+
+A serving runtime makes admission/eviction decisions and splits joules
+across the batch at every step boundary; if that costs more than a few
+microseconds it competes with the decode step it is metering.  This
+benchmark times (1) the continuous-batching scheduler draining a large
+staggered workload (pure policy logic, injected pricing/drift) and (2)
+the ledger's bitwise-conserving per-request attribution at several batch
+sizes, checking conservation on every recorded step.
+
+Emits JSON (``--out``, default ``results/BENCH_serve_energy.json``) with
+us/step for both layers plus the steps-per-second headroom, and the
+repo's CSV line format on stdout.  ``--max-us-per-step`` turns it into a
+CI gate; conservation is always a gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.serve.ledger import ActiveShare, RequestLedger
+from repro.serve.scheduler import (ContinuousBatchingScheduler, EnergyPolicy,
+                                   Request)
+
+N_REQUESTS = 512
+LEDGER_STEPS = 20_000
+BATCH_SIZES = (2, 8, 32)
+
+
+def _workload(n: int):
+    rng = np.random.default_rng(0)
+    reqs, step = [], 0
+    for i in range(n):
+        reqs.append(Request(id=f"r{i}", tenant=f"t{i % 8}",
+                            prompt_len=int(rng.integers(4, 64)),
+                            max_new=int(rng.integers(4, 64)),
+                            arrival_step=step))
+        step += int(rng.integers(0, 3))
+    return reqs
+
+
+def _bench_scheduler(n_requests: int):
+    """Drain a full workload; returns (us/boundary-step, steps, phases)."""
+    reqs = _workload(n_requests)
+    sched = ContinuousBatchingScheduler(
+        reqs, EnergyPolicy(max_batch=16, budget_j_per_token=1.4),
+        j_per_token=lambda b: 1.0 + 0.02 * b, drift_flag=lambda: False)
+    t0 = time.perf_counter()
+    steps = phases = 0
+    while (ph := sched.next_phase()) is not None:
+        steps += ph.n_steps
+        phases += 1
+    dt = time.perf_counter() - t0
+    return dt / max(steps, 1) * 1e6, steps, phases
+
+
+def _bench_ledger(n_steps: int, batch: int):
+    """Attribute ``n_steps`` steps at ``batch``; conservation is asserted
+    bitwise on every step.  Returns (us/step, entries/s)."""
+    rng = np.random.default_rng(batch)
+    measured = rng.uniform(50.0, 500.0, n_steps)
+    predicted = measured * rng.uniform(0.9, 1.1, n_steps)
+    dyn = rng.uniform(0.3, 1.0, n_steps)
+    active = [ActiveShare(request_id=f"r{i}", tenant=f"t{i % 4}",
+                          tokens=float(1 + i % 3),
+                          kv_bytes=float((i + 1) << 12))
+              for i in range(batch)]
+    ledger = RequestLedger()
+    t0 = time.perf_counter()
+    for s in range(n_steps):
+        ledger.record_step(step=s, kind="decode", duration_s=0.1,
+                           measured_j=float(measured[s]),
+                           predicted_j=float(predicted[s]),
+                           dynamic_frac=float(dyn[s]), active=active,
+                           work_scale=2.0)
+    dt = time.perf_counter() - t0
+    for s in ledger.steps:
+        acc = 0.0
+        for e in s.entries:
+            acc += e.measured_j
+        if acc != s.measured_j:
+            raise AssertionError(
+                f"conservation violated at step {s.step}: "
+                f"{acc!r} != {s.measured_j!r}")
+    return dt / n_steps * 1e6, n_steps * batch / dt
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_serve_energy.json")
+    ap.add_argument("--requests", type=int, default=N_REQUESTS)
+    ap.add_argument("--ledger-steps", type=int, default=LEDGER_STEPS)
+    ap.add_argument("--max-us-per-step", type=float, default=0.0,
+                    help="fail if scheduler or ledger exceeds this per-step "
+                         "cost (0 = no gate; conservation always gates)")
+    args = ap.parse_args(argv)
+
+    # warm allocator / numpy paths
+    _bench_scheduler(16)
+    _bench_ledger(256, 4)
+
+    sched_us, steps, phases = _bench_scheduler(args.requests)
+
+    ledger_rows = {}
+    for b in BATCH_SIZES:
+        us, eps = _bench_ledger(args.ledger_steps, b)
+        ledger_rows[str(b)] = {"us_per_step": us, "entries_per_s": eps}
+
+    worst_ledger_us = max(r["us_per_step"] for r in ledger_rows.values())
+    result = {
+        "benchmark": "serve_energy",
+        "n_requests": args.requests,
+        "scheduler": {"us_per_step": sched_us, "steps": steps,
+                      "phases": phases,
+                      "steps_per_s": 1e6 / max(sched_us, 1e-12)},
+        "ledger": ledger_rows,
+        "ledger_steps": args.ledger_steps,
+        "worst_us_per_step": max(sched_us, worst_ledger_us),
+        "conservation_bitwise": True,      # asserted per step above
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    record("serve_scheduler_step", sched_us,
+           f"steps={steps} phases={phases}")
+    for b, row in ledger_rows.items():
+        record(f"serve_ledger_batch{b}", row["us_per_step"],
+               f"entries_per_s={row['entries_per_s']:.0f}")
+    print(f"scheduler {sched_us:.2f} us/step over {steps} steps; ledger "
+          f"worst {worst_ledger_us:.2f} us/step (batch {BATCH_SIZES[-1]}); "
+          f"conservation bitwise on every step")
+    print(f"wrote {out}")
+
+    if args.max_us_per_step > 0 and \
+            result["worst_us_per_step"] > args.max_us_per_step:
+        print(f"FAIL: {result['worst_us_per_step']:.1f} us/step > gate "
+              f"{args.max_us_per_step:.1f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def bench_serve_energy():
+    """Harness entry (benchmarks.run): the full canonical configuration,
+    so the JSON under results/ is never overwritten with a reduced run."""
+    main([])
+
+
+ALL = [bench_serve_energy]
+
+if __name__ == "__main__":
+    sys.exit(main())

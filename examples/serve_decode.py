@@ -1,7 +1,8 @@
-"""Batched serving with per-token energy attribution.
+"""Batched serving with per-request energy attribution.
 
-Serves the attention-free mamba2 family by default (O(1) decode state), and
-prints joules/token from the Wattchmen table next to the throughput.
+Serves the attention-free mamba2 family by default (O(1) decode state) and
+prints the per-request energy ledger: measured and predicted joules per
+request from the Wattchmen table + simulated telemetry.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
 """
@@ -13,15 +14,17 @@ from repro.launch.serve import run
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
     args = ap.parse_args()
-    out, monitor = run(args.arch, smoke=True, batch=args.batch,
-                       prompt_len=args.prompt_len, max_new=args.max_new)
-    if monitor is not None and monitor.records:
-        per_tok = monitor.records[-1].joules_per_unit_work
-        print(f"predicted {per_tok:.3e} J/token at this batch size")
+    report, _ = run(args.arch, smoke=True, tenants=args.tenants,
+                    requests=args.requests, prompt_len=args.prompt_len,
+                    max_new=args.max_new)
+    busiest = max(report.requests, key=lambda r: r.measured_j)
+    print(f"most expensive request: {busiest.request.id} "
+          f"({busiest.measured_j:.3e} J, {busiest.j_per_token:.3e} J/token)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,82 @@
+"""Tenant billing walkthrough: energy-aware batching with a J/token cap.
+
+Two identical multi-tenant workloads run against the simulated v5e
+device; the second adds a J/token budget sitting just above the predicted
+cost of a 2-wide decode batch.  The workload's op counts include
+cross-request cache interference (superlinear per-batch work), so packing
+the batch wider *raises* predicted J/token — exactly the regime where the
+budget bites: the capped run refuses to pack past 2, defers the rest, and
+its per-tenant bills land at a lower J/token.
+
+    PYTHONPATH=src python examples/tenant_billing.py
+"""
+from repro import EnergyModel
+from repro.serve import EnergyPolicy, Request, synthetic_counts_fn
+
+
+def workload():
+    return [
+        Request("alpha-0", "alpha", prompt_len=16, max_new=12,
+                arrival_step=0),
+        Request("alpha-1", "alpha", prompt_len=8, max_new=10,
+                arrival_step=0),
+        Request("beta-0", "beta", prompt_len=12, max_new=12, arrival_step=0),
+        Request("beta-1", "beta", prompt_len=8, max_new=8, arrival_step=1),
+        Request("gamma-0", "gamma", prompt_len=24, max_new=16,
+                arrival_step=3),
+    ]
+
+
+def main():
+    counts = synthetic_counts_fn(interference=0.5)
+
+    # price the decode batch at each width: interference makes J/token rise
+    probe = EnergyModel.from_store("sim-v5e-air").serve(
+        counts, min_phase_seconds=2.0)
+    print("predicted decode J/token by batch width:")
+    for b in (1, 2, 3, 4):
+        print(f"  batch {b}: {probe.predict_j_per_token(b):.3e} J/token")
+    budget = probe.predict_j_per_token(2) * 1.05
+    print(f"budget: {budget:.3e} J/token (5% above the 2-wide cost)\n")
+
+    reports = {}
+    for label, policy in [
+        ("uncapped", EnergyPolicy(max_batch=4)),
+        ("capped", EnergyPolicy(max_batch=4, budget_j_per_token=budget)),
+    ]:
+        # fresh model per run: drift repair rescales the bound table in
+        # place, and one run's repair must not re-price the other's budget
+        model = EnergyModel.from_store("sim-v5e-air")
+        server = model.serve(counts, policy=policy, min_phase_seconds=2.0,
+                             name=f"billing/{label}")
+        report = server.run(workload())
+        reports[label] = report
+        widest = max(p.batch for p in report.phases if p.kind == "decode")
+        defers = [e for e in report.events if e.event == "defer"]
+        print(f"== {label}: widest decode batch {widest}, "
+              f"{len(defers)} deferrals ==")
+        for e in defers[:3]:
+            print(f"  step {e.step}: defer {e.request_id} ({e.detail})")
+        print(report.table())
+        for t, bill in report.billing.bills.items():
+            print(f"[bill] {t}: {bill.measured_j:.4e} J over "
+                  f"{bill.requests} requests, "
+                  f"{bill.j_per_token:.3e} J/token "
+                  f"(residual {bill.residual_j:+.3e} J)")
+        print()
+
+    for label, report in reports.items():
+        jpt = report.measured_total_j / sum(
+            b.scaled_tokens for b in report.billing.bills.values())
+        print(f"{label}: {report.measured_total_j:.4e} J total, "
+              f"{jpt:.3e} J/token fleet-wide")
+    capped_widest = max(p.batch for p in reports["capped"].phases
+                        if p.kind == "decode")
+    assert capped_widest <= 2, "budget failed to cap the decode batch"
+    print("\nthe J/token budget held the decode batch at "
+          f"{capped_widest} wide; every joule above it was deferred, "
+          "not spent")
+
+
+if __name__ == "__main__":
+    main()

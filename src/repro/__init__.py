@@ -42,6 +42,14 @@ _LAZY = {
     "StreamSummary": "repro.telemetry",
     "SYSTEMS": "repro.hw.systems",
     "get_device": "repro.hw.systems",
+    "EnergyServer": "repro.serve",
+    "EnergyPolicy": "repro.serve",
+    "Request": "repro.serve",
+    "ServeReport": "repro.serve",
+    "RequestLedger": "repro.serve",
+    "LedgerPolicy": "repro.serve",
+    "BillingReport": "repro.serve",
+    "bill_tenants": "repro.serve",
 }
 
 __all__ = sorted(_LAZY) + ["__version__"]

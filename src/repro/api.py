@@ -540,6 +540,31 @@ class EnergyModel:
             service.register(session)
         return session
 
+    def serve(self, counts_fn=None, *, requests=None, **kwargs):
+        """An energy-metered continuous-batching server on this model.
+
+        Returns a ``serve.EnergyServer``: admission packs decode batches to
+        a J/token budget (priced with this model's predictor), the drift
+        detector can shed load, and every aligned step's measured and
+        predicted joules land on individual requests in a conservation-
+        exact ledger with per-tenant bills.
+
+            server = model.serve(policy=EnergyPolicy(budget_j_per_token=...))
+            report = server.run([Request("r0", "tenant-a", 128, 32), ...])
+            print(report.table())
+
+        ``counts_fn(kind, batch, tokens)`` supplies per-step op counts;
+        when omitted, ``serve.synthetic_counts_fn()`` stands in (demos,
+        tests).  Pass ``requests=[...]`` to run immediately and get the
+        ``ServeReport`` instead of the server.
+        """
+        from repro.serve.scheduler import EnergyServer, synthetic_counts_fn
+        server = EnergyServer(self, counts_fn or synthetic_counts_fn(),
+                              **kwargs)
+        if requests is not None:
+            return server.run(requests)
+        return server
+
     def evaluate(self, **kwargs):
         """Full workload-suite evaluation (paper Figs. 6-9 pipeline)."""
         from repro.core.evaluate import evaluate_system

@@ -1,14 +1,22 @@
-"""Serving driver: batched prefill + decode with per-request energy
-attribution (joules/token from the Wattchmen table).
+"""Serving driver: energy-aware continuous batching with a per-request
+energy ledger (measured and predicted joules per request/tenant, from the
+Wattchmen table + simulated telemetry).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --batch 4 --prompt-len 16 --max-new 16
+        --tenants 2 --requests 6 --budget-j-per-token 2e-4
+
+A multi-request workload (staggered arrivals, mixed prompt/output lengths
+across tenants) is run through ``serve.EnergyServer``: admission packs the
+decode batch to the J/token budget, drift can shed load, and every aligned
+step's joules land on individual requests with bitwise conservation.  The
+per-step op counts the scheduler prices and the device executes are traced
+from the *real* model prefill/decode steps (``core.opcount.count_fn``), so
+the energy accounting reflects the actual architecture at each batch size.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 from typing import Optional
 
 import jax
@@ -19,81 +27,116 @@ from repro import configs as cfgs
 from repro.api import EnergyModel
 from repro.core.opcount import count_fn
 from repro.models import model as model_mod
-from repro.serve.step import make_serve_step
+from repro.serve.scheduler import EnergyPolicy, Request
+from repro.serve.step import make_prefill_step, make_serve_step
 
 
-def run(arch: str, *, smoke: bool = True, batch: int = 4,
-        prompt_len: int = 16, max_new: int = 16,
-        energy_system: Optional[str] = "sim-v5e-air", seed: int = 0,
-        telemetry_chunk: Optional[int] = 4096, verbose: bool = True):
-    cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
-    max_seq = prompt_len + max_new + 1
-    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
-    cache = model_mod.init_cache(cfg, batch, max_seq)
-    if cfg.family == "encdec":
-        from repro.models import encdec
-        enc = jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model),
-                        cfg.activation_dtype)
-        ck, cv = jax.jit(
-            lambda p, e: encdec.prefill_cross_cache(p, e, cfg))(params, enc)
-        cache = dict(cache, cross_k=ck, cross_v=cv)
+def model_counts_fn(cfg, params, *, max_seq: int, attn_fn=None):
+    """counts_fn(kind, batch, tokens) traced from the real model steps.
 
-    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
-    monitor = None
-    if energy_system:
-        counts = count_fn(make_serve_step(cfg), params, cache,
-                          jnp.zeros((batch, 1), jnp.int32))
-        # live=True wires a telemetry StreamSession (monitor.live): each
-        # decode step is an MTSM sync point; finish() aligns measured
-        # joules per step against the sampled power trace, ingested
-        # chunk-wise (telemetry_chunk=None falls back to per-sample).
-        monitor = EnergyModel.from_store(energy_system).monitor(
-            live=True, step_counts=counts, telemetry_chunk=telemetry_chunk)
+    Decode counts come from the cached ``decode_step`` at the phase's
+    batch size; prefill counts from the full-sequence forward at the
+    phase's padded prompt length.  ``EnergyServer`` memoizes per
+    (kind, batch, tokens), so each shape is traced once.
+    """
+    def counts(kind: str, batch: int, tokens: int):
+        if kind == "prefill":
+            fn = make_prefill_step(cfg, attn_fn)
+            sample = {"tokens": jnp.zeros((batch, tokens), jnp.int32)}
+            return count_fn(fn, params, sample)
+        cache = model_mod.init_cache(cfg, batch, max_seq)
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            enc = jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model),
+                            cfg.activation_dtype)
+            ck, cv = encdec.prefill_cross_cache(params, enc, cfg)
+            cache = dict(cache, cross_k=ck, cross_v=cv)
+        return count_fn(make_serve_step(cfg, attn_fn), params, cache,
+                        jnp.zeros((batch, 1), jnp.int32))
+    return counts
 
+
+def make_workload(*, tenants: int, requests: int, prompt_len: int,
+                  max_new: int, seed: int = 0):
+    """Staggered multi-tenant request mix for the serving demo.
+
+    Prompt and output lengths are drawn from {½×, 1×, 2×} the nominal
+    values and arrivals from a geometric inter-arrival process, so the
+    batch genuinely churns: joins, evictions, and occupancy changes.
+    """
     rng = np.random.default_rng(seed)
-    tok = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
-    toks = [tok]
-    t0 = time.time()
-    for i in range(prompt_len + max_new - 1):
-        tok, cache = step(params, cache, tok)
-        toks.append(tok)
-        if monitor is not None:
-            monitor.live.step(i, duration_s=1e-3, work_units=batch)
-    dt = time.time() - t0
-    out = jnp.concatenate(toks, axis=1)
-    summary = (monitor.live.finish()
-               if monitor is not None and monitor.live.steps_registered
-               else None)
+    reqs = []
+    step = 0
+    for i in range(requests):
+        reqs.append(Request(
+            id=f"r{i}", tenant=f"tenant-{i % max(tenants, 1)}",
+            prompt_len=int(prompt_len * rng.choice([0.5, 1.0, 2.0])) or 1,
+            max_new=int(max_new * rng.choice([0.5, 1.0, 2.0])) or 1,
+            arrival_step=step))
+        step += int(rng.geometric(0.4)) - 1
+    return reqs
+
+
+def run(arch: str, *, smoke: bool = True, tenants: int = 2,
+        requests: int = 6, prompt_len: int = 16, max_new: int = 16,
+        max_batch: int = 4, budget_j_per_token: Optional[float] = None,
+        energy_system: str = "sim-v5e-air", seed: int = 0,
+        telemetry_chunk: Optional[int] = 4096,
+        min_phase_seconds: float = 4.0, verbose: bool = True):
+    cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    max_seq = 2 * prompt_len + 2 * max_new + 1   # covers the 2× draws
+
+    model = EnergyModel.from_store(energy_system)
+    server = model.serve(
+        model_counts_fn(cfg, params, max_seq=max_seq),
+        policy=EnergyPolicy(max_batch=max_batch,
+                            budget_j_per_token=budget_j_per_token),
+        min_phase_seconds=min_phase_seconds,
+        telemetry_chunk=telemetry_chunk, name=f"serve/{arch}")
+    workload = make_workload(tenants=tenants, requests=requests,
+                             prompt_len=prompt_len, max_new=max_new,
+                             seed=seed)
+    report = server.run(workload)
+
     if verbose:
-        total = (prompt_len + max_new) * batch
-        print(f"[serve] generated {out.shape} in {dt:.2f}s "
-              f"({total / max(dt, 1e-9):.0f} tok/s host-side)")
-        if summary is not None:
-            rec = monitor.records[-1]
-            pred = rec.prediction
-            print(f"[serve] predicted energy/step: {pred.total_j:.3e} J "
-                  f"(measured {rec.measured_j:.3e} J), dominant bucket: "
-                  f"{max(pred.by_bucket, key=pred.by_bucket.get)}")
-            print(f"[serve] live MAPE {summary.mape_pct:.1f}% over "
-                  f"{summary.steps} steps"
-                  + (", DRIFT flagged" if summary.drift.drifting else ""))
-    return out, monitor
+        print(f"[serve] {arch}: {len(workload)} requests / {tenants} "
+              f"tenants, max_batch={max_batch}"
+              + (f", budget {budget_j_per_token:.3e} J/token"
+                 if budget_j_per_token else ""))
+        print(report.table())
+        for t, bill in report.billing.bills.items():
+            print(f"[bill] {t}: {bill.measured_j:.4e} J over "
+                  f"{bill.requests} requests, {bill.j_per_token:.3e} J/token"
+                  f" (residual {bill.residual_j:+.3e} J)")
+        deferred = [e for e in report.events if e.event == "defer"]
+        shed = [e for e in report.events if e.event == "shed"]
+        print(f"[serve] {len(report.ledger)} aligned steps in "
+              f"{len(report.phases)} phases; live MAPE "
+              f"{report.mape_pct:.1f}%; {len(deferred)} deferrals, "
+              f"{len(shed)} sheds, overhead {report.overhead_j:.3e} J")
+    return report, server
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--budget-j-per-token", type=float, default=None)
     ap.add_argument("--telemetry-chunk", type=int, default=4096,
                     help="streaming ingestion chunk size (0 = per-sample)")
     args = ap.parse_args(argv)
-    out, _ = run(args.arch, smoke=args.smoke, batch=args.batch,
-                 prompt_len=args.prompt_len, max_new=args.max_new,
-                 telemetry_chunk=args.telemetry_chunk or None)
-    assert out.shape[1] == args.prompt_len + args.max_new
+    report, _ = run(args.arch, smoke=args.smoke, tenants=args.tenants,
+                    requests=args.requests, prompt_len=args.prompt_len,
+                    max_new=args.max_new, max_batch=args.max_batch,
+                    budget_j_per_token=args.budget_j_per_token,
+                    telemetry_chunk=args.telemetry_chunk or None)
+    assert len(report.requests) == args.requests
     return 0
 
 

@@ -31,8 +31,9 @@ def forward(params, batch, cfg: ModelConfig, attn_fn=None):
     return transformer.forward(params, batch, cfg, attn_fn=attn_fn)
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    return transformer.decode_step(params, cache, tokens, cfg)
+def decode_step(params, cache, tokens, cfg: ModelConfig, attn_fn=None):
+    return transformer.decode_step(params, cache, tokens, cfg,
+                                   attn_fn=attn_fn)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int):

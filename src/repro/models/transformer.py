@@ -254,8 +254,16 @@ def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
 # Decode (one new token against a cache).
 # ---------------------------------------------------------------------------
 def decode_step(params, cache, tokens, cfg: ModelConfig,
-                positions_override=None):
-    """tokens [B, 1] -> (logits [B,1,V], new cache)."""
+                positions_override=None, attn_fn=None):
+    """tokens [B, 1] -> (logits [B,1,V], new cache).
+
+    ``attn_fn`` reaches the attention layer with the same contract as the
+    forward path: a fused kernel that takes over when attention runs
+    without a KV cache.  The cached decode path keeps the reference
+    attention (today's flash hook is full-sequence only), so threading the
+    hook here is signature parity with ``forward`` — callers configure one
+    kernel once for both paths.
+    """
     bsz = tokens.shape[0]
     pos = cache["pos"]
     x = embed(tokens, params["embed"], cfg)
@@ -289,7 +297,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig,
                     vc = jax.lax.dynamic_index_in_dim(sv, slot, 0, False)
                     a, nc = attention(h2, shared["attn"], cfg, positions,
                                       kv_cache={"k": kc, "v": vc},
-                                      cache_pos=pos, window=sc["window"])
+                                      cache_pos=pos, window=sc["window"],
+                                      attn_fn=attn_fn)
                     sk = jax.lax.dynamic_update_index_in_dim(sk, nc["k"], slot, 0)
                     sv = jax.lax.dynamic_update_index_in_dim(sv, nc["v"], slot, 0)
                     x = x + a
@@ -328,7 +337,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig,
             else:
                 a, nc = attention(h, lp["attn"], cfg, positions,
                                   kv_cache={"k": sc["k"], "v": sc["v"]},
-                                  cache_pos=pos, window=sc["window"])
+                                  cache_pos=pos, window=sc["window"],
+                                  attn_fn=attn_fn)
                 out_caches = (nc["k"], nc["v"])
             if cfg.post_norms:
                 a = rms_norm(a, lp["ln1_post"], cfg.norm_eps)

@@ -1,0 +1,36 @@
+"""Energy-metered serving: ledger, billing, energy-aware batching.
+
+The subsystem that turns the library from a profiler into a serving
+platform: ``ledger`` attributes each aligned step's joules to in-flight
+requests with bitwise conservation, ``billing`` rolls requests into
+per-tenant bills, and ``scheduler`` runs continuous batching with energy
+as a first-class admission signal (J/token budget, drift shedding).
+``step`` holds the jitted model prefill/decode steps and is imported
+lazily so the scheduling/accounting layer stays importable without jax.
+"""
+from repro.serve.billing import BillingReport, TenantBill, bill_tenants
+from repro.serve.ledger import (ActiveShare, LedgerEntry, LedgerPolicy,
+                                LedgerStep, RequestLedger, RequestTotals,
+                                fold_residual, split_conserving)
+from repro.serve.scheduler import (ContinuousBatchingScheduler, EnergyPolicy,
+                                   EnergyServer, Phase, PhaseSummary, Request,
+                                   RequestRow, ServeEvent, ServeReport,
+                                   synthetic_counts_fn)
+
+_STEP_NAMES = ("make_prefill_step", "make_serve_step", "greedy_generate")
+
+__all__ = [
+    "ActiveShare", "BillingReport", "ContinuousBatchingScheduler",
+    "EnergyPolicy", "EnergyServer", "LedgerEntry", "LedgerPolicy",
+    "LedgerStep", "Phase", "PhaseSummary", "Request", "RequestLedger",
+    "RequestRow", "RequestTotals", "ServeEvent", "ServeReport", "TenantBill",
+    "bill_tenants", "fold_residual", "split_conserving",
+    "synthetic_counts_fn", *_STEP_NAMES,
+]
+
+
+def __getattr__(name):
+    if name in _STEP_NAMES:
+        from repro.serve import step
+        return getattr(step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

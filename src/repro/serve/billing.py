@@ -1,0 +1,106 @@
+"""Tenant aggregation: per-request ledger entries rolled into bills.
+
+Tenant bills regroup the ledger's per-request entries, and regrouping a
+float sum re-rounds it — so the bill column is *re-conserved* against the
+run total with the same residual-folding discipline the ledger uses per
+step (``ledger.fold_residual``): the ulp-scale regrouping residual lands
+on the final bill in tenant-name order, and the left-to-right sum of
+bills (same order) reproduces ``RequestLedger.measured_total_j``
+bit-for-bit.  A bill never leaks or invents a joule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.serve.ledger import RequestLedger, fold_residual
+
+
+@dataclasses.dataclass
+class TenantBill:
+    """One tenant's energy bill for a serving run."""
+
+    tenant: str
+    requests: int
+    steps: int                   # ledger entries billed to this tenant
+    tokens: float                # logical tokens (prompt + generated)
+    scaled_tokens: float         # tokens × per-step work scale
+    measured_j: float
+    predicted_j: float
+
+    @property
+    def j_per_token(self) -> float:
+        return self.measured_j / max(self.scaled_tokens, 1e-12)
+
+    @property
+    def residual_j(self) -> float:
+        """Predicted-vs-measured gap — the model's exposure on this bill."""
+        return self.measured_j - self.predicted_j
+
+    def snapshot(self) -> dict:
+        return {
+            "requests": self.requests,
+            "steps": self.steps,
+            "tokens": self.tokens,
+            "measured_j": self.measured_j,
+            "predicted_j": self.predicted_j,
+            "j_per_token": self.j_per_token,
+            "residual_j": self.residual_j,
+        }
+
+
+@dataclasses.dataclass
+class BillingReport:
+    """All tenants' bills plus the conserved run totals."""
+
+    bills: Dict[str, TenantBill]          # tenant -> bill, name-sorted
+    measured_total_j: float               # == ledger.measured_total_j
+    predicted_total_j: float
+
+    def snapshot(self) -> dict:
+        """JSON-safe form — the dashboard's billing pane."""
+        return {
+            "tenants": {t: b.snapshot() for t, b in self.bills.items()},
+            "measured_total_j": self.measured_total_j,
+            "predicted_total_j": self.predicted_total_j,
+            "residual_j": self.measured_total_j - self.predicted_total_j,
+        }
+
+
+def bill_tenants(ledger: RequestLedger) -> BillingReport:
+    """Aggregate a ledger into per-tenant bills (conserved, see module doc)."""
+    order: List[str] = []
+    agg: Dict[str, TenantBill] = {}
+    req_seen: Dict[str, set] = {}
+    for step in ledger.steps:
+        for e in step.entries:
+            b = agg.get(e.tenant)
+            if b is None:
+                b = agg[e.tenant] = TenantBill(
+                    tenant=e.tenant, requests=0, steps=0, tokens=0.0,
+                    scaled_tokens=0.0, measured_j=0.0, predicted_j=0.0)
+                order.append(e.tenant)
+                req_seen[e.tenant] = set()
+            b.steps += 1
+            b.tokens += e.tokens
+            b.scaled_tokens += e.tokens * step.work_scale
+            b.measured_j += e.measured_j
+            b.predicted_j += e.predicted_j
+            req_seen[e.tenant].add(e.request_id)
+    for t, b in agg.items():
+        b.requests = len(req_seen[t])
+
+    measured_total = ledger.measured_total_j
+    predicted_total = ledger.predicted_total_j
+    names = sorted(order)
+    if names:
+        measured = fold_residual([agg[t].measured_j for t in names],
+                                 measured_total)
+        predicted = fold_residual([agg[t].predicted_j for t in names],
+                                  predicted_total)
+        for i, t in enumerate(names):
+            agg[t].measured_j = measured[i]
+            agg[t].predicted_j = predicted[i]
+    return BillingReport(bills={t: agg[t] for t in names},
+                         measured_total_j=measured_total,
+                         predicted_total_j=predicted_total)

@@ -1,0 +1,297 @@
+"""Per-request energy ledger — step joules attributed to in-flight requests.
+
+León-Vega et al. split a shared device's measured energy across the
+processes occupying it; a serving batch is the same problem one level
+down: every aligned prefill/decode step (``telemetry/align``) carries one
+*measured* and one *predicted* joule figure for a batch of co-resident
+requests, and billing needs those joules on individual requests.
+
+The split is a blend of the three occupancy signals a serving runtime
+actually has:
+
+* **active-token share** — the compute a request put through the step
+  (its prompt tokens in a prefill step, one token per decode step);
+* **batch occupancy** — an even share of the step, the "seat rent";
+* **KV-cache residency** — bytes of cache the request held during the
+  step, the memory it denied everyone else.
+
+The dynamic fraction of the step's energy (taken from the step's own
+prediction) follows active tokens; the rest — the const/static floor the
+batch pays for existing — is split between occupancy and residency
+(``LedgerPolicy.residency_frac``).
+
+**Conservation is bitwise**, the same tiling discipline as the aligner:
+for every step, the left-to-right sum of per-request energies (in entry
+order) equals the step's aligned total *exactly* — no joule is created or
+lost to float round-off.  ``split_conserving`` owes that guarantee to a
+residual-folding fixpoint: shares are computed by plain multiplication and
+the ulp-scale summation residual is folded into the final entry until the
+sum reproduces the total bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+_MAX_FOLD_ITERS = 64
+
+
+def fold_residual(parts: Sequence[float], total: float) -> List[float]:
+    """Nudge ``parts`` (ulp-scale) until ``sum(parts) == total`` *bitwise*.
+
+    The left-to-right Python sum is the reference order.  A single
+    residual carrier cannot do this in general: the running sum only moves
+    in whole ulps of the carrier, and when those land on rounding *ties*,
+    round-half-to-even skips an odd-mantissa total no matter how the
+    carrier moves.  Instead the parts are rebuilt right-to-left: for each
+    suffix target ``t``, the entry is set to ``x ≈ t - head`` and nudged
+    (by single ulps, breaking tie alignment) until the float identity
+    ``fl(fl(t - x) + x) == t`` holds; ``fl(t - x)`` becomes the target the
+    remaining prefix must reach, and the identity telescopes — by
+    induction the full left-to-right sum reproduces ``total`` exactly.
+    (In the common case ``x`` is within a factor two of ``t`` and Sterbenz
+    makes the subtraction exact, so no nudging is needed at all.)  Every
+    entry stays within ulps of its proportional value.
+    """
+    parts = list(parts)
+    n = len(parts)
+    if n == 0:
+        if total != 0.0:
+            raise ValueError(f"cannot fold {total!r} into zero parts")
+        return parts
+    prefix = [0.0] * n                 # fl-sum of parts[:k], reference order
+    acc = 0.0
+    for k, p in enumerate(parts):
+        prefix[k] = acc
+        acc += p
+    if acc == total:
+        return parts
+    t = float(total)
+    for k in range(n - 1, 0, -1):
+        x = t - prefix[k]
+        for _ in range(_MAX_FOLD_ITERS):
+            head = t - x
+            got = head + x
+            if got == t:
+                break
+            x = math.nextafter(x, math.inf if t > got else -math.inf)
+        else:
+            raise ArithmeticError(
+                f"residual folding did not converge at entry {k}: "
+                f"target {t!r}")
+        parts[k] = x
+        t = head
+    parts[0] = t
+    acc = 0.0
+    for p in parts:
+        acc += p
+    if acc != total:                   # unreachable: the identity telescopes
+        raise ArithmeticError(
+            f"residual folding did not converge: sum {acc!r} != "
+            f"total {total!r}")
+    return parts
+
+
+def split_conserving(total: float, weights: Sequence[float]) -> np.ndarray:
+    """Split ``total`` proportionally to ``weights``; sums back bitwise.
+
+    Returns one part per weight such that the left-to-right sum of the
+    parts equals ``total`` exactly.  Zero (or degenerate) weight vectors
+    fall back to an even split.  The ulp-scale float residual of the
+    proportional multiplication is folded into the final part (see
+    ``fold_residual`` for why it must be the last in summation order).
+    """
+    w = np.asarray(weights, dtype=float)
+    n = w.size
+    if n == 0:
+        if total != 0.0:
+            raise ValueError(f"cannot split {total!r} J across zero requests")
+        return np.zeros(0)
+    if n == 1:
+        return np.asarray([float(total)])
+    wsum = float(np.sum(w))
+    if not np.isfinite(wsum) or wsum <= 0.0 or np.any(w < 0):
+        w = np.ones(n)
+        wsum = float(n)
+    parts = [float(total) * (float(wi) / wsum) for wi in w]
+    return np.asarray(fold_residual(parts, float(total)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveShare:
+    """One request's occupancy of one step, as the scheduler saw it."""
+
+    request_id: str
+    tenant: str
+    tokens: float            # active tokens this request processed this step
+    kv_bytes: float          # KV-cache bytes resident during the step
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    """One request's share of one aligned step."""
+
+    step: int
+    request_id: str
+    tenant: str
+    kind: str                # "prefill" | "decode"
+    tokens: float
+    kv_bytes: float
+    weight: float            # normalized blend weight used for the split
+    measured_j: float
+    predicted_j: float
+
+    @property
+    def residual_j(self) -> float:
+        return self.measured_j - self.predicted_j
+
+
+@dataclasses.dataclass
+class LedgerStep:
+    """One aligned step's totals plus its per-request split.
+
+    ``sum(e.measured_j for e in entries)`` (left-to-right, entry order)
+    equals ``measured_j`` bitwise; same for the predicted column.
+    ``work_scale`` is the number of device iterations each logical step
+    spanned (``StreamSession.iterations_per_step``), so per-token figures
+    stay true per-token: J/token = measured_j / (tokens * work_scale).
+    """
+
+    step: int
+    kind: str
+    duration_s: float
+    measured_j: float
+    predicted_j: float
+    work_scale: float
+    entries: List[LedgerEntry]
+
+    @property
+    def batch(self) -> int:
+        return len(self.entries)
+
+    @property
+    def tokens(self) -> float:
+        return sum(e.tokens for e in self.entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerPolicy:
+    """How a step's joules are prorated across its occupants.
+
+    The step's dynamic fraction (from its own prediction) follows active
+    tokens; the non-dynamic remainder is split ``residency_frac`` by
+    KV-cache bytes and the rest evenly across the batch.
+    """
+
+    residency_frac: float = 0.5
+
+    def __post_init__(self):
+        if not 0.0 <= self.residency_frac <= 1.0:
+            raise ValueError(f"residency_frac {self.residency_frac} "
+                             f"outside [0, 1]")
+
+    def weights(self, active: Sequence[ActiveShare],
+                dynamic_frac: float) -> np.ndarray:
+        n = len(active)
+        dyn = min(max(float(dynamic_frac), 0.0), 1.0)
+        toks = np.asarray([a.tokens for a in active], dtype=float)
+        kv = np.asarray([a.kv_bytes for a in active], dtype=float)
+        tok_share = toks / toks.sum() if toks.sum() > 0 else np.full(n, 1.0 / n)
+        kv_share = kv / kv.sum() if kv.sum() > 0 else np.full(n, 1.0 / n)
+        even = np.full(n, 1.0 / n)
+        hold = self.residency_frac * kv_share + \
+            (1.0 - self.residency_frac) * even
+        return dyn * tok_share + (1.0 - dyn) * hold
+
+
+@dataclasses.dataclass
+class RequestTotals:
+    """Ledger roll-up for one request (plain sums, entry order)."""
+
+    request_id: str
+    tenant: str
+    steps: int = 0
+    tokens: float = 0.0           # logical tokens (prompt + generated)
+    scaled_tokens: float = 0.0    # tokens × work_scale (device iterations)
+    measured_j: float = 0.0
+    predicted_j: float = 0.0
+
+    @property
+    def j_per_token(self) -> float:
+        return self.measured_j / max(self.scaled_tokens, 1e-12)
+
+    @property
+    def residual_j(self) -> float:
+        return self.measured_j - self.predicted_j
+
+
+class RequestLedger:
+    """Accumulates aligned steps into per-request energy attributions.
+
+    One ``record_step`` call per aligned step; the conservation invariant
+    (module docstring) holds for every recorded step, measured and
+    predicted alike.
+    """
+
+    def __init__(self, policy: Optional[LedgerPolicy] = None):
+        self.policy = policy or LedgerPolicy()
+        self.steps: List[LedgerStep] = []
+
+    def record_step(self, *, step: int, kind: str, duration_s: float,
+                    measured_j: float, predicted_j: float,
+                    dynamic_frac: float,
+                    active: Sequence[ActiveShare],
+                    work_scale: float = 1.0) -> LedgerStep:
+        """Split one aligned step's joules across its active requests."""
+        if not active:
+            raise ValueError(f"step {step}: no active requests to bill")
+        w = self.policy.weights(active, dynamic_frac)
+        measured = split_conserving(measured_j, w)
+        predicted = split_conserving(predicted_j, w)
+        entries = [LedgerEntry(step=step, request_id=a.request_id,
+                               tenant=a.tenant, kind=kind, tokens=a.tokens,
+                               kv_bytes=a.kv_bytes, weight=float(w[i]),
+                               measured_j=float(measured[i]),
+                               predicted_j=float(predicted[i]))
+                   for i, a in enumerate(active)]
+        rec = LedgerStep(step=step, kind=kind, duration_s=duration_s,
+                         measured_j=measured_j, predicted_j=predicted_j,
+                         work_scale=work_scale, entries=entries)
+        self.steps.append(rec)
+        return rec
+
+    # -- roll-ups ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    @property
+    def entries(self) -> List[LedgerEntry]:
+        return [e for s in self.steps for e in s.entries]
+
+    @property
+    def measured_total_j(self) -> float:
+        """Left-to-right sum of step totals — the run's attributed joules."""
+        return sum(s.measured_j for s in self.steps)
+
+    @property
+    def predicted_total_j(self) -> float:
+        return sum(s.predicted_j for s in self.steps)
+
+    def per_request(self) -> Dict[str, RequestTotals]:
+        """Roll-up per request id, in first-seen order."""
+        out: Dict[str, RequestTotals] = {}
+        for s in self.steps:
+            for e in s.entries:
+                tot = out.get(e.request_id)
+                if tot is None:
+                    tot = out[e.request_id] = RequestTotals(
+                        request_id=e.request_id, tenant=e.tenant)
+                tot.steps += 1
+                tot.tokens += e.tokens
+                tot.scaled_tokens += e.tokens * s.work_scale
+                tot.measured_j += e.measured_j
+                tot.predicted_j += e.predicted_j
+        return out

@@ -1,0 +1,559 @@
+"""Energy-aware continuous batching: admission, eviction, J/token budget.
+
+The serving loop this module models is the paper's §5 posture turned into
+a scheduler: fine-grained energy attribution is only worth computing if
+something *acts* on it.  Requests arrive staggered, join and leave the
+decode batch at step boundaries, and the admission policy is energy-aware:
+
+* **budget packing** — a candidate admission is priced first
+  (``EnergyModel.predict`` over the would-be batch's decode counts) and
+  deferred if the resulting predicted J/token exceeds the budget;
+* **drift shedding** — when the streaming drift detector
+  (``telemetry/attrib``) flags the device running hot against its table,
+  admissions pause and the newest in-flight request is shed back to the
+  queue (its KV residency is dropped; it re-prefills on re-admission —
+  shedding has an honest energy cost).
+
+Execution is *phase-wise*: between two membership boundaries the batch is
+constant, so each phase runs as one ``telemetry.StreamSession`` (one
+device program, MTSM markers per step) and every aligned step lands in the
+``RequestLedger`` with bitwise conservation.  One ``OnlineAttributor`` is
+shared across phases, so the drift baseline — and any recalibration —
+carries over the whole serving run, exactly the long-lived fleet posture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.counting import OpCounts
+from repro.serve.billing import BillingReport, bill_tenants
+from repro.serve.ledger import (ActiveShare, LedgerPolicy, RequestLedger,
+                                RequestTotals)
+
+CountsFn = Callable[[str, int, int], OpCounts]
+# (kind "prefill"|"decode", batch size, tokens per sequence) -> per-step counts
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request as submitted."""
+
+    id: str
+    tenant: str
+    prompt_len: int
+    max_new: int
+    arrival_step: int = 0
+
+    def __post_init__(self):
+        if self.prompt_len < 1 or self.max_new < 1:
+            raise ValueError(f"request {self.id!r}: prompt_len and max_new "
+                             f"must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyPolicy:
+    """Admission policy knobs for the continuous-batching scheduler."""
+
+    max_batch: int = 8
+    budget_j_per_token: Optional[float] = None
+    shed_on_drift: bool = True
+    max_phase_steps: int = 8        # drift re-check cadence during decode
+
+    def __post_init__(self):
+        if self.max_batch < 1 or self.max_phase_steps < 1:
+            raise ValueError("max_batch and max_phase_steps must be >= 1")
+
+
+@dataclasses.dataclass
+class ServeEvent:
+    """One scheduling decision, for the report's audit trail."""
+
+    step: int
+    event: str            # admit | defer | evict | shed | idle
+    request_id: Optional[str] = None
+    detail: str = ""
+
+
+class _Slot:
+    """Runtime state of one in-flight (or re-queued) request."""
+
+    __slots__ = ("req", "prefill_done", "generated", "kv_tokens",
+                 "admitted_step", "completed_step", "sheds")
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.prefill_done = False
+        self.generated = 0
+        self.kv_tokens = 0
+        self.admitted_step: Optional[int] = None
+        self.completed_step: Optional[int] = None
+        self.sheds = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new - self.generated
+
+    @property
+    def finished(self) -> bool:
+        return self.prefill_done and self.remaining <= 0
+
+
+@dataclasses.dataclass
+class Phase:
+    """A run of steps with constant batch membership.
+
+    ``members`` snapshots each occupant at phase start: request id,
+    tenant, the tokens it actively processes per step (prompt length in
+    its prefill step, 1 per decode step, 0 while resident-but-stalled),
+    and its KV residency in tokens at phase start.
+    """
+
+    index: int
+    kind: str                 # "prefill" | "decode"
+    step0: int                # global step of the first step in the phase
+    n_steps: int
+    pad_tokens: int           # sequence length the device executes per row
+    members: List[dict]       # {"request_id","tenant","tokens","kv0_tokens"}
+    kv_bytes_per_token: float
+
+    @property
+    def batch(self) -> int:
+        return len(self.members)
+
+    def step_tokens(self, i: int) -> float:
+        return sum(m["tokens"] for m in self.members)
+
+    def shares(self, i: int) -> List[ActiveShare]:
+        """Per-request occupancy of step ``i`` of the phase."""
+        bpt = self.kv_bytes_per_token
+        out = []
+        for m in self.members:
+            kv = m["kv0_tokens"]
+            if self.kind == "decode":
+                kv += i                      # cache grown so far this phase
+            out.append(ActiveShare(request_id=m["request_id"],
+                                   tenant=m["tenant"], tokens=m["tokens"],
+                                   kv_bytes=kv * bpt))
+        return out
+
+
+class ContinuousBatchingScheduler:
+    """Step-boundary admission/eviction with the energy-aware policy.
+
+    Pure scheduling: energy enters only through the two injected
+    callables — ``j_per_token(batch)`` prices a candidate decode batch and
+    ``drift_flag()`` reads the live drift detector — so the policy logic
+    is testable without a device.
+    """
+
+    def __init__(self, requests: Sequence[Request], policy: EnergyPolicy,
+                 *, j_per_token: Callable[[int], float],
+                 drift_flag: Callable[[], bool],
+                 kv_bytes_per_token: float = 1.0):
+        self.policy = policy
+        self.j_per_token = j_per_token
+        self.drift_flag = drift_flag
+        self.kv_bytes_per_token = float(kv_bytes_per_token)
+        self.now = 0
+        self.events: List[ServeEvent] = []
+        self.slots: Dict[str, _Slot] = {}
+        self.pending: List[_Slot] = []
+        self.active: List[_Slot] = []        # admission order
+        self._phase_idx = 0
+        seen = set()
+        for r in sorted(requests, key=lambda r: (r.arrival_step, r.id)):
+            if r.id in seen:
+                raise ValueError(f"duplicate request id {r.id!r}")
+            seen.add(r.id)
+            slot = _Slot(r)
+            self.slots[r.id] = slot
+            self.pending.append(slot)
+
+    # -- boundary decisions --------------------------------------------------
+    def _evict_finished(self) -> None:
+        for slot in [s for s in self.active if s.finished]:
+            self.active.remove(slot)
+            slot.completed_step = self.now
+            self.events.append(ServeEvent(
+                self.now, "evict", slot.req.id,
+                f"completed: {slot.generated} tokens generated"))
+
+    def _shed_if_hot(self) -> None:
+        if not (self.policy.shed_on_drift and len(self.active) > 1
+                and self.drift_flag()):
+            return
+        slot = self.active.pop()             # newest admission pays first
+        slot.prefill_done = False            # KV dropped; re-prefill later
+        slot.kv_tokens = 0
+        slot.sheds += 1
+        self.pending.insert(0, slot)
+        self.events.append(ServeEvent(
+            self.now, "shed", slot.req.id,
+            "drift flagged: device running hot against its table"))
+
+    def _admit(self) -> None:
+        while self.pending and self.pending[0].req.arrival_step <= self.now:
+            slot = self.pending[0]
+            if len(self.active) >= self.policy.max_batch:
+                self.events.append(ServeEvent(
+                    self.now, "defer", slot.req.id,
+                    f"batch full ({self.policy.max_batch})"))
+                return
+            if self.active:                  # never starve an idle device
+                if self.drift_flag():
+                    self.events.append(ServeEvent(
+                        self.now, "defer", slot.req.id,
+                        "drift flagged: admissions paused"))
+                    return
+                budget = self.policy.budget_j_per_token
+                if budget is not None:
+                    jpt = self.j_per_token(len(self.active) + 1)
+                    if jpt > budget:
+                        self.events.append(ServeEvent(
+                            self.now, "defer", slot.req.id,
+                            f"predicted {jpt:.3e} J/token > budget "
+                            f"{budget:.3e}"))
+                        return
+            self.pending.pop(0)
+            self.active.append(slot)
+            slot.admitted_step = self.now
+            self.events.append(ServeEvent(
+                self.now, "admit", slot.req.id,
+                f"batch {len(self.active)}"))
+
+    # -- phase generation ----------------------------------------------------
+    def next_phase(self) -> Optional[Phase]:
+        """Advance to the next membership-constant run of steps."""
+        while True:
+            self._evict_finished()
+            self._shed_if_hot()
+            self._admit()
+            if self.active:
+                break
+            if not self.pending:
+                return None
+            arrival = self.pending[0].req.arrival_step
+            if arrival <= self.now:
+                # admission blocked (drift) with an idle device: admit the
+                # head unconditionally rather than deadlock
+                slot = self.pending.pop(0)
+                self.active.append(slot)
+                slot.admitted_step = self.now
+                self.events.append(ServeEvent(
+                    self.now, "admit", slot.req.id, "starvation override"))
+                break
+            self.events.append(ServeEvent(
+                self.now, "idle", None, f"next arrival at step {arrival}"))
+            self.now = arrival
+
+        prefilling = [s for s in self.active if not s.prefill_done]
+        if prefilling:
+            phase = self._prefill_phase(prefilling)
+        else:
+            phase = self._decode_phase()
+        self._phase_idx += 1
+        self.now += phase.n_steps
+        return phase
+
+    def _prefill_phase(self, prefilling: List[_Slot]) -> Phase:
+        pad = max(s.req.prompt_len for s in prefilling)
+        members = []
+        for s in self.active:
+            new = s in prefilling
+            members.append({"request_id": s.req.id, "tenant": s.req.tenant,
+                            "tokens": float(s.req.prompt_len) if new else 0.0,
+                            "kv0_tokens": (s.req.prompt_len if new
+                                           else s.kv_tokens)})
+        for s in prefilling:                 # prefill emits the first token
+            s.prefill_done = True
+            s.kv_tokens = s.req.prompt_len
+            s.generated += 1
+        return Phase(index=self._phase_idx, kind="prefill", step0=self.now,
+                     n_steps=1, pad_tokens=pad, members=members,
+                     kv_bytes_per_token=self.kv_bytes_per_token)
+
+    def _decode_phase(self) -> Phase:
+        n = min(s.remaining for s in self.active)
+        arrivals = [s.req.arrival_step for s in self.pending
+                    if s.req.arrival_step > self.now]
+        if arrivals:
+            n = min(n, min(arrivals) - self.now)
+        n = max(1, min(n, self.policy.max_phase_steps))
+        members = [{"request_id": s.req.id, "tenant": s.req.tenant,
+                    "tokens": 1.0, "kv0_tokens": s.kv_tokens}
+                   for s in self.active]
+        for s in self.active:
+            s.generated += n
+            s.kv_tokens += n
+        return Phase(index=self._phase_idx, kind="decode", step0=self.now,
+                     n_steps=n, pad_tokens=1, members=members,
+                     kv_bytes_per_token=self.kv_bytes_per_token)
+
+
+# ---------------------------------------------------------------------------
+# The serving-energy engine: scheduler × telemetry × ledger.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PhaseSummary:
+    index: int
+    kind: str
+    step0: int
+    n_steps: int
+    batch: int
+    work_scale: float          # device iterations per logical step
+    measured_j: float
+    predicted_j: float
+    startup_j: float
+
+
+@dataclasses.dataclass
+class RequestRow:
+    """One finished request: spec, schedule, and its ledger roll-up."""
+
+    request: Request
+    totals: RequestTotals
+    admitted_step: Optional[int]
+    completed_step: Optional[int]
+    generated: int
+    sheds: int
+
+    @property
+    def tokens(self) -> float:
+        return self.totals.tokens
+
+    @property
+    def measured_j(self) -> float:
+        return self.totals.measured_j
+
+    @property
+    def predicted_j(self) -> float:
+        return self.totals.predicted_j
+
+    @property
+    def j_per_token(self) -> float:
+        return self.totals.j_per_token
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What one energy-metered serving run produced."""
+
+    name: str
+    requests: List[RequestRow]
+    billing: BillingReport
+    ledger: RequestLedger
+    phases: List[PhaseSummary]
+    events: List[ServeEvent]
+    overhead_j: float            # per-phase startup energy, outside the steps
+    mape_pct: float
+    recalibrations: List[float]
+
+    @property
+    def measured_total_j(self) -> float:
+        return self.ledger.measured_total_j
+
+    @property
+    def predicted_total_j(self) -> float:
+        return self.ledger.predicted_total_j
+
+    def snapshot(self) -> dict:
+        """JSON-safe report — what ``TelemetryService`` exposes as billing."""
+        return {
+            "name": self.name,
+            "billing": self.billing.snapshot(),
+            "requests": {
+                r.request.id: {
+                    "tenant": r.request.tenant,
+                    "arrival_step": r.request.arrival_step,
+                    "admitted_step": r.admitted_step,
+                    "completed_step": r.completed_step,
+                    "prompt_tokens": r.request.prompt_len,
+                    "generated_tokens": r.generated,
+                    "sheds": r.sheds,
+                    "measured_j": r.measured_j,
+                    "predicted_j": r.predicted_j,
+                    "j_per_token": r.j_per_token,
+                } for r in self.requests},
+            "steps": len(self.ledger),
+            "phases": len(self.phases),
+            "measured_total_j": self.measured_total_j,
+            "predicted_total_j": self.predicted_total_j,
+            "overhead_j": self.overhead_j,
+            "mape_pct": self.mape_pct,
+            "recalibrations": list(self.recalibrations),
+            "events": [{"step": e.step, "event": e.event,
+                        "request": e.request_id, "detail": e.detail}
+                       for e in self.events],
+        }
+
+    def table(self) -> str:
+        """The per-request ledger table, formatted for a terminal."""
+        hdr = (f"{'request':<10} {'tenant':<10} {'arr':>4} {'prompt':>6} "
+               f"{'gen':>4} {'measured J':>12} {'predicted J':>12} "
+               f"{'J/token':>10} {'resid%':>7}")
+        lines = [hdr, "-" * len(hdr)]
+        for r in self.requests:
+            resid = (100.0 * (r.predicted_j / r.measured_j - 1.0)
+                     if r.measured_j > 0 else 0.0)
+            lines.append(
+                f"{r.request.id:<10} {r.request.tenant:<10} "
+                f"{r.request.arrival_step:>4} {r.request.prompt_len:>6} "
+                f"{r.generated:>4} {r.measured_j:>12.4e} "
+                f"{r.predicted_j:>12.4e} {r.j_per_token:>10.3e} "
+                f"{resid:>+7.1f}")
+        lines.append("-" * len(hdr))
+        lines.append(
+            f"{'total':<10} {'':<10} {'':>4} {'':>6} {'':>4} "
+            f"{self.measured_total_j:>12.4e} "
+            f"{self.predicted_total_j:>12.4e}")
+        return "\n".join(lines)
+
+
+class EnergyServer:
+    """Continuous-batching serving with energy as a scheduling input.
+
+    ``counts_fn(kind, batch, tokens)`` supplies the per-step op counts the
+    device executes and the predictor prices — ``launch.serve`` builds it
+    from traced model steps; tests and examples can hand in synthetic
+    counts.  Everything else is assembled from the model: its device runs
+    the phases, its predictor prices them, and one shared
+    ``OnlineAttributor`` watches for drift across the whole run.
+    """
+
+    def __init__(self, model, counts_fn: CountsFn, *,
+                 policy: Optional[EnergyPolicy] = None,
+                 ledger_policy: Optional[LedgerPolicy] = None,
+                 kv_bytes_per_token: float = 1.0,
+                 min_phase_seconds: float = 5.0,
+                 name: str = "serve",
+                 recalibrate="rescale",
+                 detector=None,
+                 drift_flag: Optional[Callable[[], bool]] = None,
+                 telemetry_chunk: Optional[int] = None,
+                 service=None):
+        from repro.telemetry.attrib import OnlineAttributor
+        from repro.telemetry.sampler import DEFAULT_CHUNK
+        self.model = model
+        self.counts_fn = counts_fn
+        self.policy = policy or EnergyPolicy()
+        self.ledger_policy = ledger_policy or LedgerPolicy()
+        self.kv_bytes_per_token = float(kv_bytes_per_token)
+        self.min_phase_seconds = float(min_phase_seconds)
+        self.name = name
+        self.telemetry_chunk = (int(telemetry_chunk) if telemetry_chunk
+                                else DEFAULT_CHUNK)
+        self.service = service
+        self.attributor = OnlineAttributor(
+            model.predictor, recalibrate=recalibrate, detector=detector)
+        self._drift_flag = drift_flag or \
+            (lambda: self.attributor.drift.drifting)
+        self._counts_cache: Dict[tuple, OpCounts] = {}
+        self._jpt_cache: Dict[int, float] = {}
+
+    # -- pricing -------------------------------------------------------------
+    def _counts(self, kind: str, batch: int, tokens: int) -> OpCounts:
+        key = (kind, batch, tokens)
+        c = self._counts_cache.get(key)
+        if c is None:
+            c = self._counts_cache[key] = self.counts_fn(kind, batch, tokens)
+        return c
+
+    def predict_j_per_token(self, batch: int) -> float:
+        """Predicted J/token of a decode step at this batch size."""
+        jpt = self._jpt_cache.get(batch)
+        if jpt is None:
+            counts = self._counts("decode", batch, 1)
+            iters = self.model.device.iters_for_duration(counts, 1.0)
+            t_step = 1.0 / max(iters, 1)
+            pred = self.model.predict(counts, t_step)
+            jpt = self._jpt_cache[batch] = pred.total_j / batch
+        return jpt
+
+    # -- the serving run -----------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        from repro.telemetry.service import StreamSession
+        sched = ContinuousBatchingScheduler(
+            requests, self.policy, j_per_token=self.predict_j_per_token,
+            drift_flag=self._drift_flag,
+            kv_bytes_per_token=self.kv_bytes_per_token)
+        ledger = RequestLedger(self.ledger_policy)
+        phases: List[PhaseSummary] = []
+        overhead = 0.0
+
+        while (phase := sched.next_phase()) is not None:
+            counts = self._counts(phase.kind, phase.batch, phase.pad_tokens)
+            session = StreamSession(
+                self.model.predictor, self.model.device, counts,
+                name=f"{self.name}/p{phase.index}.{phase.kind}x{phase.batch}",
+                attributor=self.attributor,
+                min_duration_s=self.min_phase_seconds,
+                chunk_size=self.telemetry_chunk)
+            if self.service is not None:
+                self.service.register(session)
+            for i in range(phase.n_steps):
+                session.step(i, work_units=phase.step_tokens(i))
+            summary = session.finish()
+            group = session.iterations_per_step
+            for i, att in enumerate(session.attributions):
+                pred = att.prediction
+                dyn_frac = (pred.dynamic_j / pred.total_j
+                            if pred.total_j > 0 else 1.0)
+                ledger.record_step(
+                    step=phase.step0 + i, kind=phase.kind,
+                    duration_s=att.duration_s, measured_j=att.measured_j,
+                    predicted_j=att.predicted_j, dynamic_frac=dyn_frac,
+                    active=phase.shares(i), work_scale=group)
+            overhead += summary.startup_j
+            phases.append(PhaseSummary(
+                index=phase.index, kind=phase.kind, step0=phase.step0,
+                n_steps=phase.n_steps, batch=phase.batch, work_scale=group,
+                measured_j=sum(a.measured_j for a in session.attributions),
+                predicted_j=sum(a.predicted_j for a in session.attributions),
+                startup_j=summary.startup_j))
+
+        totals = ledger.per_request()
+        rows = []
+        for rid, slot in sched.slots.items():
+            tot = totals.get(rid) or RequestTotals(request_id=rid,
+                                                   tenant=slot.req.tenant)
+            rows.append(RequestRow(
+                request=slot.req, totals=tot,
+                admitted_step=slot.admitted_step,
+                completed_step=slot.completed_step,
+                generated=slot.generated, sheds=slot.sheds))
+        rows.sort(key=lambda r: (r.request.arrival_step, r.request.id))
+        report = ServeReport(
+            name=self.name, requests=rows, billing=bill_tenants(ledger),
+            ledger=ledger, phases=phases, events=sched.events,
+            overhead_j=overhead, mape_pct=self.attributor.mape(),
+            recalibrations=list(self.attributor.recalibrations))
+        if self.service is not None:
+            snap = report.snapshot()
+            self.service.register_billing(self.name, lambda: snap)
+        return report
+
+
+def synthetic_counts_fn(base_units: float = 1e7,
+                        interference: float = 0.0) -> CountsFn:
+    """A device-only ``counts_fn`` for tests, demos and benchmarks.
+
+    Per-step work scales with ``batch × tokens``; ``interference > 0``
+    adds a superlinear per-batch term (cross-request cache interference),
+    which makes predicted J/token *rise* with batch size — the regime
+    where a J/token budget genuinely caps packing.
+    """
+    def counts(kind: str, batch: int, tokens: int) -> OpCounts:
+        work = batch * tokens * (1.0 + interference * max(batch - 1, 0))
+        c = OpCounts()
+        c.add("dot.bf16", base_units * work)
+        c.mxu_macs_total = c.mxu_macs_aligned = base_units * work
+        c.add("add.f32", 0.02 * base_units * work)
+        c.add("exp.f32", 0.002 * base_units * work)
+        c.boundary_read_bytes = 0.02 * base_units * work
+        c.boundary_write_bytes = 0.01 * base_units * work
+        c.fused_bytes = 0.01 * base_units * work
+        c.max_buffer_bytes = 4e6
+        c.dispatch_count = 3
+        return c
+    return counts

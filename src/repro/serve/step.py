@@ -22,21 +22,37 @@ def make_prefill_step(cfg: ModelConfig, attn_fn=None):
     return prefill
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, attn_fn=None):
     """serve_step(params, cache, tokens[B,1]) -> (next token ids, cache)."""
     def serve_step(params, cache, tokens):
-        logits, cache = model_mod.decode_step(params, cache, tokens, cfg)
+        logits, cache = model_mod.decode_step(params, cache, tokens, cfg,
+                                              attn_fn=attn_fn)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok[:, None], cache
     return serve_step
 
 
+# ModelConfig is a frozen dataclass and attn_fn a stable callable, so the
+# pair keys compiled serve steps across generate calls — one jit per
+# (config, kernel), not one per invocation.
+_SERVE_STEP_CACHE: Dict[Tuple[ModelConfig, Any], Any] = {}
+
+
+def jitted_serve_step(cfg: ModelConfig, attn_fn=None):
+    """The jitted decode step for ``cfg``, compiled once and reused."""
+    key = (cfg, attn_fn)
+    step = _SERVE_STEP_CACHE.get(key)
+    if step is None:
+        step = _SERVE_STEP_CACHE[key] = jax.jit(make_serve_step(cfg, attn_fn))
+    return step
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
-                    max_new: int, max_seq: int):
+                    max_new: int, max_seq: int, attn_fn=None):
     """Greedy decode loop (example/serving driver path)."""
     b = prompt.shape[0]
     cache = model_mod.init_cache(cfg, b, max_seq)
-    step = jax.jit(make_serve_step(cfg))
+    step = jitted_serve_step(cfg, attn_fn)
     # teacher-force the prompt through the decode path
     tok = prompt[:, :1]
     out = [tok]

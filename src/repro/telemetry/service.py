@@ -125,6 +125,17 @@ class StreamSession:
         return self.attributor.attributions[self._a0:]
 
     @property
+    def iterations_per_step(self) -> float:
+        """Device iterations folded into each logical step (the work scale).
+
+        ``start`` stretches short workloads so the device run passes
+        startup and reaches a steady plateau; each logical step's aligned
+        window then spans this many repetitions of its op counts.  Per-unit
+        figures (J/token) must divide by it — the serving ledger does.
+        """
+        return self._group
+
+    @property
     def recalibrations(self) -> List[float]:
         """Recalibration factors applied during this session."""
         return self.attributor.recalibrations[self._recal0:]
@@ -393,6 +404,19 @@ class TelemetryService:
 
     def __init__(self):
         self._sessions: Dict[str, StreamSession] = {}
+        self._billing: Dict[str, object] = {}   # key -> provider() -> dict
+
+    def register_billing(self, key: str, provider) -> None:
+        """Attach a billing pane: ``provider()`` -> JSON-safe dict.
+
+        The serving layer (``serve.EnergyServer``) registers its report
+        here so per-tenant bills ride the same snapshot the dashboard
+        already polls.  Re-registering a key replaces the provider (a
+        server's latest run supersedes the previous one).
+        """
+        if not callable(provider):
+            raise TypeError("billing provider must be callable")
+        self._billing[key] = provider
 
     def register(self, session: StreamSession,
                  key: Optional[str] = None) -> StreamSession:
@@ -436,7 +460,7 @@ class TelemetryService:
         anomalies = sum(len(s.monitor.anomalies)
                         for s in self._sessions.values()
                         if s.monitor is not None)
-        return {
+        out = {
             "sessions": per,
             "fleet": {
                 "n_sessions": len(per),
@@ -447,6 +471,9 @@ class TelemetryService:
                 "anomalies": anomalies,
             },
         }
+        if self._billing:
+            out["billing"] = {k: fn() for k, fn in self._billing.items()}
+        return out
 
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
