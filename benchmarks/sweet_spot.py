@@ -1,0 +1,168 @@
+"""Sweet-spot frequency benchmark — the governor vs the exhaustive sweep.
+
+The frequency axis buys energy only if the closed loop actually lands on
+the sweet spot: dynamic energy falls with V(f)^2 at low clocks while the
+constant+static floor is paid for longer, so measured J/token bottoms out
+at a workload-dependent frequency.  This benchmark calibrates a (freq,
+cap) family on the simulated device, measures the exhaustive J/token and
+tokens/s curve over the candidate grid, then lets the ``SweetSpotGovernor``
+run the same workload closed-loop under a throughput SLA — both sides use
+the *same* candidate grid, so "within one grid step of the exhaustive
+optimum" is a meaningful gate.
+
+Emits JSON (``--out``, default ``results/BENCH_sweet_spot.json``) with
+J/step, J/token and tokens/s per operating point, the governor's decision
+trace, and the chosen-vs-optimal verdict, plus the repo's CSV line format
+on stdout.  The gate (governor within one grid step of the SLA-constrained
+optimum, SLA held at the chosen point) always applies; ``--no-gate``
+downgrades it to a report for exploratory runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from benchmarks.common import record
+from repro.api import EnergyModel
+from repro.core.opcount import OpCounts
+from repro.dvfs import GovernorConfig, SweetSpotGovernor, default_sweep_points
+
+SYSTEM = "sim-v5e-air"
+TOKENS_PER_STEP = 64.0
+
+
+def decode_counts() -> OpCounts:
+    """A decode-like step: MXU-light, boundary-traffic-heavy."""
+    c = OpCounts()
+    c.add("dot.bf16", 2e8)
+    c.mxu_macs_total = c.mxu_macs_aligned = 2e8
+    c.add("exp.f32", 1e6)
+    c.add("add.f32", 5e6)
+    c.boundary_read_bytes = 4e6
+    c.boundary_write_bytes = 2e6
+    c.naive_bytes = 8e6
+    c.fused_bytes = 2e6
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+def grid_distance(points, a_freq: float, b_freq: float) -> int:
+    """Distance in grid steps between two candidate frequencies."""
+    freqs = sorted({p[0] for p in points})
+    return abs(freqs.index(a_freq) - freqs.index(b_freq))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_sweet_spot.json")
+    ap.add_argument("--grid", type=int, default=4,
+                    help="candidate frequencies across the V/f span")
+    ap.add_argument("--duration-s", type=float, default=6.0,
+                    help="per-microbenchmark calibration duration")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=4,
+                    help="workload steps per measured phase")
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="closed-loop rounds for the governor")
+    ap.add_argument("--min-phase-s", type=float, default=8.0)
+    ap.add_argument("--sla-frac", type=float, default=0.6,
+                    help="SLA = this fraction of the fastest point's "
+                         "measured tokens/s")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; do not fail on a missed sweet spot")
+    args = ap.parse_args(argv)
+
+    model = EnergyModel.from_store(SYSTEM)
+    points = default_sweep_points(model.device, n=args.grid)
+    fam = {(f, c) for f, c, _ in model.table.family() if f is not None}
+    missing = [p for p in points if p not in fam]
+    if missing:
+        model.calibrate_points(points=points, duration_s=args.duration_s,
+                               repeats=args.repeats, seed=args.seed)
+    counts = decode_counts()
+
+    # 1. ground truth: the exhaustive J/token curve over the grid
+    sweep = model.sweep(counts, points=points, steps=args.steps,
+                        work_units=TOKENS_PER_STEP,
+                        min_duration_s=args.min_phase_s, name="bench-sweep")
+    sla = args.sla_frac * max(r.work_per_s for r in sweep.rows)
+    best = sweep.best(sla_work_per_s=sla)
+    assert best is not None, "SLA excluded every operating point"
+
+    # 2. closed loop: same grid, same workload, SLA enforced by the governor
+    gov = SweetSpotGovernor(points, GovernorConfig(sla_work_per_s=sla))
+    run = model.govern(counts, gov, rounds=args.rounds, steps=args.steps,
+                       work_units=TOKENS_PER_STEP,
+                       min_duration_s=args.min_phase_s, name="bench-govern")
+    chosen = run.final_point
+    assert chosen is not None, "governor never settled on a point"
+
+    by_freq = {r.freq_mhz: r for r in sweep.rows}
+    chosen_row = by_freq[chosen[0]]
+    dist = grid_distance(points, chosen[0], best.freq_mhz)
+    sla_held = chosen_row.work_per_s >= sla
+    nominal = by_freq.get(float(model.device.vf.f_nom_mhz))
+    saved_pct = 0.0 if nominal is None else \
+        (1.0 - chosen_row.j_per_work / nominal.j_per_work) * 100.0
+
+    result = {
+        "benchmark": "sweet_spot",
+        "system": SYSTEM,
+        "grid": [list(p) for p in points],
+        "sla_tokens_per_s": sla,
+        "tokens_per_step": TOKENS_PER_STEP,
+        "sweep": [dict(r.snapshot(),
+                       j_per_step=r.measured_j * TOKENS_PER_STEP
+                       / max(r.work_units, 1e-12),
+                       j_per_token=r.j_per_work,
+                       tokens_per_s=r.work_per_s)
+                  for r in sweep.rows],
+        "exhaustive_best": best.snapshot(),
+        "governor": run.snapshot(),
+        "chosen_freq_mhz": chosen[0],
+        "optimal_freq_mhz": best.freq_mhz,
+        "grid_step_distance": dist,
+        "sla_held_at_chosen": sla_held,
+        "converged": run.converged,
+        "saved_vs_nominal_pct": saved_pct,
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    for r in sweep.rows:
+        record(f"sweet_spot_f{r.freq_mhz:g}", r.duration_s * 1e6,
+               f"j_per_token={r.j_per_work:.3e} tokens_per_s="
+               f"{r.work_per_s:.1f}")
+    record("sweet_spot_governor", sum(r.duration_s for r in run.rounds) * 1e6,
+           f"chosen_f={chosen[0]:g} optimal_f={best.freq_mhz:g} dist={dist}")
+    print(f"sweet spot: exhaustive optimum f={best.freq_mhz:g} MHz "
+          f"({best.j_per_work:.3e} J/token), governor chose "
+          f"f={chosen[0]:g} MHz ({chosen_row.j_per_work:.3e} J/token, "
+          f"{dist} grid step(s) away), SLA {sla:.1f} tokens/s "
+          f"{'held' if sla_held else 'MISSED'}; "
+          f"{saved_pct:+.1f}% J/token vs nominal")
+    print(f"wrote {out}")
+
+    if not args.no_gate and (dist > 1 or not sla_held):
+        print(f"FAIL: governor at f={chosen[0]:g} is {dist} grid steps from "
+              f"the optimum f={best.freq_mhz:g}"
+              + ("" if sla_held else " and misses the SLA"), file=sys.stderr)
+        return 1
+    return 0
+
+
+def bench_sweet_spot():
+    """Harness entry (benchmarks.run): the full canonical configuration,
+    so the JSON under results/ is never overwritten with a reduced run."""
+    main([])
+
+
+ALL = [bench_sweet_spot]
+
+if __name__ == "__main__":
+    sys.exit(main())

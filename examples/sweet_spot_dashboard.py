@@ -1,0 +1,103 @@
+"""Sweet-spot governor dashboard: convergence, then a workload shift.
+
+The closed loop on the frequency axis, end to end: a (freq, power-cap)
+family is calibrated on the simulated v5e, a ``SweetSpotGovernor`` explores
+the candidate grid on a decode-heavy workload and settles on the measured
+J/token argmin under a tokens/s SLA — then the workload mix shifts under
+it (the decode batch turns MXU-heavy) and the staleness check notices the
+measured J/work no longer matches what it converged on, forcing a
+re-exploration and a *new* sweet spot.
+
+Every proposal/hold/switch/re-explore decision is printed as it happens,
+and the final ``TelemetryService``-style governor snapshot is dumped at
+the end (the JSON a real dashboard would poll).
+
+    PYTHONPATH=src python examples/sweet_spot_dashboard.py
+"""
+import json
+
+from repro import EnergyModel
+from repro.core.opcount import OpCounts
+from repro.dvfs import GovernorConfig, SweetSpotGovernor, default_sweep_points
+
+
+def decode_counts() -> OpCounts:
+    """Boundary-traffic-heavy: the memory-bound decode regime."""
+    c = OpCounts()
+    c.add("dot.bf16", 2e8)
+    c.mxu_macs_total = c.mxu_macs_aligned = 2e8
+    c.add("exp.f32", 1e6)
+    c.add("add.f32", 5e6)
+    c.boundary_read_bytes = 4e6
+    c.boundary_write_bytes = 2e6
+    c.naive_bytes = 8e6
+    c.fused_bytes = 2e6
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+def prefill_counts() -> OpCounts:
+    """MXU-heavy: the compute-bound prefill regime (the shifted mix)."""
+    c = OpCounts()
+    c.add("dot.bf16", 6e9)
+    c.mxu_macs_total = c.mxu_macs_aligned = 6e9
+    c.add("exp.f32", 2e7)
+    c.add("add.f32", 4e7)
+    c.boundary_read_bytes = 1e7
+    c.boundary_write_bytes = 5e6
+    c.naive_bytes = 2e7
+    c.fused_bytes = 6e6
+    c.max_buffer_bytes = 8e6
+    c.dispatch_count = 3
+    return c
+
+
+TOKENS_PER_STEP = 64.0
+
+model = EnergyModel.from_store("sim-v5e-air")
+points = default_sweep_points(model.device, n=3)
+fam = {(f, c) for f, c, _ in model.table.family() if f is not None}
+if any(p not in fam for p in points):
+    print(f"[calib] sweeping {len(points)} operating points "
+          f"({', '.join(f'{f:g}' for f, _ in points)} MHz) ...")
+    model.calibrate_points(points=points, duration_s=3.0, repeats=2)
+
+gov = SweetSpotGovernor(points, GovernorConfig(sla_work_per_s=None))
+
+
+def show(run, label):
+    for r in run.rounds:
+        print(f"  [{label} round {r.round}] f={r.freq_mhz:g} MHz "
+              f"({r.reason:10s}) {r.j_per_work:.3e} J/token  "
+              f"{r.work_per_s:,.0f} tokens/s")
+    pt = run.final_point
+    print(f"  -> holding f={pt[0]:g} MHz "
+          f"({'converged' if run.converged else 'still exploring'})\n")
+
+
+# -- phase 1: converge on the decode mix -----------------------------------
+print("phase 1: decode-heavy workload — explore the grid, find the knee")
+run1 = model.govern(decode_counts(), gov, rounds=8, steps=3,
+                    work_units=TOKENS_PER_STEP, min_duration_s=6.0,
+                    name="dash-decode")
+show(run1, "decode")
+settled = run1.final_point
+
+# -- phase 2: the mix shifts under the governor ----------------------------
+print("phase 2: workload shifts MXU-heavy under the governor — the J/work "
+      "it converged on\nis stale, the deviation check trips, and it "
+      "re-explores")
+run2 = model.govern(prefill_counts(), gov, rounds=8, steps=3,
+                    work_units=TOKENS_PER_STEP, min_duration_s=6.0,
+                    name="dash-prefill")
+show(run2, "prefill")
+
+re_explored = any(r.reason in ("re-explore", "explore") for r in run2.rounds)
+moved = run2.final_point != settled
+print(f"workload shift {'re-triggered exploration' if re_explored else 'was absorbed'}"
+      + (f"; sweet spot moved {settled[0]:g} -> {run2.final_point[0]:g} MHz"
+         if moved else f"; sweet spot stayed at {settled[0]:g} MHz"))
+
+print("\ngovernor snapshot (what a dashboard polls):")
+print(json.dumps(gov.snapshot(history=8), indent=1))

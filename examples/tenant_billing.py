@@ -29,10 +29,10 @@ def workload():
 
 def main():
     counts = synthetic_counts_fn(interference=0.5)
+    base = EnergyModel.from_store("sim-v5e-air")
 
     # price the decode batch at each width: interference makes J/token rise
-    probe = EnergyModel.from_store("sim-v5e-air").serve(
-        counts, min_phase_seconds=2.0)
+    probe = base.serve(counts, min_phase_seconds=2.0)
     print("predicted decode J/token by batch width:")
     for b in (1, 2, 3, 4):
         print(f"  batch {b}: {probe.predict_j_per_token(b):.3e} J/token")
@@ -44,9 +44,10 @@ def main():
         ("uncapped", EnergyPolicy(max_batch=4)),
         ("capped", EnergyPolicy(max_batch=4, budget_j_per_token=budget)),
     ]:
-        # fresh model per run: drift repair rescales the bound table in
-        # place, and one run's repair must not re-price the other's budget
-        model = EnergyModel.from_store("sim-v5e-air")
+        # fork the model per run (copy-on-repair): drift repair rescales
+        # the bound table in place, and one run's repair must not re-price
+        # the other's budget — the fork shares the device but owns its table
+        model = base.fork()
         server = model.serve(counts, policy=policy, min_phase_seconds=2.0,
                              name=f"billing/{label}")
         report = server.run(workload())

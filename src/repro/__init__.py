@@ -42,6 +42,16 @@ _LAZY = {
     "StreamSummary": "repro.telemetry",
     "SYSTEMS": "repro.hw.systems",
     "get_device": "repro.hw.systems",
+    "OperatingPoint": "repro.hw.device",
+    "VfCurve": "repro.hw.spec",
+    "SweetSpotGovernor": "repro.dvfs",
+    "GovernorConfig": "repro.dvfs",
+    "SweepResult": "repro.dvfs",
+    "GovernedRun": "repro.dvfs",
+    "default_sweep_points": "repro.dvfs",
+    "sweep_operating_points": "repro.dvfs",
+    "govern_workload": "repro.dvfs",
+    "calibrate_sweep": "repro.core.calibrate",
     "EnergyServer": "repro.serve",
     "EnergyPolicy": "repro.serve",
     "Request": "repro.serve",

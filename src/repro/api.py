@@ -192,6 +192,7 @@ class PredictJob:
     counters: Optional[Mapping[str, float]] = None
     mode: Optional[str] = None          # None -> the batch-level mode
     name: str = ""
+    operating_point: Optional[object] = None  # None -> the batch-level point
 
 
 @dataclasses.dataclass
@@ -394,13 +395,21 @@ class EnergyModel:
     def predict(self, source: Union[ProfileSource, OpCounts],
                 duration_s: float,
                 counters: Optional[Mapping[str, float]] = None,
-                mode: str = "pred") -> Prediction:
-        """Energy prediction + attribution for one profiled run."""
+                mode: str = "pred", operating_point=None) -> Prediction:
+        """Energy prediction + attribution for one profiled run.
+
+        ``operating_point`` prices the run at a (freq_mhz, power_cap_w)
+        point of the table's calibrated frequency family — exact at
+        calibrated members, interpolated between them.  ``None`` keeps the
+        anchor (bitwise-legacy) path.
+        """
         return self.predictor.predict(self._resolve(source), duration_s,
-                                      counters=counters, mode=mode)
+                                      counters=counters, mode=mode,
+                                      operating_point=operating_point)
 
     def predict_many(self, jobs: Iterable[Union[PredictJob, tuple]],
-                     mode: str = "pred") -> List[Prediction]:
+                     mode: str = "pred",
+                     operating_point=None) -> List[Prediction]:
         """Batched prediction over many workloads.
 
         Accepts ``PredictJob``s or ``(source, duration_s[, counters])``
@@ -408,17 +417,27 @@ class EnergyModel:
         priced in a single vectorized pass over this model's class->energy
         vectors (``TablePredictor.predict_batch``) — the fleet-scale path.
         Totals are bitwise-identical to calling ``predict`` per job.
+
+        ``operating_point`` sets a batch-level DVFS point; a job's own
+        ``operating_point`` overrides it.  Mixed-point batches are split
+        into one vectorized pass per distinct (mode, point) pair.
         """
         resolved = [job if isinstance(job, PredictJob) else PredictJob(*job)
                     for job in jobs]
         if not resolved:
             return []
         modes = [job.mode or mode for job in resolved]
+        pts = [self.predictor._as_point(
+                   job.operating_point if job.operating_point is not None
+                   else operating_point)
+               for job in resolved]
+        uniform = all(p == pts[0] for p in pts)
         return self.predictor.predict_batch(
             [self._resolve(job.source) for job in resolved],
             [job.duration_s for job in resolved],
             [job.counters for job in resolved],
-            mode=modes[0] if len(set(modes)) <= 1 else modes)
+            mode=modes[0] if len(set(modes)) <= 1 else modes,
+            operating_point=pts[0] if uniform else pts)
 
     def attribute(self, source: Union[ProfileSource, OpCounts, Callable],
                   *args, duration_s: Optional[float] = None,
@@ -471,9 +490,75 @@ class EnergyModel:
                             counters=rec.counters, mode=mode)
         return Comparison(record=rec, prediction=pred)
 
+    # -- DVFS / frequency axis -----------------------------------------------
+    def fork(self) -> "EnergyModel":
+        """An independent copy of this model over a *copied* table.
+
+        Drift repairs (``rescale_table``) mutate the bound table in place —
+        correct for the long-lived fleet session, surprising for anything
+        that wants to explore (re-run a workload, try operating points)
+        without editing the shared published table.  The fork shares the
+        device but owns a deep-copied table, so its recalibrations,
+        rescales and family edits never leak back.
+        """
+        return EnergyModel(self.table.copy(), system=self.system,
+                           device=self._device)
+
+    def calibrate_points(self, points=None, *,
+                         store: Union[bool, TableStore, None] = None,
+                         resume: bool = True, **kwargs) -> "EnergyModel":
+        """Calibrate DVFS operating points into this model's table family.
+
+        Runs ``core.calibrate.calibrate_sweep`` with this table as the
+        anchor: each (freq_mhz, power_cap_w) point gets its own staged,
+        resumable calibration campaign and lands in the table's
+        ``operating_points`` family, after which ``predict``/``sweep``/
+        ``monitor`` can price any point on the grid.  ``points=None``
+        sweeps three evenly spaced frequencies across the device's V/f
+        range at the TDP cap.  Returns ``self``.
+        """
+        from repro.core.calibrate import calibrate_sweep
+        store_obj = (store if isinstance(store, TableStore)
+                     else default_store() if store else None)
+        run_dir = None
+        if store_obj is not None:
+            run_dir = store_obj.run_dir(self.system).with_name(
+                store_obj.run_dir(self.system).name + "__sweep")
+        calibrate_sweep(self.system, points=points, base_table=self.table,
+                        device=self.device, run_dir=run_dir, resume=resume,
+                        store=store_obj, **kwargs)
+        self.predictor.invalidate()
+        return self
+
+    def sweep(self, source: Union[ProfileSource, OpCounts], points=None,
+              **kwargs):
+        """Measure J/work and work/s across operating points (§sweet spot).
+
+        Runs the workload once per candidate point through the streaming
+        pipeline and returns a ``repro.dvfs.SweepResult`` — rows of
+        measured J/work vs throughput, ``best()`` picking the exhaustive
+        sweet spot (optionally under an SLA).  See
+        ``repro.dvfs.sweep_operating_points`` for the knobs.
+        """
+        from repro.dvfs.sweep import sweep_operating_points
+        return sweep_operating_points(self, self._resolve(source),
+                                      points=points, **kwargs)
+
+    def govern(self, source: Union[ProfileSource, OpCounts], governor,
+               **kwargs):
+        """Run the closed loop: governor proposes, sessions measure.
+
+        Each round runs one streaming session at the governor's proposed
+        point and feeds the measured J/work back.  Returns the
+        ``repro.dvfs.GovernedRun`` trace the dashboard example renders.
+        """
+        from repro.dvfs.sweep import govern_workload
+        return govern_workload(self, self._resolve(source), governor,
+                               **kwargs)
+
     # -- streaming / evaluation ----------------------------------------------
     def monitor(self, live=False, step_counts=None, *,
-                telemetry_chunk=_UNSET, **kwargs):
+                telemetry_chunk=_UNSET, operating_point=None, **kwargs):
         """A fleet ``EnergyMonitor`` bound to this model's predictor.
 
         ``step_counts`` sets the default per-step profile (one profile per
@@ -490,6 +575,9 @@ class EnergyModel:
         ``telemetry_chunk`` sets the live session's ingestion chunk size
         (``None`` selects the per-sample reference path; unset keeps the
         chunked default).
+
+        ``operating_point`` pins the live session (and its attribution) at
+        a calibrated/interpolated (freq_mhz, power_cap_w) point.
         """
         from repro.core.fleet import EnergyMonitor
         if step_counts is not None and not isinstance(step_counts, OpCounts):
@@ -505,6 +593,8 @@ class EnergyModel:
                                  "pass the profile source as live=")
             stream_kw = {} if telemetry_chunk is _UNSET \
                 else {"chunk_size": telemetry_chunk}
+            if operating_point is not None:
+                stream_kw["operating_point"] = operating_point
             mon.live = self.stream(source, monitor=mon, **stream_kw)
         return mon
 

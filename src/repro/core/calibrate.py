@@ -103,17 +103,26 @@ class CalibrationPlan:
     measured: List[str]                    # classes actually run, suite order
     specs: List[ProbeSpec]
     donor_table: Optional[EnergyTable] = None
+    freq_mhz: Optional[float] = None       # DVFS sweep point (None: nominal)
+    power_cap_w: Optional[float] = None
 
     @property
     def is_fractional(self) -> bool:
         return self.profile_fraction is not None
+
+    @property
+    def spec_tag(self) -> str:
+        """Spec-id suffix isolating this plan's DVFS point ("" at nominal)."""
+        if self.freq_mhz is None:
+            return ""
+        return f"@f{self.freq_mhz:g}c{self.power_cap_w:g}"
 
     def spec_ids(self) -> List[str]:
         return [s.spec_id for s in self.specs]
 
     def fingerprint(self) -> Dict[str, Any]:
         """Identity of the campaign — resumed runs must match exactly."""
-        return {
+        fp = {
             "record_version": RECORD_VERSION,
             "system": self.system,
             "isa_gen": self.isa_gen,
@@ -124,6 +133,11 @@ class CalibrationPlan:
             "donor_system": self.donor_system,
             "spec_ids": self.spec_ids(),
         }
+        # conditional so nominal fingerprints match pre-sweep plan.json files
+        if self.freq_mhz is not None:
+            fp["freq_mhz"] = self.freq_mhz
+            fp["power_cap_w"] = self.power_cap_w
+        return fp
 
 
 def plan(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
@@ -131,10 +145,24 @@ def plan(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
          profile_fraction: Optional[float] = None,
          donor: Optional[EnergyTable] = None,
          seed: int = 0,
-         device: Optional[SimDevice] = None) -> CalibrationPlan:
-    """Build the campaign: suite + probes + (optionally sampled) schedule."""
+         device: Optional[SimDevice] = None,
+         operating_point=None) -> CalibrationPlan:
+    """Build the campaign: suite + probes + (optionally sampled) schedule.
+
+    ``operating_point`` pins the campaign to one (freq_mhz, power_cap_w)
+    DVFS point — spec ids get a ``@f<freq>c<cap>`` suffix so a sweep's
+    per-point records draw disjoint noise substreams and never collide in a
+    shared run directory, and ``run_measurements`` sets the device to the
+    point before measuring.
+    """
     dev = device or get_device(system)
     gen = dev.chip.isa_gen
+    freq_mhz = cap_w = None
+    if operating_point is not None:
+        from repro.dvfs.interp import as_point
+        freq_mhz, cap_w = as_point(operating_point)
+        if cap_w is None:
+            cap_w = float(dev.chip.tdp_watts)
     suite = microbench.build_suite(isa_gen=gen)
     targets = microbench.benched_classes(suite)
     # The square-system property: one benchmark per benched class (§3.1).
@@ -160,15 +188,22 @@ def plan(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
     else:
         measured = list(targets)
 
+    tag = "" if freq_mhz is None else f"@f{freq_mhz:g}c{cap_w:g}"
+    if freq_mhz is not None:
+        vf = dev.vf
+        if not (vf.f_min_mhz <= freq_mhz <= vf.f_max_mhz):
+            raise CalibrationError(
+                f"{dev.name}: frequency {freq_mhz:g} MHz outside the V/f "
+                f"range [{vf.f_min_mhz:g}, {vf.f_max_mhz:g}]")
     specs = [
-        ProbeSpec(spec_id="idle", kind=KIND_IDLE, name="IDLE_probe",
+        ProbeSpec(spec_id=f"idle{tag}", kind=KIND_IDLE, name="IDLE_probe",
                   target=None, repeats=repeats, duration_s=IDLE_SECONDS),
-        ProbeSpec(spec_id="nanosleep", kind=KIND_NANOSLEEP,
+        ProbeSpec(spec_id=f"nanosleep{tag}", kind=KIND_NANOSLEEP,
                   name="CTL_NANOSLEEP_probe", target="ctl.loop",
                   repeats=repeats, duration_s=duration_s),
     ]
     keep = set(measured)
-    specs += [ProbeSpec(spec_id=f"bench:{b.name}", kind=KIND_BENCH,
+    specs += [ProbeSpec(spec_id=f"bench:{b.name}{tag}", kind=KIND_BENCH,
                         name=b.name, target=b.target, repeats=repeats,
                         duration_s=duration_s)
               for b in suite if b.target in keep]
@@ -177,7 +212,7 @@ def plan(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
         seed=seed, profile_fraction=profile_fraction,
         donor_system=donor.system if donor is not None else None,
         suite=suite, targets=targets, measured=measured, specs=specs,
-        donor_table=donor)
+        donor_table=donor, freq_mhz=freq_mhz, power_cap_w=cap_w)
 
 
 # ---------------------------------------------------------------------------
@@ -326,17 +361,29 @@ def run_measurements(p: CalibrationPlan,
 
     Already-recorded specs are skipped — calling this again after an
     interruption continues exactly where the campaign stopped.
+
+    A plan pinned to a DVFS point sets the device there for the duration of
+    the measurements and restores the previous point after — the nominal
+    path never touches the device (bitwise-identical records).
     """
     ledger = ledger or RunLedger()
     dev = device or get_device(p.system)
     pending = ledger.missing(p)
     total = len(p.specs)
-    for i, spec in enumerate(pending):
-        if limit is not None and i >= limit:
-            break
-        if progress is not None:
-            progress(spec, total - len(pending) + i, total)
-        ledger.put(_measure_one(dev, p, spec))
+    restore = None
+    if p.freq_mhz is not None:
+        restore = dev.operating_point
+        dev.set_operating_point(p.freq_mhz, power_cap_w=p.power_cap_w)
+    try:
+        for i, spec in enumerate(pending):
+            if limit is not None and i >= limit:
+                break
+            if progress is not None:
+                progress(spec, total - len(pending) + i, total)
+            ledger.put(_measure_one(dev, p, spec))
+    finally:
+        if restore is not None:
+            dev.set_operating_point(restore)
     return ledger
 
 
@@ -351,9 +398,9 @@ class _SolveRecord:
     counters: Dict[str, float]
 
 
-def _powers(ledger: RunLedger) -> tuple:
-    idle = ledger.records.get("idle")
-    ns = ledger.records.get("nanosleep")
+def _powers(p: CalibrationPlan, ledger: RunLedger) -> tuple:
+    idle = ledger.records.get(f"idle{p.spec_tag}")
+    ns = ledger.records.get(f"nanosleep{p.spec_tag}")
     if idle is None or ns is None:
         raise CalibrationError("idle/nanosleep probe records missing")
     p_const = float(np.median([r["p_const_w"] for r in idle["repeats"]]))
@@ -369,13 +416,13 @@ def solve(p: CalibrationPlan, ledger: RunLedger) -> EnergyTable:
         raise CalibrationError(
             f"cannot solve: {len(missing)} measurement records pending "
             f"(first: {missing[0].spec_id}); resume the measure stage first")
-    p_const, p_static = _powers(ledger)
+    p_const, p_static = _powers(p, ledger)
 
     bench_by_target = {b.target: b for b in p.suite}
     rows, recs, dyn = [], [], []
     for target in p.measured:
         bench = bench_by_target[target]
-        rec = ledger.records[f"bench:{bench.name}"]
+        rec = ledger.records[f"bench:{bench.name}{p.spec_tag}"]
         energies = [max(rep["total_j"]
                         - (p_const + p_static) * rep["duration_s"], 0.0)
                     for rep in rec["repeats"]]
@@ -387,6 +434,9 @@ def solve(p: CalibrationPlan, ledger: RunLedger) -> EnergyTable:
         dyn.append(energies[med])
 
     meta = {"n_benchmarks": float(len(rows)), "isa_gen": float(p.isa_gen)}
+    if p.freq_mhz is not None:
+        meta["freq_mhz"] = float(p.freq_mhz)
+        meta["power_cap_w"] = float(p.power_cap_w)
     provenance: Dict[str, Any] = {
         "pipeline": "core.calibrate",
         "mode": "fractional" if p.is_fractional else "full",
@@ -547,6 +597,77 @@ def calibrate(system: str, *, duration_s: float = BENCH_TARGET_SECONDS,
     if store is not None:
         publish(table, store)
     return table
+
+
+def calibrate_sweep(system: str, *, points: Optional[Sequence] = None,
+                    base_table: Optional[EnergyTable] = None,
+                    duration_s: float = BENCH_TARGET_SECONDS,
+                    repeats: int = REPEATS, seed: int = 0,
+                    device: Optional[SimDevice] = None,
+                    run_dir: Optional[Union[str, os.PathLike]] = None,
+                    resume: bool = True,
+                    on_plan_mismatch: str = "raise",
+                    store=None,
+                    progress: Optional[Callable] = None) -> EnergyTable:
+    """Multi-operating-point calibration: build the frequency family.
+
+    Runs the full staged pipeline once per (freq_mhz, power_cap_w) point
+    and attaches each solved per-point table to the anchor's
+    ``operating_points`` family (schema v3), so ``TablePredictor`` can
+    price any point on the grid — exactly at calibrated members,
+    interpolated between them (``repro.dvfs.interp``).
+
+    The *anchor* is ``base_table`` when given, else the store's table for
+    ``system``, else a fresh nominal calibration (persisted under
+    ``<run_dir>/anchor``).  Resume works at two granularities: each
+    point's measurement records live in their own ``<run_dir>/f<f>c<c>``
+    directory, and — when a ``store`` is given — the family is republished
+    after every completed point, so an interrupted sweep restarts with the
+    finished points already attached and skips them.
+
+    ``points`` defaults to three evenly spaced frequencies across the
+    device's V/f range (nominal included) at the chip's TDP cap.
+    """
+    dev = device or get_device(system)
+    from repro.dvfs.interp import as_point
+
+    anchor = base_table
+    if anchor is None and store is not None:
+        anchor = store.get(system)
+    if anchor is None:
+        rd = pathlib.Path(run_dir) / "anchor" if run_dir is not None else None
+        anchor = calibrate(system, duration_s=duration_s, repeats=repeats,
+                           seed=seed, device=dev, run_dir=rd, resume=resume,
+                           on_plan_mismatch=on_plan_mismatch)
+    # stamp the anchor's own operating point (it was measured at nominal)
+    anchor.meta.setdefault("freq_mhz", float(dev.vf.f_nom_mhz))
+    anchor.meta.setdefault("power_cap_w", float(dev.chip.tdp_watts))
+    anchor_pt = (float(anchor.meta["freq_mhz"]),
+                 float(anchor.meta["power_cap_w"]))
+
+    if points is None:
+        points = [(f, float(dev.chip.tdp_watts)) for f in dev.vf.grid(3)]
+    for op in points:
+        f, c = as_point(op)
+        if c is None:
+            c = float(dev.chip.tdp_watts)
+        if (f, c) == anchor_pt or (f, c) in anchor.points:
+            continue                 # the anchor itself / already calibrated
+        pt_plan = plan(system, duration_s=duration_s, repeats=repeats,
+                       seed=seed, device=dev, operating_point=(f, c))
+        rd = (pathlib.Path(run_dir) / f"f{f:g}c{c:g}"
+              if run_dir is not None else None)
+        ledger = RunLedger(rd)
+        ledger.bind(pt_plan, resume=resume, on_mismatch=on_plan_mismatch)
+        run_measurements(pt_plan, ledger, dev, progress=progress)
+        sub = solve(pt_plan, ledger)
+        extend(sub, dev.chip)
+        anchor.add_operating_point(f, c, sub)
+        if store is not None:
+            publish(anchor, store)   # checkpoint: resume skips this point
+    if store is not None:
+        publish(anchor, store)
+    return anchor
 
 
 def calibrate_fleet(systems: Sequence[str], *, concurrency: int = 4,

@@ -55,7 +55,8 @@ class EnergyMonitor:
 
     def __init__(self, table, window: int = 16,
                  spike_ratio: float = 1.75, min_share: float = 0.04,
-                 step_counts: Optional[OpCounts] = None):
+                 step_counts: Optional[OpCounts] = None,
+                 governor=None):
         predictor = getattr(table, "predictor", None)   # EnergyModel
         if predictor is None and isinstance(table, TablePredictor):
             predictor = table
@@ -68,6 +69,7 @@ class EnergyMonitor:
         self.spike_ratio = spike_ratio
         self.min_share = min_share
         self.step_counts = step_counts
+        self.governor = governor   # SweetSpotGovernor fed by live windows
         self.live = None           # StreamSession, when monitor(live=...)
         self._hist: Dict[str, Deque[float]] = defaultdict(
             lambda: deque(maxlen=window))
@@ -82,7 +84,8 @@ class EnergyMonitor:
                 duration_s: Optional[float] = None,
                 counters: Optional[dict] = None,
                 work_units: float = 1.0,
-                measured_j: Optional[float] = None) -> StepRecord:
+                measured_j: Optional[float] = None,
+                operating_point=None) -> StepRecord:
         if counts is None:
             counts = self.step_counts
             if counts is None:
@@ -91,7 +94,14 @@ class EnergyMonitor:
         if duration_s is None:
             raise ValueError("duration_s is required: the (const+static) "
                              "power term scales with it")
-        pred = self._predictor.predict(counts, duration_s, counters=counters)
+        pred = self._predictor.predict(counts, duration_s, counters=counters,
+                                       operating_point=operating_point)
+        if self.governor is not None and measured_j is not None:
+            point = (operating_point if operating_point is not None
+                     else self.governor.current)
+            if point is not None:
+                self.governor.observe(point, measured_j, duration_s,
+                                      work_units)
         rec = StepRecord(step=step, prediction=pred,
                          joules_per_unit_work=pred.total_j / max(work_units, 1e-12),
                          measured_j=measured_j)

@@ -125,6 +125,19 @@ def traffic_from_counts(counts: OpCounts) -> Dict[str, float]:
     }
 
 
+def _is_point_sequence(op) -> bool:
+    """True when ``op`` is a per-job sequence of operating points rather
+    than one point: a bare ``(freq, cap)`` pair of scalars is one point."""
+    if op is None or hasattr(op, "freq_mhz") or isinstance(op, (str, bytes)):
+        return False
+    if not isinstance(op, Sequence):
+        return False
+    if len(op) == 2 and all(x is None or isinstance(x, (int, float))
+                            for x in op):
+        return False
+    return True
+
+
 _COUNTER_TO_CLASS = {
     "hbm_read_bytes": "hbm.read",
     "hbm_write_bytes": "hbm.write",
@@ -170,23 +183,51 @@ class TablePredictor:
         """Drop the resolved vectors after a mutation of the bound table."""
         self.table.invalidate_cache()
 
+    # -- operating points ---------------------------------------------------
+    @staticmethod
+    def _as_point(op):
+        """Normalize to ``(freq_mhz, cap|None)`` or ``None`` (nominal)."""
+        if op is None:
+            return None
+        from repro.dvfs.interp import as_point
+        return as_point(op)
+
+    def point_powers(self, operating_point=None):
+        """``(p_const, p_static)`` at an operating point (table's own when
+        ``None`` — the bitwise legacy path)."""
+        p = self._as_point(operating_point)
+        if p is None:
+            return self.table.p_const, self.table.p_static
+        rp = self.table.at(p[0], p[1])
+        return rp.p_const, rp.p_static
+
     # -- the kernel ---------------------------------------------------------
     def _predict_rows(self, counts_list: Sequence[OpCounts],
                       durations: Sequence[float],
                       counters_list: Sequence[Optional[Mapping[str, float]]],
-                      mode: str) -> List[Prediction]:
+                      mode: str, point=None) -> List[Prediction]:
         """One vectorized pass over a stacked counts matrix.
 
         Every public prediction path funnels through here — a single
         ``predict`` is a 1-row batch — so batched and per-program totals
         come from literally the same float operations (bitwise equal).
+
+        ``point`` (a normalized ``(freq_mhz, cap|None)``) swaps the energy
+        vectors and powers for the family-resolved ones (``EnergyTable.at``);
+        ``None`` is the nominal anchor — the unchanged legacy expressions.
         """
         n_jobs = len(counts_list)
         n = len(isa.CLASS_INDEX)
         direct_mode = mode == "direct"
         c_mat = counts_matrix(counts_list, n)
         c_mat[:, _COUNTER_IDS] = 0.0          # memory priced from counters
-        e_direct, e_pred = self._vectors(n)
+        if point is None:
+            e_direct, e_pred = self._vectors(n)
+            p_const, p_static = self.table.p_const, self.table.p_static
+        else:
+            rp = self.table.at(point[0], point[1])
+            e_direct, e_pred = rp.vectors(n)
+            p_const, p_static = rp.p_const, rp.p_static
 
         val = c_mat * (e_direct if direct_mode else e_pred)
         dyn = val.sum(axis=1)
@@ -225,8 +266,8 @@ class TablePredictor:
             direct += units * e_direct[ci]
 
         dur = np.asarray(durations, dtype=float)
-        const = self.table.p_const * dur
-        static = self.table.p_static * dur
+        const = p_const * dur
+        static = p_static * dur
         total = const + static + dyn
         coverage = np.ones(n_jobs)
         pos = cover > 0
@@ -242,32 +283,42 @@ class TablePredictor:
     # -- public surface -----------------------------------------------------
     def predict(self, counts: OpCounts, duration_s: float,
                 counters: Optional[Mapping[str, float]] = None,
-                mode: str = "pred") -> Prediction:
-        return self._predict_rows([counts], [duration_s], [counters], mode)[0]
+                mode: str = "pred", operating_point=None) -> Prediction:
+        return self._predict_rows([counts], [duration_s], [counters], mode,
+                                  self._as_point(operating_point))[0]
 
     def predict_batch(self, counts_list: Sequence[OpCounts],
                       durations: Sequence[float],
                       counters_list: Optional[Sequence[
                           Optional[Mapping[str, float]]]] = None,
                       mode: Union[str, Sequence[str]] = "pred",
-                      ) -> List[Prediction]:
+                      operating_point=None) -> List[Prediction]:
         """Batched prediction: one matrix pass instead of N table walks.
 
-        ``mode`` may be a single string or a per-job sequence; mixed-mode
-        batches are split into one pass per mode (order preserved).
+        ``mode`` may be a single string or a per-job sequence; the same goes
+        for ``operating_point`` (an ``OperatingPoint``/tuple/frequency, or a
+        per-job sequence of them).  Mixed batches are split into one pass
+        per distinct (mode, point) pair, order preserved.
         """
         n_jobs = len(counts_list)
         if counters_list is None:
             counters_list = [None] * n_jobs
-        if isinstance(mode, str):
+        if _is_point_sequence(operating_point):
+            pts = [self._as_point(p) for p in operating_point]
+        else:
+            pts = [self._as_point(operating_point)] * n_jobs
+        modes = [mode] * n_jobs if isinstance(mode, str) else list(mode)
+        if isinstance(mode, str) and all(p == pts[0] for p in pts):
             return self._predict_rows(counts_list, durations, counters_list,
-                                      mode)
+                                      mode, pts[0])
         out: List[Optional[Prediction]] = [None] * n_jobs
-        for m in dict.fromkeys(mode):            # unique modes, first-seen order
-            ix = [i for i, mi in enumerate(mode) if mi == m]
+        keys = list(zip(modes, pts))
+        for key in dict.fromkeys(keys):          # unique, first-seen order
+            ix = [i for i, k in enumerate(keys) if k == key]
             preds = self._predict_rows([counts_list[i] for i in ix],
                                        [durations[i] for i in ix],
-                                       [counters_list[i] for i in ix], m)
+                                       [counters_list[i] for i in ix],
+                                       key[0], key[1])
             for i, p in zip(ix, preds):
                 out[i] = p
         return out  # type: ignore[return-value]

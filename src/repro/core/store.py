@@ -10,7 +10,7 @@ fleet and loaded in milliseconds instead of retrained.
 
 Layout: one JSON file per key under the store root, e.g.
 
-    sim-v5e-air__gen0__v2.json
+    sim-v5e-air__gen0__v3.json
 
 plus one *run directory* per key under ``<root>/runs/`` holding the
 incremental measurement records of an in-flight calibration
@@ -20,9 +20,9 @@ completed records instead of re-running minutes of steady-state benchmarks.
 The root defaults to ``$REPRO_TABLE_STORE`` or ``~/.cache/repro/tables``.
 Schema validation happens in ``EnergyTable.load``; files with a stale or
 alien schema are reported (and treated as misses by ``get``), never
-silently deserialized — except v1 files, which carry the same class-name
-payload the array-backed v2 table is built from and are migrated in place
-at load time (``migrate_table_dict``).
+silently deserialized — except older v1/v2 files, which carry the same
+class-name payload the current table is built from and are migrated in
+place at load time (``migrate_table_dict``).
 """
 from __future__ import annotations
 
@@ -42,7 +42,11 @@ _KEY_RE = re.compile(r"^(?P<system>.+)__gen(?P<gen>\d+)__v(?P<ver>\d+)$")
 
 # ---------------------------------------------------------------------------
 # Schema migration.  v1 (pre array-backed table) serialized the same
-# name-keyed payload v2 reads; v2 added the required ``provenance`` record.
+# name-keyed payload v2 reads; v2 added the required ``provenance`` record;
+# v3 added the optional ``operating_points`` frequency family — a v2 table
+# is a v3 table with an empty family (a one-point family at its unrecorded
+# nominal anchor), so the payload migrates without touching the energies
+# and predicts bitwise-identically.
 # ---------------------------------------------------------------------------
 def migrate_table_dict(d: Dict[str, Any]) -> Dict[str, Any]:
     """Migrate a raw serialized-table payload to the current schema.
@@ -53,11 +57,12 @@ def migrate_table_dict(d: Dict[str, Any]) -> Dict[str, Any]:
     version = d.get("schema")
     if version == SCHEMA_VERSION:
         return dict(d)
-    if version == 1:
+    if version in (1, 2):
         out = dict(d)
         out["schema"] = SCHEMA_VERSION
+        out.setdefault("operating_points", [])
         prov = dict(out.get("provenance") or {})
-        prov["migrated_from_schema"] = 1
+        prov["migrated_from_schema"] = version
         out["provenance"] = prov
         return out
     raise TableSchemaError(
@@ -110,7 +115,7 @@ class TableStore:
 
         The migrated table is published back under the current-version path
         (atomic), so the next reader — this process or a fleet node sharing
-        the store — loads v2 directly.
+        the store — loads the current schema directly.
         """
         key = self.key_for(system, isa_gen)
         stem = key.rsplit("__v", 1)[0]

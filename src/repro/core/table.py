@@ -35,13 +35,22 @@ MISS = "miss"
 #   v1  dict-of-dicts dataclass dump (pre array-backed table)
 #   v2  adds the required ``provenance`` record (calibration pipeline
 #       lineage: stages run, donor table, profile fraction, resume count)
+#   v3  adds the frequency axis: an optional ``operating_points`` family of
+#       per-(freq_mhz, power_cap_w) sub-tables calibrated by the DVFS sweep
+#       stages; the top-level fields are the nominal *anchor* point (whose
+#       frequency/cap live in ``meta``), so a v2 table is exactly a v3 table
+#       with an empty family — legacy tables load as a one-point family and
+#       predict bitwise-identically.
 #
-# ``TableStore`` migrates v1 files to v2 at load time (``core.store``).
-SCHEMA_VERSION = 2
+# ``TableStore`` migrates older files in place at load time (``core.store``).
+SCHEMA_VERSION = 3
 
 _REQUIRED_FIELDS = ("system", "p_const", "p_static", "direct")
 _KNOWN_FIELDS = ("system", "p_const", "p_static", "direct", "scaled",
-                 "bucket_means", "meta", "provenance")
+                 "bucket_means", "meta", "provenance", "operating_points")
+# Sub-table fields serialized per operating point (everything but identity).
+_POINT_FIELDS = ("p_const", "p_static", "direct", "scaled", "bucket_means",
+                 "meta")
 
 
 class TableSchemaError(ValueError):
@@ -227,7 +236,8 @@ class EnergyTable:
                  scaled: Optional[Mapping[str, float]] = None,
                  bucket_means: Optional[Mapping[str, float]] = None,
                  meta: Optional[Mapping[str, float]] = None,
-                 provenance: Optional[Mapping[str, Any]] = None):
+                 provenance: Optional[Mapping[str, Any]] = None,
+                 operating_points: Optional[List[Mapping[str, Any]]] = None):
         self.system = system
         self.p_const = float(p_const)
         self.p_static = float(p_static)
@@ -242,10 +252,18 @@ class EnergyTable:
         self.provenance: Dict[str, Any] = dict(provenance or {})
         self._version = 0
         self._vec_cache: Optional[Tuple[int, np.ndarray, np.ndarray]] = None
+        self._points: Dict[Tuple[float, float], "EnergyTable"] = {}
+        self._op_cache: Dict[Any, Tuple[Any, Any]] = {}
         for cls, e in (direct or {}).items():
             self.set_energy(cls, float(e), DIRECT)
         for cls, e in (scaled or {}).items():
             self.set_energy(cls, float(e), SCALED)
+        for entry in (operating_points or []):
+            e = dict(entry)
+            f = float(e.pop("freq_mhz"))
+            c = float(e.pop("power_cap_w"))
+            self.add_operating_point(
+                f, c, EnergyTable(system=self.system, **e))
 
     # -- vector plumbing ----------------------------------------------------
     def _bump(self) -> None:
@@ -331,6 +349,76 @@ class EnergyTable:
                           np.where(ms, self._e_scaled[:want], 0.0))
         return values, md | ms
 
+    # -- frequency family (schema v3) ---------------------------------------
+    @property
+    def points(self) -> Dict[Tuple[float, float], "EnergyTable"]:
+        """Extra calibrated operating points: ``(freq_mhz, cap_w) -> table``.
+
+        The top-level table itself is the *anchor* point (its frequency and
+        cap, when known, live in ``meta['freq_mhz']``/``meta['power_cap_w']``).
+        """
+        return self._points
+
+    def has_family(self) -> bool:
+        return bool(self._points)
+
+    def anchor_point(self) -> Optional[Tuple[float, float]]:
+        """``(freq_mhz, power_cap_w)`` the anchor was calibrated at, or
+        ``None`` for pre-v3 tables that never recorded it."""
+        f = self.meta.get("freq_mhz")
+        if f is None:
+            return None
+        return (float(f), float(self.meta.get("power_cap_w", 0.0)))
+
+    def add_operating_point(self, freq_mhz: float, power_cap_w: float,
+                            table: "EnergyTable") -> None:
+        """Attach a per-point calibration to the family."""
+        if table._points:
+            raise ValueError("operating-point sub-tables cannot nest "
+                             "families of their own")
+        self._points[(float(freq_mhz), float(power_cap_w))] = table
+        self._op_cache.clear()
+        self._bump()
+
+    def family(self) -> List[Tuple[Optional[float], Optional[float],
+                                   "EnergyTable"]]:
+        """All calibrated points incl. the anchor: ``(freq, cap, table)``,
+        sorted by frequency (anchor first when its point is unknown)."""
+        f, c = (self.anchor_point() or (None, None))
+        out: List[Tuple[Optional[float], Optional[float], "EnergyTable"]] = \
+            [(f, c, self)]
+        for (pf, pc), t in self._points.items():
+            out.append((pf, pc, t))
+        out.sort(key=lambda e: (0 if e[0] is None else 1,
+                                0.0 if e[0] is None else e[0]))
+        return out
+
+    def at(self, freq_mhz: float, power_cap_w: Optional[float] = None):
+        """Resolve the family at an operating point (``dvfs.interp``).
+
+        Exact at calibrated anchors — returns that point's own vectors, so
+        predictions there are bitwise-identical to the per-point table.
+        Results are cached and invalidated when any family member mutates.
+        """
+        from repro.dvfs.interp import resolve
+        key = (float(freq_mhz),
+               None if power_cap_w is None else float(power_cap_w))
+        stamp = (self._version,
+                 tuple(t._version for _, t in sorted(self._points.items())))
+        hit = self._op_cache.get(key)
+        if hit is not None and hit[0] == stamp:
+            return hit[1]
+        rp = resolve(self, key[0], key[1])
+        self._op_cache[key] = (stamp, rp)
+        return rp
+
+    def copy(self) -> "EnergyTable":
+        """Deep, independent copy (family included) — the backing store for
+        ``EnergyModel.fork()`` so in-place drift repair stays local."""
+        d = self.to_dict()
+        d.pop("schema", None)
+        return EnergyTable.from_dict(d, origin=f"<copy:{self.system}>")
+
     # -- dict-compatible surface --------------------------------------------
     @property
     def direct(self) -> ClassVecView:
@@ -404,7 +492,8 @@ class EnergyTable:
                 and dict(self.direct.items()) == dict(other.direct.items())
                 and dict(self.scaled.items()) == dict(other.scaled.items())
                 and dict(self._bucket_means) == dict(other._bucket_means)
-                and self.meta == other.meta)
+                and self.meta == other.meta
+                and self._points == other._points)
 
     def __repr__(self) -> str:
         return (f"EnergyTable(system={self.system!r}, "
@@ -423,6 +512,12 @@ class EnergyTable:
             "bucket_means": dict(self._bucket_means),
             "meta": dict(self.meta),
             "provenance": dict(self.provenance),
+            "operating_points": [
+                {"freq_mhz": f, "power_cap_w": c,
+                 **{k: v for k, v in t.to_dict().items()
+                    if k in _POINT_FIELDS}}
+                for (f, c), t in sorted(self._points.items())
+            ],
         }
 
     def save(self, path) -> None:
@@ -433,7 +528,7 @@ class EnergyTable:
     @classmethod
     def from_dict(cls, d: Mapping[str, Any],
                   origin: str = "<dict>") -> "EnergyTable":
-        """Construct from an already schema-checked v2 payload."""
+        """Construct from an already schema-checked v3 payload."""
         unknown = sorted(set(d) - set(_KNOWN_FIELDS))
         if unknown:
             raise TableSchemaError(
@@ -456,5 +551,5 @@ class EnergyTable:
             raise TableSchemaError(
                 f"{path}: schema version {version!r} does not match "
                 f"current version {SCHEMA_VERSION} — retrain or migrate "
-                f"the table (TableStore migrates v1 files automatically)")
+                f"the table (TableStore migrates v1/v2 files automatically)")
         return cls.from_dict(d, origin=str(path))

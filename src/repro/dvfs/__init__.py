@@ -1,0 +1,28 @@
+"""The frequency/DVFS axis: interpolated pricing + sweet-spot governing.
+
+Three layers over the core energy table:
+
+* ``interp`` — resolve a v3 table's calibrated (freq, cap) family at any
+  operating point: exact (bitwise) at calibrated members, piecewise-linear
+  in frequency between them, clamped at the span boundaries;
+* ``governor`` — the closed-loop ``SweetSpotGovernor``: explore the
+  candidate grid, then hold the measured-J/work argmin under a throughput
+  SLA, with hysteresis, drift-pause and workload-shift re-exploration;
+* ``sweep`` — the harnesses: exhaustive ``sweep_operating_points`` (the
+  ground-truth J/work curve) and ``govern_workload`` (the closed loop),
+  both riding per-point ``StreamSession``s.
+"""
+from repro.dvfs.governor import (GovernorConfig, GovernorDecision,
+                                 SweetSpotGovernor)
+from repro.dvfs.interp import (OperatingPointError, ResolvedPoint, as_point,
+                               resolve)
+from repro.dvfs.sweep import (GovernedRound, GovernedRun, SweepResult,
+                              SweepRow, default_sweep_points,
+                              govern_workload, sweep_operating_points)
+
+__all__ = [
+    "GovernorConfig", "GovernorDecision", "SweetSpotGovernor",
+    "OperatingPointError", "ResolvedPoint", "as_point", "resolve",
+    "GovernedRound", "GovernedRun", "SweepResult", "SweepRow",
+    "default_sweep_points", "govern_workload", "sweep_operating_points",
+]

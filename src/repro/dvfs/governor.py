@@ -1,0 +1,277 @@
+"""Closed-loop sweet-spot governor: chase min J/work under a throughput SLA.
+
+Afzal et al. ("Modeling and Chasing the Energy-Efficiency Sweet Spots in
+Modern GPUs", PAPERS.md) show the J/step minimum moves with frequency *and*
+workload mix: dynamic energy falls with V(f)² while the static+constant
+floor is paid for longer at low clocks, so J/step(f) is U-shaped with a
+workload-dependent bottom.  The governor rides the existing
+``StreamSession``/``OnlineAttributor`` loop:
+
+* **explore** — visit every candidate operating point once (prediction-
+  seeded order, best predicted J/work first, so the early windows already
+  run near the sweet spot);
+* **exploit** — hold the measured-EWMA argmin of J/work among candidates
+  meeting the SLA, with hysteresis (a minimum dwell and a minimum relative
+  improvement before switching);
+* **re-explore** — when the measurement at the held point drifts from its
+  own EWMA beyond ``restale_tol`` (a workload-mix shift moved the sweet
+  spot), stale statistics are discarded and exploration restarts;
+* **drift pause** — while the attributor's drift detector is tripped the
+  governor freezes (mirroring the serve scheduler's admission pause):
+  measurements under a drifting table would poison the statistics, and the
+  repair path must see a stable operating point.
+
+Frequency changes apply at session/phase boundaries (the simulated device
+executes a whole program per session), which is also where real serving
+stacks prefer to switch: mid-batch DVFS transitions stall the pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.dvfs.interp import as_point
+
+
+@dataclasses.dataclass
+class GovernorConfig:
+    """Tuning knobs for :class:`SweetSpotGovernor`."""
+
+    sla_work_per_s: Optional[float] = None  # throughput floor (tokens/s,
+                                            # steps/s — any work unit/s)
+    hysteresis_windows: int = 2     # min observations at the held point
+                                    # before a switch is considered
+    min_improvement: float = 0.02   # relative J/work gain required to move
+    ewma_alpha: float = 0.35        # weight of the newest observation
+    restale_tol: float = 0.25       # |obs/ewma - 1| that re-opens exploration
+    sla_margin: float = 0.0         # fractional slack on the SLA test
+
+
+@dataclasses.dataclass
+class GovernorDecision:
+    """One ``propose()`` outcome, kept in the decision history."""
+
+    index: int
+    freq_mhz: float
+    power_cap_w: Optional[float]
+    reason: str                     # explore|hold|switch|sla|drift-pause|
+                                    # re-explore
+    j_per_work: Optional[float] = None
+    work_per_s: Optional[float] = None
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"index": self.index, "freq_mhz": self.freq_mhz,
+                "power_cap_w": self.power_cap_w, "reason": self.reason,
+                "j_per_work": self.j_per_work,
+                "work_per_s": self.work_per_s}
+
+
+class _PointStat:
+    """EWMA of measured J/work and work/s at one operating point."""
+
+    __slots__ = ("j_per_work", "work_per_s", "n", "last_j_per_work")
+
+    def __init__(self):
+        self.j_per_work: Optional[float] = None
+        self.work_per_s: Optional[float] = None
+        self.last_j_per_work: Optional[float] = None
+        self.n = 0
+
+    def update(self, j_per_work: float, work_per_s: float,
+               alpha: float) -> None:
+        if self.j_per_work is None:
+            self.j_per_work = j_per_work
+            self.work_per_s = work_per_s
+        else:
+            self.j_per_work += alpha * (j_per_work - self.j_per_work)
+            self.work_per_s += alpha * (work_per_s - self.work_per_s)
+        self.last_j_per_work = j_per_work
+        self.n += 1
+
+    def reset(self) -> None:
+        self.j_per_work = None
+        self.work_per_s = None
+        self.last_j_per_work = None
+        self.n = 0
+
+
+class SweetSpotGovernor:
+    """Pick the operating point minimizing measured J/work under an SLA.
+
+    ``candidates`` is the calibrated grid (``(freq, cap)`` tuples or
+    ``OperatingPoint``s) the governor may choose from — keep it to points
+    the table family covers, so session predictions track the measurement
+    and the drift detector stays calm.  ``drift_flag`` is the same callable
+    the serve scheduler uses (``OnlineAttributor``-backed); while it returns
+    True the governor holds still.
+    """
+
+    def __init__(self, candidates: Sequence, config: Optional[GovernorConfig]
+                 = None, *, drift_flag: Optional[Callable[[], bool]] = None,
+                 predictor: Optional[Callable] = None):
+        pts = [as_point(c) for c in candidates]
+        if not pts:
+            raise ValueError("governor needs at least one candidate point")
+        # de-dup, keep caller order
+        seen = set()
+        self.candidates: List[Tuple[float, Optional[float]]] = []
+        for p in pts:
+            if p not in seen:
+                seen.add(p)
+                self.candidates.append(p)
+        self.config = config or GovernorConfig()
+        self.drift_flag = drift_flag
+        self._stats: Dict[Tuple[float, Optional[float]], _PointStat] = {
+            p: _PointStat() for p in self.candidates}
+        self._current: Optional[Tuple[float, Optional[float]]] = None
+        self._dwell = 0                     # observations since last switch
+        self._stale = False                 # workload shift detected
+        self.decisions: List[GovernorDecision] = []
+        self._explore_order = list(self.candidates)
+        if predictor is not None:
+            self.seed_exploration(predictor)
+
+    # -- seeding ------------------------------------------------------------
+    def seed_exploration(self, predict_j_per_work: Callable) -> None:
+        """Order exploration by predicted J/work (best first) so the early
+        windows already run near the predicted sweet spot.
+
+        ``predict_j_per_work(point) -> float`` — typically a closure over
+        ``EnergyModel.predict(..., operating_point=point)``.
+        """
+        scored = []
+        for p in self.candidates:
+            try:
+                scored.append((float(predict_j_per_work(p)), p))
+            except Exception:
+                scored.append((float("inf"), p))
+        scored.sort(key=lambda e: e[0])
+        self._explore_order = [p for _, p in scored]
+
+    # -- observation --------------------------------------------------------
+    def observe(self, point, measured_j: float, duration_s: float,
+                work_units: float) -> None:
+        """Feed one attributed window measured at ``point``."""
+        p = as_point(point)
+        stat = self._stats.get(p)
+        if stat is None or work_units <= 0.0 or duration_s <= 0.0:
+            return
+        j_per_work = measured_j / work_units
+        work_per_s = work_units / duration_s
+        prev = stat.j_per_work
+        stat.update(j_per_work, work_per_s, self.config.ewma_alpha)
+        if p == self._current:
+            self._dwell += 1
+            # workload-mix shift: the point no longer measures like its own
+            # history -> statistics at *other* points are stale too
+            if (prev is not None and prev > 0.0
+                    and abs(j_per_work / prev - 1.0)
+                    > self.config.restale_tol):
+                for q, s in self._stats.items():
+                    if q != p:
+                        s.reset()
+                stat.reset()
+                stat.update(j_per_work, work_per_s, self.config.ewma_alpha)
+                self._stale = True
+
+    # -- decision -----------------------------------------------------------
+    def _eligible(self) -> List[Tuple[float, Optional[float]]]:
+        sla = self.config.sla_work_per_s
+        if sla is None:
+            return [p for p in self.candidates if self._stats[p].n > 0]
+        floor = sla * (1.0 - self.config.sla_margin)
+        return [p for p in self.candidates
+                if self._stats[p].n > 0
+                and (self._stats[p].work_per_s or 0.0) >= floor]
+
+    def propose(self) -> Tuple[float, Optional[float]]:
+        """The operating point the next session/phase should run at."""
+        cfg = self.config
+        if self.drift_flag is not None and self.drift_flag():
+            p = self._current or self._explore_order[0]
+            self._decide(p, "drift-pause")
+            return p
+        unexplored = [p for p in self._explore_order
+                      if self._stats[p].n == 0]
+        if unexplored:
+            reason = "re-explore" if self._stale else "explore"
+            self._stale = False
+            p = unexplored[0]
+            self._current = p
+            self._dwell = 0
+            self._decide(p, reason)
+            return p
+        eligible = self._eligible()
+        if not eligible:
+            # nothing meets the SLA: run the fastest point we measured
+            p = max(self.candidates,
+                    key=lambda q: self._stats[q].work_per_s or 0.0)
+            if p != self._current:
+                self._current, self._dwell = p, 0
+            self._decide(p, "sla")
+            return p
+        best = min(eligible, key=lambda q: self._stats[q].j_per_work)
+        cur = self._current
+        if cur is None or cur not in self._stats:
+            self._current, self._dwell = best, 0
+            self._decide(best, "switch")
+            return best
+        if best != cur and self._dwell >= cfg.hysteresis_windows:
+            cur_j = self._stats[cur].j_per_work
+            best_j = self._stats[best].j_per_work
+            if (cur_j is not None and best_j is not None and cur_j > 0.0
+                    and (cur_j - best_j) / cur_j >= cfg.min_improvement):
+                self._current, self._dwell = best, 0
+                self._decide(best, "switch")
+                return best
+        self._decide(cur, "hold")
+        return cur
+
+    def _decide(self, p: Tuple[float, Optional[float]], reason: str) -> None:
+        stat = self._stats.get(p)
+        self.decisions.append(GovernorDecision(
+            index=len(self.decisions), freq_mhz=p[0], power_cap_w=p[1],
+            reason=reason,
+            j_per_work=None if stat is None else stat.j_per_work,
+            work_per_s=None if stat is None else stat.work_per_s))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def current(self) -> Optional[Tuple[float, Optional[float]]]:
+        return self._current
+
+    @property
+    def converged(self) -> bool:
+        """Every candidate measured and the governor is holding."""
+        if any(self._stats[p].n == 0 for p in self.candidates):
+            return False
+        return bool(self.decisions) and self.decisions[-1].reason in (
+            "hold", "switch")
+
+    def best_measured(self) -> Optional[Tuple[float, Optional[float]]]:
+        eligible = self._eligible()
+        if not eligible:
+            return None
+        return min(eligible, key=lambda q: self._stats[q].j_per_work)
+
+    def stats(self) -> Dict[Tuple[float, Optional[float]], Dict[str, float]]:
+        return {p: {"j_per_work": s.j_per_work, "work_per_s": s.work_per_s,
+                    "n": s.n}
+                for p, s in self._stats.items()}
+
+    def snapshot(self, history: int = 16) -> Dict[str, object]:
+        """JSON-safe state for the ``TelemetryService`` snapshot."""
+        return {
+            "current": None if self._current is None else
+                {"freq_mhz": self._current[0],
+                 "power_cap_w": self._current[1]},
+            "converged": self.converged,
+            "sla_work_per_s": self.config.sla_work_per_s,
+            "candidates": [
+                {"freq_mhz": p[0], "power_cap_w": p[1],
+                 "j_per_work": self._stats[p].j_per_work,
+                 "work_per_s": self._stats[p].work_per_s,
+                 "n": self._stats[p].n}
+                for p in self.candidates],
+            "decisions": [d.snapshot() for d in self.decisions[-history:]],
+        }

@@ -1,0 +1,143 @@
+"""Operating-point resolution over an ``EnergyTable`` frequency family.
+
+A v3 table is a family of per-(freq_mhz, power_cap_w) calibrations: the
+top-level *anchor* plus the ``operating_points`` sub-tables the DVFS sweep
+stages measured.  ``resolve`` turns that family plus a requested operating
+point into a :class:`ResolvedPoint` — the powers and class-energy vectors
+the predictor prices with.
+
+Exactness contract (the acceptance criterion of the frequency axis): when
+the requested point *is* a calibrated member, the resolved point hands back
+that member's own ``p_const``/``p_static`` floats and ``energy_vectors``
+arrays with **no arithmetic applied**, so predictions there are
+bitwise-identical to predicting through the per-point table directly.
+Between members, class energies and powers interpolate piecewise-linearly
+in frequency (dynamic energy is smooth in V(f)² over the short spans of a
+calibration grid; the paper's sweet-spot curvature comes from the
+energy×time product, not from per-class kinks).
+
+Interpolation happens within the group of members sharing the requested
+power cap (nearest calibrated cap when no exact group exists — caps change
+throttle behaviour, not per-op energy, so cross-cap blending is the wrong
+axis).  Queries outside the calibrated span clamp to the boundary member:
+extrapolating leakage beyond the measured voltage range is guesswork, and a
+clamped answer keeps the governor inside calibrated territory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class OperatingPointError(ValueError):
+    """The family cannot answer for the requested operating point."""
+
+
+def as_point(op) -> Optional[Tuple[float, Optional[float]]]:
+    """Normalize an operating-point argument to ``(freq_mhz, cap_w|None)``.
+
+    Accepts an ``OperatingPoint`` (or any object with ``freq_mhz``), a
+    ``(freq, cap)`` tuple/list, a bare frequency in MHz, or ``None``.
+    """
+    if op is None:
+        return None
+    f = getattr(op, "freq_mhz", None)
+    if f is not None:
+        cap = getattr(op, "power_cap_w", None)
+        return (float(f), None if cap is None else float(cap))
+    if isinstance(op, (tuple, list)):
+        f, cap = op
+        return (float(f), None if cap is None else float(cap))
+    return (float(op), None)
+
+
+@dataclasses.dataclass
+class ResolvedPoint:
+    """A family resolved at one operating point.
+
+    ``exact`` means the point is a calibrated member (``lo is hi``); the
+    vectors/powers are then the member's own, untouched.  Otherwise they are
+    the ``w``-blend of ``lo`` and ``hi`` (``w`` = weight of ``hi``).
+    """
+
+    freq_mhz: float
+    power_cap_w: Optional[float]
+    lo: object                      # EnergyTable
+    hi: object                      # EnergyTable
+    w: float
+    exact: bool
+
+    @property
+    def p_const(self) -> float:
+        if self.exact:
+            return self.lo.p_const
+        return self.lo.p_const * (1.0 - self.w) + self.hi.p_const * self.w
+
+    @property
+    def p_static(self) -> float:
+        if self.exact:
+            return self.lo.p_static
+        return self.lo.p_static * (1.0 - self.w) + self.hi.p_static * self.w
+
+    def vectors(self, n: Optional[int] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(e_direct, e_pred)`` over the first ``n`` class ids."""
+        if self.exact:
+            return self.lo.energy_vectors(n)
+        ed0, ep0 = self.lo.energy_vectors(n)
+        ed1, ep1 = self.hi.energy_vectors(n)
+        w = self.w
+        return ed0 * (1.0 - w) + ed1 * w, ep0 * (1.0 - w) + ep1 * w
+
+
+def resolve(table, freq_mhz: float,
+            power_cap_w: Optional[float] = None) -> ResolvedPoint:
+    """Resolve ``table``'s family at ``(freq_mhz, power_cap_w)``.
+
+    Callers normally go through ``EnergyTable.at`` (which caches).  A
+    single-member family — every pre-v3 table — resolves to its only member
+    for *any* query: a one-point family prices the whole frequency range at
+    its anchor, exactly the legacy behaviour.
+    """
+    fam = table.family()
+    if len(fam) == 1:
+        return ResolvedPoint(freq_mhz=freq_mhz, power_cap_w=power_cap_w,
+                             lo=fam[0][2], hi=fam[0][2], w=0.0, exact=True)
+    # exact member match first — the bitwise path
+    for f, c, t in fam:
+        if f == freq_mhz and (power_cap_w is None or c == power_cap_w):
+            return ResolvedPoint(freq_mhz=freq_mhz, power_cap_w=c,
+                                 lo=t, hi=t, w=0.0, exact=True)
+    # group by cap: exact cap group, else the nearest calibrated cap
+    known = [(f, c, t) for f, c, t in fam if f is not None]
+    if not known:
+        raise OperatingPointError(
+            f"{table.system}: family has no frequency-tagged members")
+    caps = sorted({c for _, c, _ in known if c is not None})
+    group = known
+    if power_cap_w is not None and caps:
+        nearest = min(caps, key=lambda c: abs(c - power_cap_w))
+        group = [(f, c, t) for f, c, t in known if c == nearest] or known
+    elif caps:
+        # default cap: the anchor's cap when known, else the highest
+        anchor = table.anchor_point()
+        cap = anchor[1] if anchor else caps[-1]
+        group = [(f, c, t) for f, c, t in known if c == cap] or known
+    group = sorted(group, key=lambda e: e[0])
+    freqs = [f for f, _, _ in group]
+    if freq_mhz <= freqs[0]:
+        f, c, t = group[0]
+        return ResolvedPoint(freq_mhz=freq_mhz, power_cap_w=c,
+                             lo=t, hi=t, w=0.0, exact=True)
+    if freq_mhz >= freqs[-1]:
+        f, c, t = group[-1]
+        return ResolvedPoint(freq_mhz=freq_mhz, power_cap_w=c,
+                             lo=t, hi=t, w=0.0, exact=True)
+    hi_i = int(np.searchsorted(np.asarray(freqs), freq_mhz))
+    lo_f, lo_c, lo_t = group[hi_i - 1]
+    hi_f, hi_c, hi_t = group[hi_i]
+    w = (freq_mhz - lo_f) / (hi_f - lo_f)
+    return ResolvedPoint(freq_mhz=freq_mhz, power_cap_w=lo_c,
+                         lo=lo_t, hi=hi_t, w=float(w), exact=False)

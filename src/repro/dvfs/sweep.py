@@ -1,0 +1,235 @@
+"""Frequency sweeps and governed runs over the streaming pipeline.
+
+``sweep_operating_points`` is the exhaustive instrument: run the same
+workload once per candidate (freq_mhz, power_cap_w) point, each through its
+own ``StreamSession`` (device set to the point, windows attributed at the
+point), and tabulate measured J/work against work/s.  The J/work curve is
+the paper-adjacent sweet-spot observable: dynamic energy falls with V(f)²
+while the constant+static floor is paid for longer at low clocks, so the
+product bottoms out at a workload-dependent frequency (Afzal et al.).
+
+``govern_workload`` is the closed loop around the same primitive: a
+``SweetSpotGovernor`` proposes the next point, one session measures it,
+the measured J/work feeds back, and the trace records every decision — the
+harness behind ``EnergyModel.govern`` and the dashboard example.
+
+Sweeps run with ``recalibrate=None``: exploring off-anchor points must
+never trigger a drift "repair" of the shared table (off-nominal residuals
+are the physics being measured, not drift).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.dvfs.interp import as_point
+
+
+def default_sweep_points(device, n: int = 4,
+                         power_cap_w: Optional[float] = None,
+                         ) -> List[Tuple[float, float]]:
+    """``n`` evenly spaced frequencies across the device's V/f range
+    (nominal always included) at one power cap (default: the chip TDP)."""
+    cap = float(power_cap_w) if power_cap_w is not None \
+        else float(device.chip.tdp_watts)
+    return [(f, cap) for f in device.vf.grid(n)]
+
+
+@dataclasses.dataclass
+class SweepRow:
+    """One operating point's measured outcome."""
+
+    freq_mhz: float
+    power_cap_w: Optional[float]
+    measured_j: float          # summed over the attributed step windows
+    predicted_j: float
+    duration_s: float          # summed window durations
+    work_units: float          # summed work (tokens, steps, ...)
+    mape_pct: float
+
+    @property
+    def j_per_work(self) -> float:
+        return self.measured_j / max(self.work_units, 1e-12)
+
+    @property
+    def work_per_s(self) -> float:
+        return self.work_units / max(self.duration_s, 1e-12)
+
+    def snapshot(self) -> dict:
+        return {"freq_mhz": self.freq_mhz, "power_cap_w": self.power_cap_w,
+                "measured_j": self.measured_j,
+                "predicted_j": self.predicted_j,
+                "duration_s": self.duration_s,
+                "work_units": self.work_units,
+                "j_per_work": self.j_per_work,
+                "work_per_s": self.work_per_s,
+                "mape_pct": self.mape_pct}
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """The J/work-vs-frequency curve one sweep measured."""
+
+    workload: str
+    rows: List[SweepRow]
+
+    def best(self, sla_work_per_s: Optional[float] = None
+             ) -> Optional[SweepRow]:
+        """The measured sweet spot: min J/work, optionally under an SLA."""
+        rows = self.rows
+        if sla_work_per_s is not None:
+            rows = [r for r in rows if r.work_per_s >= sla_work_per_s]
+        if not rows:
+            return None
+        return min(rows, key=lambda r: r.j_per_work)
+
+    def snapshot(self) -> dict:
+        best = self.best()
+        return {"workload": self.workload,
+                "rows": [r.snapshot() for r in self.rows],
+                "best": None if best is None else best.snapshot()}
+
+
+def _run_point(model, counts, point, *, steps: int, work_units: float,
+               name: str, min_duration_s: float) -> SweepRow:
+    """One workload run at one point, measured through a StreamSession."""
+    freq, cap = point
+    session = model.stream(counts, name=name, recalibrate=None,
+                           min_duration_s=min_duration_s,
+                           operating_point=point)
+    for i in range(steps):
+        session.step(i, work_units=work_units)
+    session.finish()
+    atts = session.attributions
+    group = session.iterations_per_step
+    return SweepRow(
+        freq_mhz=freq, power_cap_w=cap,
+        measured_j=float(sum(a.measured_j for a in atts)),
+        predicted_j=float(sum(a.predicted_j for a in atts)),
+        duration_s=float(sum(a.duration_s for a in atts)),
+        work_units=work_units * steps * group,
+        mape_pct=session.summary.mape_pct)
+
+
+def sweep_operating_points(model, counts, points=None, *, steps: int = 6,
+                           work_units: float = 1.0,
+                           min_duration_s: float = 8.0,
+                           name: str = "sweep",
+                           restore: bool = True) -> SweepResult:
+    """Measure J/work and work/s at every candidate operating point.
+
+    ``model`` is an ``EnergyModel`` (anything with ``stream`` + ``device``);
+    ``counts`` the per-step op counts; ``work_units`` the work one logical
+    step represents (tokens, samples).  ``restore=True`` puts the device
+    back at its pre-sweep operating point afterwards.
+    """
+    dev = model.device
+    if points is None:
+        points = default_sweep_points(dev)
+    before = dev.operating_point
+    rows: List[SweepRow] = []
+    try:
+        for op in points:
+            p = as_point(op)
+            rows.append(_run_point(
+                model, counts, p, steps=steps, work_units=work_units,
+                name=f"{name}@f{p[0]:g}", min_duration_s=min_duration_s))
+    finally:
+        if restore:
+            dev.set_operating_point(before)
+    return SweepResult(workload=name, rows=rows)
+
+
+@dataclasses.dataclass
+class GovernedRound:
+    """One closed-loop round: the proposal and what it measured."""
+
+    round: int
+    freq_mhz: float
+    power_cap_w: Optional[float]
+    reason: str
+    measured_j: float
+    duration_s: float
+    work_units: float
+
+    @property
+    def j_per_work(self) -> float:
+        return self.measured_j / max(self.work_units, 1e-12)
+
+    @property
+    def work_per_s(self) -> float:
+        return self.work_units / max(self.duration_s, 1e-12)
+
+    def snapshot(self) -> dict:
+        return {"round": self.round, "freq_mhz": self.freq_mhz,
+                "power_cap_w": self.power_cap_w, "reason": self.reason,
+                "measured_j": self.measured_j,
+                "duration_s": self.duration_s,
+                "work_units": self.work_units,
+                "j_per_work": self.j_per_work,
+                "work_per_s": self.work_per_s}
+
+
+@dataclasses.dataclass
+class GovernedRun:
+    """The trace of a governed workload: rounds + the governor's verdict."""
+
+    workload: str
+    rounds: List[GovernedRound]
+    governor: object             # SweetSpotGovernor
+
+    @property
+    def final_point(self) -> Optional[Tuple[float, Optional[float]]]:
+        return self.governor.current
+
+    @property
+    def converged(self) -> bool:
+        return self.governor.converged
+
+    def snapshot(self) -> dict:
+        return {"workload": self.workload,
+                "rounds": [r.snapshot() for r in self.rounds],
+                "governor": self.governor.snapshot()}
+
+
+def govern_workload(model, counts, governor, *, rounds: int = 12,
+                    steps: int = 4, work_units: float = 1.0,
+                    min_duration_s: float = 8.0,
+                    name: str = "govern",
+                    restore: bool = True) -> GovernedRun:
+    """Run the closed loop for ``rounds`` phases.
+
+    Each round the governor proposes a point (explore order seeded from
+    this model's *predicted* J/work over the candidates), one streaming
+    session runs the workload there, and the measured J/work feeds back.
+    Frequency changes therefore land exactly at session boundaries — the
+    serving stack's phase-boundary DVFS posture.
+    """
+    dev = model.device
+    if not governor.decisions:          # fresh governor: seed exploration
+        def _predicted_j_per_work(p):
+            dur = steps * min_duration_s
+            pred = model.predict(counts.scaled(steps), dur,
+                                 operating_point=p)
+            return pred.total_j / max(work_units * steps, 1e-12)
+        governor.seed_exploration(_predicted_j_per_work)
+    before = dev.operating_point
+    out: List[GovernedRound] = []
+    try:
+        for r in range(rounds):
+            point = governor.propose()
+            reason = governor.decisions[-1].reason
+            row = _run_point(model, counts, point, steps=steps,
+                             work_units=work_units,
+                             name=f"{name}#{r}@f{point[0]:g}",
+                             min_duration_s=min_duration_s)
+            governor.observe(point, row.measured_j, row.duration_s,
+                             row.work_units)
+            out.append(GovernedRound(
+                round=r, freq_mhz=point[0], power_cap_w=point[1],
+                reason=reason, measured_j=row.measured_j,
+                duration_s=row.duration_s, work_units=row.work_units))
+    finally:
+        if restore:
+            dev.set_operating_point(before)
+    return GovernedRun(workload=name, rounds=out, governor=governor)

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import isa
 from repro.core.opcount import OpCounts
-from repro.hw.spec import ChipSpec
+from repro.hw.spec import ChipSpec, VfCurve
 
 # Canonical class ids used on the timing/energy hot paths.
 _CTL_LOOP_ID = isa.CLASS_INDEX.intern("ctl.loop")
@@ -58,6 +58,22 @@ class SensorTrace:
         return float(self.times_s[-1] - self.times_s[0]) if len(self.times_s) > 1 else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """A DVFS setting the device can be pinned to: (core MHz, power cap W)."""
+
+    freq_mhz: float
+    power_cap_w: float
+
+    @property
+    def tag(self) -> str:
+        """Filesystem/spec-id-safe identifier for this point."""
+        return f"f{self.freq_mhz:g}c{self.power_cap_w:g}"
+
+    def as_tuple(self):
+        return (self.freq_mhz, self.power_cap_w)
+
+
 @dataclasses.dataclass
 class RunRecord:
     """Result of executing one program on the device."""
@@ -68,6 +84,8 @@ class RunRecord:
     trace: SensorTrace
     energy_counter_j: float            # NVML-style total-energy counter
     counters: Dict[str, float]         # profiler counters (true, per run)
+    freq_mhz: float = 0.0              # operating point during the run
+    power_cap_w: float = 0.0
 
     @property
     def avg_power_w(self) -> float:
@@ -190,6 +208,19 @@ class _HiddenModel:
         self.throttle_knee = 0.92
         self.throttle_energy_mult = 1.09
         self.throttle_time_mult = 1.18
+        # DVFS truth: per-part binning makes the real exponents deviate from
+        # the textbook CV²f / V-leakage laws — a counts-based model can only
+        # learn them by calibrating at multiple points.  All scale factors
+        # are *exactly* 1.0 at the nominal operating point, so the legacy
+        # single-point behaviour is bit-for-bit unchanged.
+        self.dyn_v_exp = 2.0 + 0.16 * (_stable_unit(seed, "vf:dyn") - 0.5)
+        self.static_v_exp = 2.3 + 0.8 * _stable_unit(seed, "vf:leak")
+        self.const_v_exp = 0.8 + 0.4 * _stable_unit(seed, "vf:const")
+        self.e_dyn_scale = 1.0       # dynamic energy ~ V^dyn_v_exp
+        self.t_core_scale = 1.0      # MXU/VPU/sequencer time ~ 1/f
+        self.static_v_scale = 1.0    # leakage ~ V^static_v_exp
+        self.const_v_scale = 1.0     # constant floor, weak V dependence
+        self.cap_w = chip.tdp_watts  # effective throttle envelope
         # Private fusion/residency behaviour (XLA fusion + VMEM capacity).
         self.f_hbm_boundary = min(0.95, 0.88 * (0.95 + 0.1 * _stable_unit(seed, "fb")))
         self.fused_leak = 0.01        # fused traffic that still spills
@@ -227,6 +258,27 @@ class _HiddenModel:
         self._is_vpu_like = np.zeros(0, bool)
         self._is_ici = np.zeros(0, bool)
         self._is_dcn = np.zeros(0, bool)
+
+    # -- DVFS truth ----------------------------------------------------------
+    def set_operating_point(self, vf: VfCurve, freq_mhz: float,
+                            power_cap_w: float) -> None:
+        """Re-derive the hidden DVFS scale factors for an operating point.
+
+        At ``(vf.f_nom_mhz, tdp)`` every factor is exactly 1.0 (``1.0**x``
+        and ``x/x`` are exact for finite floats), so pinning the nominal
+        point is bitwise indistinguishable from never touching DVFS.
+        """
+        f_ratio = freq_mhz / vf.f_nom_mhz
+        v_ratio = vf.voltage(freq_mhz) / vf.v_nom
+        self.e_dyn_scale = v_ratio ** self.dyn_v_exp
+        self.t_core_scale = 1.0 / f_ratio
+        self.static_v_scale = v_ratio ** self.static_v_exp
+        self.const_v_scale = v_ratio ** self.const_v_exp
+        self.cap_w = min(power_cap_w, self.chip.tdp_watts)
+
+    @property
+    def p_const_eff(self) -> float:
+        return self.p_const * self.const_v_scale
 
     # -- per-class truth with on-demand coefficients for unknown classes ----
     def coeff(self, cls: str) -> float:
@@ -319,8 +371,9 @@ class _HiddenModel:
                             if c.mxu_macs_total > 0 else 1.0)
             eff = (frac_aligned * self.mxu_eff_aligned
                    + (1 - frac_aligned) * self.mxu_eff_misaligned)
-            t_mxu = float(v @ self._mxu_inv_rate[:n]) / max(eff, 1e-3)
-            t_vpu = float(v @ self._time_w[:n])
+            t_mxu = (float(v @ self._mxu_inv_rate[:n])
+                     / max(eff, 1e-3)) * self.t_core_scale
+            t_vpu = float(v @ self._time_w[:n]) * self.t_core_scale
             ici_bytes = float(v[self._is_ici[:n]].sum())
             dcn_bytes = float(v[self._is_dcn[:n]].sum())
             loop_units = float(v[_CTL_LOOP_ID]) if n > _CTL_LOOP_ID else 0.0
@@ -331,7 +384,7 @@ class _HiddenModel:
         crit = max(parts) if parts else 0.0
         busy = crit + self.serial_frac * (sum(parts) - crit)
         gap = (c.dispatch_count * self.dispatch_lat_s
-               + loop_units * self.loop_lat_s)
+               + loop_units * self.loop_lat_s) * self.t_core_scale
         t_iter = busy + gap
         util = busy / max(t_iter, 1e-12)
         return t_iter, t_mxu, t_vpu, t_hbm, t_ici + t_dcn, util
@@ -361,9 +414,12 @@ class _HiddenModel:
         e = 0.0
         if n:
             self._class_vectors(n)
+            # Core-rail dynamic energy scales with V² (MXU/VPU/move); the
+            # off-chip HBM rail and the ICI/DCN serdes do not follow the
+            # core DVFS rail.
             factor = np.ones(n)
-            factor[self._is_mxu[:n]] = mxu_mult * toggle
-            factor[self._is_vpu_like[:n]] = vpu_mult * toggle
+            factor[self._is_mxu[:n]] = mxu_mult * toggle * self.e_dyn_scale
+            factor[self._is_vpu_like[:n]] = vpu_mult * toggle * self.e_dyn_scale
             e = float(np.sum(v * self._coeff_vec[:n] * factor))
         hbm_r, hbm_w, vmem_r, vmem_w = self.traffic(c)
         row_mult = 1.0 + self.random_access_mult * self.random_access_frac(c)
@@ -371,14 +427,16 @@ class _HiddenModel:
         row_mult *= 0.85 + 0.30 * _stable_unit(self.seed, "mem:" + context)
         e += (hbm_r * self.coeff("hbm.read")
               + hbm_w * self.coeff("hbm.write")) * row_mult
-        e += vmem_r * self.coeff("vmem.read") + vmem_w * self.coeff("vmem.write")
+        e += (vmem_r * self.coeff("vmem.read")
+              + vmem_w * self.coeff("vmem.write")) * self.e_dyn_scale
         return e
 
     def static_power(self, util: float, temp_c: float,
                      mix_mult: float = 1.0) -> float:
         leak = 1.0 + self.leak_per_k * (temp_c - self.t_ref)
         u = 1.0 + self.static_util_slope * (util - 1.0)
-        return self.p_static_full * u * mix_mult * max(leak, 0.5)
+        return (self.p_static_full * u * mix_mult * max(leak, 0.5)
+                * self.static_v_scale)
 
     def static_mix(self, c: OpCounts, context: str = "") -> float:
         """Unit-mix clock-gating wobble on static power (structural part)
@@ -398,13 +456,71 @@ class SimDevice:
     """One simulated accelerator of a given system configuration."""
 
     def __init__(self, chip: ChipSpec, cooling: str = "air", seed: int = 0,
-                 name: Optional[str] = None, coeff_scale: float = 1.0):
+                 name: Optional[str] = None, coeff_scale: float = 1.0,
+                 vf_model: Optional[VfCurve] = None):
         self.chip = chip
         self.cooling = cooling
         self.seed = seed
         self.name = name or f"sim-{chip.name}-{cooling}"
+        self.vf = vf_model or chip.vf_curve
         self._hidden = _HiddenModel(chip, cooling, seed, coeff_scale)
+        self._nominal = OperatingPoint(self.vf.f_nom_mhz, chip.tdp_watts)
+        self._point = self._nominal
         self._rng = np.random.default_rng(seed ^ 0x5EED)
+
+    # -- DVFS control (the knobs a real driver exposes) -----------------------
+    @property
+    def operating_point(self) -> OperatingPoint:
+        return self._point
+
+    @property
+    def nominal_point(self) -> OperatingPoint:
+        return self._nominal
+
+    def set_frequency(self, freq_mhz: float) -> OperatingPoint:
+        """Pin the core clock; keeps the current power cap."""
+        return self.set_operating_point(freq_mhz, self._point.power_cap_w)
+
+    def set_power_cap(self, watts: float) -> OperatingPoint:
+        """Set the software power cap; keeps the current frequency."""
+        return self.set_operating_point(self._point.freq_mhz, watts)
+
+    def set_operating_point(self, point, power_cap_w: Optional[float] = None
+                            ) -> OperatingPoint:
+        """Pin the device to an operating point.
+
+        ``point`` may be an :class:`OperatingPoint`, a ``(freq_mhz, cap_w)``
+        tuple, or a bare frequency in MHz (cap then from ``power_cap_w`` or
+        the chip TDP).  Pinning the nominal point is bitwise equivalent to a
+        device that never touched DVFS.
+        """
+        if hasattr(point, "freq_mhz"):
+            freq = float(point.freq_mhz)
+            cap = getattr(point, "power_cap_w", None)
+        elif isinstance(point, (tuple, list)):
+            freq, cap = point
+            freq = float(freq)
+        else:
+            freq, cap = float(point), None
+        if power_cap_w is not None:
+            cap = power_cap_w
+        cap = self.chip.tdp_watts if cap is None else float(cap)
+        vf = self.vf
+        if not (vf.f_min_mhz <= freq <= vf.f_max_mhz):
+            raise ValueError(
+                f"{self.name}: frequency {freq:g} MHz outside the DVFS "
+                f"range [{vf.f_min_mhz:g}, {vf.f_max_mhz:g}]")
+        if cap <= self.chip.idle_watts:
+            raise ValueError(
+                f"{self.name}: power cap {cap:g} W is below the idle floor "
+                f"({self.chip.idle_watts:g} W)")
+        cap = min(cap, self.chip.tdp_watts)
+        self._point = OperatingPoint(freq, cap)
+        self._hidden.set_operating_point(vf, freq, cap)
+        return self._point
+
+    def reset_operating_point(self) -> OperatingPoint:
+        return self.set_operating_point(self._nominal)
 
     def noise_rng(self, noise_key: Optional[str]) -> np.random.Generator:
         """Sensor-noise stream for a run.
@@ -439,11 +555,11 @@ class SimDevice:
             u = util * ramp
             dyn_leak = 1.0 + h.dyn_leak_per_k * (t_cur - h.t_ref)
             p_s = (h.static_power(u, t_cur, static_mix) if u > 0 else 0.0)
-            p = h.p_const + p_s + p_dyn * ramp * dyn_leak
+            p = h.p_const_eff + p_s + p_dyn * ramp * dyn_leak
             t_ss = h.t_amb + h.r_th * p
             t_cur += (t_ss - t_cur) * (dt / h.tau_s)
             temp[i] = t_cur
-            power_true[i] = (h.p_const
+            power_true[i] = (h.p_const_eff
                              + (h.static_power(u, t_cur, static_mix)
                                 if u > 0 else 0.0)
                              + p_dyn * ramp * max(dyn_leak, 0.7))
@@ -472,17 +588,20 @@ class SimDevice:
         if program.is_nanosleep:
             # Active-but-idle: sequencer spins, static fully powered
             # (Oles et al.'s ~80W observation, paper §3.3.1).
-            t_iter = max(c.units.get("ctl.loop", 1.0), 1.0) * h.loop_lat_s
-            e_iter = c.units.get("ctl.loop", 0.0) * h.coeff("ctl.loop")
+            t_iter = (max(c.units.get("ctl.loop", 1.0), 1.0)
+                      * h.loop_lat_s) * h.t_core_scale
+            e_iter = (c.units.get("ctl.loop", 0.0)
+                      * h.coeff("ctl.loop")) * h.e_dyn_scale
             util, static_mix = 1.0, 1.0
         else:
             t_iter, _, _, _, _, util = h.times(c)
             e_iter = h.dynamic_energy(c, context=program.name)
             static_mix = h.static_mix(c, context=program.name)
-            # power-cap throttling for near-TDP programs
-            p_est = (h.p_const + h.p_static_full
+            # power-cap throttling for programs pushing past the envelope
+            # (the TDP knee by default; a tighter software cap when set)
+            p_est = (h.p_const_eff + h.p_static_full * h.static_v_scale
                      + e_iter / max(t_iter, 1e-12))
-            if p_est > h.throttle_knee * self.chip.tdp_watts:
+            if p_est > h.throttle_knee * h.cap_w:
                 e_iter *= h.throttle_energy_mult
                 t_iter *= h.throttle_time_mult
         duration = h.startup_s + program.iters * t_iter
@@ -501,7 +620,9 @@ class SimDevice:
         }
         return RunRecord(name=program.name, duration_s=duration,
                          iters=program.iters, trace=trace,
-                         energy_counter_j=energy, counters=counters)
+                         energy_counter_j=energy, counters=counters,
+                         freq_mhz=self._point.freq_mhz,
+                         power_cap_w=self._point.power_cap_w)
 
     # Iteration sizing helper so microbenchmarks reach steady state (§3.3).
     def iters_for_duration(self, counts_per_iter: OpCounts,

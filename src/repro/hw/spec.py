@@ -7,6 +7,55 @@ roofline constants mandated for §Roofline; the v5p/v6e entries are the
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class VfCurve:
+    """Public datasheet-level DVFS description of a chip.
+
+    Frequencies are core-clock MHz; voltages are normalized to the nominal
+    rail (``v_nom == 1.0`` by convention).  ``voltage`` is the piecewise-
+    linear V/f curve between the three published corners — the *public* part
+    of DVFS.  Per-part binning deviations live in the hidden device model.
+    """
+
+    f_nom_mhz: float
+    f_min_mhz: float
+    f_max_mhz: float
+    v_nom: float = 1.0
+    v_min: float = 0.76
+    v_max: float = 1.10
+
+    def clamp(self, freq_mhz: float) -> float:
+        return min(max(float(freq_mhz), self.f_min_mhz), self.f_max_mhz)
+
+    def voltage(self, freq_mhz: float) -> float:
+        """Rail voltage (normalized) at ``freq_mhz``; exact ``v_nom`` at
+        nominal so the nominal operating point is bit-reproducible."""
+        f = float(freq_mhz)
+        if f == self.f_nom_mhz:
+            return self.v_nom
+        if f <= self.f_min_mhz:
+            return self.v_min
+        if f >= self.f_max_mhz:
+            return self.v_max
+        if f < self.f_nom_mhz:
+            w = (f - self.f_min_mhz) / (self.f_nom_mhz - self.f_min_mhz)
+            return self.v_min + w * (self.v_nom - self.v_min)
+        w = (f - self.f_nom_mhz) / (self.f_max_mhz - self.f_nom_mhz)
+        return self.v_nom + w * (self.v_max - self.v_nom)
+
+    def grid(self, n: int) -> list:
+        """``n`` evenly spaced frequencies spanning the DVFS range, snapped
+        to whole MHz, always containing the nominal frequency."""
+        if n <= 1:
+            return [self.f_nom_mhz]
+        span = self.f_max_mhz - self.f_min_mhz
+        pts = {round(self.f_min_mhz + span * k / (n - 1)) * 1.0
+               for k in range(n)}
+        pts.add(self.f_nom_mhz)
+        return sorted(pts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,10 +81,20 @@ class ChipSpec:
     idle_watts: float
     # ISA generation tag — newer gens add op classes (fp8 / sparse dots).
     isa_gen: int = 0
+    # DVFS range (datasheet-level); None means "fixed-clock part".
+    vf: Optional[VfCurve] = None
 
     @property
     def peak_bf16_macs(self) -> float:
         return self.peak_bf16_flops / 2.0
+
+    @property
+    def vf_curve(self) -> VfCurve:
+        """The chip's V/f curve, synthesizing a conservative single-point
+        curve for fixed-clock parts so every device has an operating point."""
+        if self.vf is not None:
+            return self.vf
+        return VfCurve(f_nom_mhz=940.0, f_min_mhz=940.0, f_max_mhz=940.0)
 
 
 # TPU v5e — the primary target (and the mandated roofline constants).
@@ -54,6 +113,7 @@ V5E = ChipSpec(
     tdp_watts=215.0,
     idle_watts=42.0,
     isa_gen=0,
+    vf=VfCurve(f_nom_mhz=940.0, f_min_mhz=564.0, f_max_mhz=1128.0),
 )
 
 # TPU v5p — "next generation" system (paper's A100 role).
@@ -72,6 +132,7 @@ V5P = ChipSpec(
     tdp_watts=350.0,
     idle_watts=68.0,
     isa_gen=1,
+    vf=VfCurve(f_nom_mhz=1075.0, f_min_mhz=645.0, f_max_mhz=1290.0),
 )
 
 # TPU v6e — two generations ahead (paper's H100 role); adds fp8/sparse classes.
@@ -90,6 +151,7 @@ V6E = ChipSpec(
     tdp_watts=300.0,
     idle_watts=55.0,
     isa_gen=2,
+    vf=VfCurve(f_nom_mhz=940.0, f_min_mhz=564.0, f_max_mhz=1128.0),
 )
 
 CHIPS = {c.name: c for c in (V5E, V5P, V6E)}

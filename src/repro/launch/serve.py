@@ -82,18 +82,32 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
         max_batch: int = 4, budget_j_per_token: Optional[float] = None,
         energy_system: str = "sim-v5e-air", seed: int = 0,
         telemetry_chunk: Optional[int] = 4096,
-        min_phase_seconds: float = 4.0, verbose: bool = True):
+        min_phase_seconds: float = 4.0, verbose: bool = True,
+        freq_mhz: Optional[float] = None, governor: bool = False,
+        sla_tokens_per_s: Optional[float] = None):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
     max_seq = 2 * prompt_len + 2 * max_new + 1   # covers the 2× draws
 
     model = EnergyModel.from_store(energy_system)
+    gov = None
+    if governor:
+        from repro.dvfs import GovernorConfig, SweetSpotGovernor
+        fam = [(f, c) for f, c, _ in model.table.family() if f is not None]
+        if len(fam) < 2:
+            # no calibrated family yet: sweep a small grid first
+            model.calibrate_points(duration_s=3.0, repeats=2)
+            fam = [(f, c) for f, c, _ in model.table.family()
+                   if f is not None]
+        gov = SweetSpotGovernor(
+            fam, GovernorConfig(sla_work_per_s=sla_tokens_per_s))
     server = model.serve(
         model_counts_fn(cfg, params, max_seq=max_seq),
         policy=EnergyPolicy(max_batch=max_batch,
                             budget_j_per_token=budget_j_per_token),
         min_phase_seconds=min_phase_seconds,
-        telemetry_chunk=telemetry_chunk, name=f"serve/{arch}")
+        telemetry_chunk=telemetry_chunk, name=f"serve/{arch}",
+        operating_point=freq_mhz, governor=gov)
     workload = make_workload(tenants=tenants, requests=requests,
                              prompt_len=prompt_len, max_new=max_new,
                              seed=seed)
@@ -115,6 +129,12 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
               f"{len(report.phases)} phases; live MAPE "
               f"{report.mape_pct:.1f}%; {len(deferred)} deferrals, "
               f"{len(shed)} sheds, overhead {report.overhead_j:.3e} J")
+        if gov is not None and gov.current is not None:
+            print(f"[dvfs] governor holding f={gov.current[0]:g} MHz "
+                  f"(cap {gov.current[1]} W) after "
+                  f"{len(gov.decisions)} decisions")
+        elif freq_mhz is not None:
+            print(f"[dvfs] pinned at f={freq_mhz:g} MHz")
     return report, server
 
 
@@ -130,12 +150,20 @@ def main(argv=None) -> int:
     ap.add_argument("--budget-j-per-token", type=float, default=None)
     ap.add_argument("--telemetry-chunk", type=int, default=4096,
                     help="streaming ingestion chunk size (0 = per-sample)")
+    ap.add_argument("--freq-mhz", type=float, default=None,
+                    help="pin the device at this core frequency")
+    ap.add_argument("--governor", action="store_true",
+                    help="close the loop: sweet-spot DVFS per phase")
+    ap.add_argument("--sla-tokens-per-s", type=float, default=None,
+                    help="throughput floor the governor must hold")
     args = ap.parse_args(argv)
     report, _ = run(args.arch, smoke=args.smoke, tenants=args.tenants,
                     requests=args.requests, prompt_len=args.prompt_len,
                     max_new=args.max_new, max_batch=args.max_batch,
                     budget_j_per_token=args.budget_j_per_token,
-                    telemetry_chunk=args.telemetry_chunk or None)
+                    telemetry_chunk=args.telemetry_chunk or None,
+                    freq_mhz=args.freq_mhz, governor=args.governor,
+                    sla_tokens_per_s=args.sla_tokens_per_s)
     assert len(report.requests) == args.requests
     return 0
 

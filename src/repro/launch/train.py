@@ -42,6 +42,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         energy_donor: Optional[str] = None,
         energy_profile_fraction: Optional[float] = None,
         telemetry_chunk: Optional[int] = 4096,
+        freq_mhz: Optional[float] = None, governor: bool = False,
+        sla_tokens_per_s: Optional[float] = None,
         seed: int = 0, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     shape = ShapeSpec("run", seq_len, global_batch, "train")
@@ -80,8 +82,30 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                 donor=energy_donor)
         else:
             model = EnergyModel.from_store(energy_system)
+        # DVFS: --freq-mhz pins the whole run at one operating point;
+        # --governor picks the run's frequency from the sweet-spot
+        # governor's exploration order (training is one long session, so
+        # the loop closes across runs: per-step measured J/work feeds the
+        # governor and its verdict is reported at the end).
+        point, gov = freq_mhz, None
+        if governor:
+            from repro.dvfs import GovernorConfig, SweetSpotGovernor
+            fam = [(f, c) for f, c, _ in model.table.family()
+                   if f is not None]
+            if len(fam) < 2:
+                model.calibrate_points(duration_s=3.0, repeats=2)
+                fam = [(f, c) for f, c, _ in model.table.family()
+                       if f is not None]
+            gov = SweetSpotGovernor(
+                fam, GovernorConfig(sla_work_per_s=sla_tokens_per_s))
+            work = float(seq_len * global_batch)
+            gov.seed_exploration(
+                lambda p: model.predict(counts, 1.0, operating_point=p)
+                .total_j / max(work, 1e-12))
+            point = gov.propose()
         monitor = model.monitor(live=True, step_counts=counts,
-                                telemetry_chunk=telemetry_chunk)
+                                telemetry_chunk=telemetry_chunk,
+                                operating_point=point, governor=gov)
 
     straggler = StragglerMonitor()
     losses = []
@@ -111,6 +135,13 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                   f"live MAPE {summary.mape_pct:.1f}% over {summary.steps} "
                   f"steps" + (", DRIFT flagged" if summary.drift.drifting
                               else ""))
+        dev_pt = monitor.live.operating_point
+        if verbose and dev_pt is not None:
+            what = "governed" if gov is not None else "pinned"
+            print(f"[dvfs] {what} at f={dev_pt[0]:g} MHz"
+                  + (f" ({len(gov.decisions)} decisions, "
+                     f"{gov.decisions[-1].reason})" if gov is not None
+                     else ""))
     return state, losses, monitor
 
 
@@ -134,6 +165,13 @@ def main(argv=None) -> int:
                          "when bootstrapping from --energy-donor")
     ap.add_argument("--telemetry-chunk", type=int, default=4096,
                     help="streaming ingestion chunk size (0 = per-sample)")
+    ap.add_argument("--freq-mhz", type=float, default=None,
+                    help="pin the device at this core frequency")
+    ap.add_argument("--governor", action="store_true",
+                    help="let the sweet-spot governor pick the run's "
+                         "frequency and feed it per-step measurements")
+    ap.add_argument("--sla-tokens-per-s", type=float, default=None,
+                    help="throughput floor the governor must hold")
     args = ap.parse_args(argv)
     _, losses, _ = run(args.arch, smoke=args.smoke, steps=args.steps,
                        seq_len=args.seq_len, global_batch=args.global_batch,
@@ -142,7 +180,9 @@ def main(argv=None) -> int:
                        energy_system=args.energy_system,
                        energy_donor=args.energy_donor,
                        energy_profile_fraction=args.energy_profile_fraction,
-                       telemetry_chunk=args.telemetry_chunk or None)
+                       telemetry_chunk=args.telemetry_chunk or None,
+                       freq_mhz=args.freq_mhz, governor=args.governor,
+                       sla_tokens_per_s=args.sla_tokens_per_s)
     ok = np.isfinite(losses).all() and losses[-1] < losses[0]
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if ok else 'check'})")

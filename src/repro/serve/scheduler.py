@@ -305,6 +305,8 @@ class PhaseSummary:
     measured_j: float
     predicted_j: float
     startup_j: float
+    freq_mhz: Optional[float] = None       # DVFS point the phase ran at
+    power_cap_w: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -431,7 +433,9 @@ class EnergyServer:
                  detector=None,
                  drift_flag: Optional[Callable[[], bool]] = None,
                  telemetry_chunk: Optional[int] = None,
-                 service=None):
+                 service=None,
+                 operating_point=None,
+                 governor=None):
         from repro.telemetry.attrib import OnlineAttributor
         from repro.telemetry.sampler import DEFAULT_CHUNK
         self.model = model
@@ -448,8 +452,15 @@ class EnergyServer:
             model.predictor, recalibrate=recalibrate, detector=detector)
         self._drift_flag = drift_flag or \
             (lambda: self.attributor.drift.drifting)
+        # DVFS: a static pin (operating_point=) or a closed-loop governor
+        # proposing a point per phase; the governor inherits this server's
+        # drift flag so it pauses exactly when admissions pause
+        self.operating_point = model.predictor._as_point(operating_point)
+        self.governor = governor
+        if governor is not None and governor.drift_flag is None:
+            governor.drift_flag = self._drift_flag
         self._counts_cache: Dict[tuple, OpCounts] = {}
-        self._jpt_cache: Dict[int, float] = {}
+        self._jpt_cache: Dict[tuple, float] = {}
 
     # -- pricing -------------------------------------------------------------
     def _counts(self, kind: str, batch: int, tokens: int) -> OpCounts:
@@ -459,15 +470,34 @@ class EnergyServer:
             c = self._counts_cache[key] = self.counts_fn(kind, batch, tokens)
         return c
 
-    def predict_j_per_token(self, batch: int) -> float:
-        """Predicted J/token of a decode step at this batch size."""
-        jpt = self._jpt_cache.get(batch)
+    def _phase_point(self):
+        """The operating point the next phase should run at (None: anchor)."""
+        if self.governor is not None:
+            return self.governor.propose()
+        return self.operating_point
+
+    def predict_j_per_token(self, batch: int,
+                            operating_point=None) -> float:
+        """Predicted J/token of a decode step at this batch size.
+
+        Priced at ``operating_point`` (default: the governor's current
+        point / the server's static pin), so budget packing and the
+        governor see consistent numbers.  Cached per (batch, point).
+        """
+        point = operating_point
+        if point is None:
+            point = (self.governor.current if self.governor is not None
+                     else self.operating_point)
+        else:
+            point = self.model.predictor._as_point(point)
+        key = (batch, point)
+        jpt = self._jpt_cache.get(key)
         if jpt is None:
             counts = self._counts("decode", batch, 1)
             iters = self.model.device.iters_for_duration(counts, 1.0)
             t_step = 1.0 / max(iters, 1)
-            pred = self.model.predict(counts, t_step)
-            jpt = self._jpt_cache[batch] = pred.total_j / batch
+            pred = self.model.predict(counts, t_step, operating_point=point)
+            jpt = self._jpt_cache[key] = pred.total_j / batch
         return jpt
 
     # -- the serving run -----------------------------------------------------
@@ -483,12 +513,14 @@ class EnergyServer:
 
         while (phase := sched.next_phase()) is not None:
             counts = self._counts(phase.kind, phase.batch, phase.pad_tokens)
+            point = self._phase_point()      # DVFS switch: phase boundary
             session = StreamSession(
                 self.model.predictor, self.model.device, counts,
                 name=f"{self.name}/p{phase.index}.{phase.kind}x{phase.batch}",
                 attributor=self.attributor,
                 min_duration_s=self.min_phase_seconds,
-                chunk_size=self.telemetry_chunk)
+                chunk_size=self.telemetry_chunk,
+                operating_point=point)
             if self.service is not None:
                 self.service.register(session)
             for i in range(phase.n_steps):
@@ -505,12 +537,23 @@ class EnergyServer:
                     predicted_j=att.predicted_j, dynamic_frac=dyn_frac,
                     active=phase.shares(i), work_scale=group)
             overhead += summary.startup_j
+            atts = session.attributions
+            if self.governor is not None and point is not None:
+                # tokens the phase processed: per-step work × the device
+                # iterations folded into each logical step
+                tokens = sum(phase.step_tokens(i)
+                             for i in range(phase.n_steps)) * group
+                self.governor.observe(
+                    point, float(sum(a.measured_j for a in atts)),
+                    float(sum(a.duration_s for a in atts)), tokens)
             phases.append(PhaseSummary(
                 index=phase.index, kind=phase.kind, step0=phase.step0,
                 n_steps=phase.n_steps, batch=phase.batch, work_scale=group,
-                measured_j=sum(a.measured_j for a in session.attributions),
-                predicted_j=sum(a.predicted_j for a in session.attributions),
-                startup_j=summary.startup_j))
+                measured_j=sum(a.measured_j for a in atts),
+                predicted_j=sum(a.predicted_j for a in atts),
+                startup_j=summary.startup_j,
+                freq_mhz=None if point is None else point[0],
+                power_cap_w=None if point is None else point[1]))
 
         totals = ledger.per_request()
         rows = []
@@ -531,6 +574,8 @@ class EnergyServer:
         if self.service is not None:
             snap = report.snapshot()
             self.service.register_billing(self.name, lambda: snap)
+            if self.governor is not None:
+                self.service.register_governor(self.name, self.governor)
         return report
 
 

@@ -158,13 +158,21 @@ def rescale_table(predictor: TablePredictor, ratio: float,
     Mutates the predictor's bound ``EnergyTable`` in place, invalidates the
     predictor's lookup cache, and (when a ``TableStore`` is given) publishes
     the corrected table so every node sharing the store converges.
+
+    Uniform drift (aging silicon, a voltage-bin mismatch) shifts dynamic
+    energy at *every* operating point, so the repair also scales each
+    frequency-family member — otherwise a governor exploring the family
+    would see repaired pricing at the anchor and stale pricing everywhere
+    else.
     """
     table = predictor.table
-    for d in (table.direct, table.scaled, table.bucket_means):
-        for cls in d:
-            d[cls] *= ratio
-    table.meta["recalibrated_scale"] = (
-        table.meta.get("recalibrated_scale", 1.0) * ratio)
+    members = [table] + [sub for _, sub in sorted(table.points.items())]
+    for t in members:
+        for d in (t.direct, t.scaled, t.bucket_means):
+            for cls in d:
+                d[cls] *= ratio
+        t.meta["recalibrated_scale"] = (
+            t.meta.get("recalibrated_scale", 1.0) * ratio)
     predictor.invalidate()
     if store is not None:
         store.put(table)
@@ -195,36 +203,46 @@ class OnlineAttributor:
         self._triggers = 0     # repair actions fired (any strategy)
 
     def attribute(self, window: AlignedWindow, counts: OpCounts,
-                  counters: Optional[dict] = None) -> StepAttribution:
-        """Fuse one aligned window with the prediction for its op counts."""
+                  counters: Optional[dict] = None,
+                  operating_point=None) -> StepAttribution:
+        """Fuse one aligned window with the prediction for its op counts.
+
+        ``operating_point`` prices the window at a (freq, cap) member of the
+        table's frequency family (``None`` — the anchor, bitwise-legacy).
+        """
+        point = self.predictor._as_point(operating_point)
         pred = self.predictor.predict(counts, window.duration_s,
-                                      counters=counters)
-        return self._fuse(window, pred)
+                                      counters=counters,
+                                      operating_point=point)
+        return self._fuse(window, pred, point)
 
     def attribute_batch(self, windows: List[AlignedWindow],
                         counts_list: List[OpCounts],
                         counters_list: Optional[List[Optional[dict]]] = None,
-                        ) -> List[StepAttribution]:
+                        operating_point=None) -> List[StepAttribution]:
         """Fuse many finalized windows in one ``predict_batch`` pass.
 
         Bitwise-identical to calling ``attribute`` per window (a single
         prediction *is* a 1-row batch).  Drift state still advances window
         by window; when a recalibration fires mid-batch the remaining
         windows are re-predicted against the repaired table, exactly as the
-        per-window path would have seen it.
+        per-window path would have seen it.  ``operating_point`` applies to
+        every window of the batch (sessions switch points only at phase
+        boundaries, so a single batch is single-point by construction).
         """
         if counters_list is None:
             counters_list = [None] * len(windows)
+        point = self.predictor._as_point(operating_point)
         out: List[StepAttribution] = []
         i, n = 0, len(windows)
         while i < n:
             preds = self.predictor.predict_batch(
                 counts_list[i:], [w.duration_s for w in windows[i:]],
-                counters_list[i:])
+                counters_list[i:], operating_point=point)
             repaired = False
             for j, pred in enumerate(preds):
                 before = self._triggers
-                out.append(self._fuse(windows[i + j], pred))
+                out.append(self._fuse(windows[i + j], pred, point))
                 # a trigger may have mutated the table: re-predict the tail
                 # so later windows see the same table state the sequential
                 # path would have
@@ -236,9 +254,13 @@ class OnlineAttributor:
                 i = n
         return out
 
-    def _fuse(self, window: AlignedWindow,
-              pred: Prediction) -> StepAttribution:
-        overhead = (self.table.p_const + self.table.p_static) * window.duration_s
+    def _fuse(self, window: AlignedWindow, pred: Prediction,
+              point=None) -> StepAttribution:
+        if point is None:
+            overhead = (self.table.p_const + self.table.p_static) * window.duration_s
+        else:
+            p_const, p_static = self.predictor.point_powers(point)
+            overhead = (p_const + p_static) * window.duration_s
         meas_dyn = window.measured_j - overhead
         pred_dyn = max(pred.dynamic_j, _EPS)
         scale = meas_dyn / pred_dyn

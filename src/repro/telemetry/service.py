@@ -85,13 +85,18 @@ class StreamSession:
                  ring_capacity: int = 4096,
                  recalibrate="rescale", store=None,
                  detector=None, attributor: Optional[OnlineAttributor] = None,
-                 chunk_size: Optional[int] = DEFAULT_CHUNK):
+                 chunk_size: Optional[int] = DEFAULT_CHUNK,
+                 operating_point=None):
         self.predictor = predictor
         self.device = device
         self.counts = counts
         self.name = name
         self.monitor = monitor
         self.min_duration_s = float(min_duration_s)
+        # DVFS point for this session: the device is set there when the run
+        # starts, and every window is predicted/attributed at that point
+        # (None — wherever the device already is, priced at the anchor)
+        self.operating_point = predictor._as_point(operating_point)
         # chunk_size=None/0 selects the per-sample reference path; any
         # positive n ingests n-sample ndarray chunks through the whole
         # pipeline (ring, integrator, plateau, aligner, batch attribution)
@@ -193,6 +198,9 @@ class StreamSession:
         self._group = iters / n
         self._group_counts = self.counts.scaled(self._group)
 
+        if self.operating_point is not None:
+            freq, cap = self.operating_point
+            self.device.set_operating_point(freq, power_cap_w=cap)
         rec, sampler = DeviceSampler(self.device).run(
             Program(self.name, self.counts, iters=iters))
         self.record = rec
@@ -313,7 +321,8 @@ class StreamSession:
             self._pending.append(win)         # fused in batch per chunk
             return
         host, counters = self._host_and_counters(win)
-        self.attributor.attribute(win, self._group_counts, counters=counters)
+        self.attributor.attribute(win, self._group_counts, counters=counters,
+                                  operating_point=self.operating_point)
         self._observe(win, host, counters)
 
     def _flush_pending(self) -> None:
@@ -331,7 +340,8 @@ class StreamSession:
         hosts_counters = [self._host_and_counters(w) for w in wins]
         self.attributor.attribute_batch(
             wins, [self._group_counts] * len(wins),
-            [hc[1] for hc in hosts_counters])
+            [hc[1] for hc in hosts_counters],
+            operating_point=self.operating_point)
         for win, (host, counters) in zip(wins, hosts_counters):
             self._observe(win, host, counters)
 
@@ -351,7 +361,8 @@ class StreamSession:
         self.monitor.observe(
             host.step if host else win.step, self._group_counts,
             win.duration_s, counters=counters, work_units=work,
-            measured_j=win.measured_j)
+            measured_j=win.measured_j,
+            operating_point=self.operating_point)
 
     def _window_counters(self, win: AlignedWindow) -> Optional[dict]:
         if self.record is None:
@@ -372,9 +383,13 @@ class StreamSession:
         shared across sessions (drift state is the live detector's).
         """
         latest = self.ring.latest()
+        dev_pt = getattr(self.device, "operating_point", None)
         out = {
             "name": self.name,
             "device": self.device.name,
+            "operating_point": None if dev_pt is None else
+                {"freq_mhz": dev_pt.freq_mhz,
+                 "power_cap_w": dev_pt.power_cap_w},
             "steps_registered": len(self._steps),
             "samples": self.ring.total,
             "dropped_samples": self.ring.dropped,
@@ -405,6 +420,15 @@ class TelemetryService:
     def __init__(self):
         self._sessions: Dict[str, StreamSession] = {}
         self._billing: Dict[str, object] = {}   # key -> provider() -> dict
+        self._governors: Dict[str, object] = {}  # key -> SweetSpotGovernor
+
+    def register_governor(self, key: str, governor) -> None:
+        """Attach a DVFS governor pane: its decision history and per-point
+        statistics ride the fleet snapshot (``snapshot()["governors"]``).
+        Re-registering a key replaces the governor."""
+        if not hasattr(governor, "snapshot"):
+            raise TypeError("governor must expose snapshot()")
+        self._governors[key] = governor
 
     def register_billing(self, key: str, provider) -> None:
         """Attach a billing pane: ``provider()`` -> JSON-safe dict.
@@ -473,6 +497,9 @@ class TelemetryService:
         }
         if self._billing:
             out["billing"] = {k: fn() for k, fn in self._billing.items()}
+        if self._governors:
+            out["governors"] = {k: g.snapshot()
+                                for k, g in self._governors.items()}
         return out
 
     def to_json(self, indent: Optional[int] = None) -> str:

@@ -1,0 +1,344 @@
+"""The frequency/DVFS axis: operating points on the device, the v3 table
+family (migration, bitwise anchors, interpolation, sweep resume), and the
+closed-loop sweet-spot governor."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import EnergyModel
+from repro.core import calibrate as cal
+from repro.core.opcount import OpCounts
+from repro.core.predict import TablePredictor
+from repro.core.store import TableStore, migrate_table_dict
+from repro.core.table import SCHEMA_VERSION, EnergyTable
+from repro.dvfs import (GovernorConfig, SweetSpotGovernor, as_point, resolve)
+from repro.telemetry import TelemetryService
+
+SYSTEM = "sim-v5e-air"
+FAST = dict(duration_s=3.0, repeats=2)     # throughput settings, not quality
+
+
+def _counts() -> OpCounts:
+    c = OpCounts()
+    c.add("dot.bf16", 2e8)
+    c.mxu_macs_total = c.mxu_macs_aligned = 2e8
+    c.add("exp.f32", 1e6)
+    c.add("add.f32", 5e6)
+    c.boundary_read_bytes = 4e6
+    c.boundary_write_bytes = 2e6
+    c.naive_bytes = 8e6
+    c.fused_bytes = 2e6
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+@pytest.fixture(scope="module")
+def family(tmp_path_factory):
+    """Anchor (nominal) + one low-frequency member, calibrated for real."""
+    rd = tmp_path_factory.mktemp("dvfs_sweep")
+    dev = cal.get_device(SYSTEM)
+    cap = float(dev.chip.tdp_watts)
+    extra = (float(dev.vf.f_min_mhz), cap)
+    table = cal.calibrate_sweep(SYSTEM, points=[extra], run_dir=rd,
+                                device=dev, **FAST)
+    return table, extra, rd
+
+
+# ---------------------------------------------------------------------------
+# Device operating point.
+# ---------------------------------------------------------------------------
+def test_device_operating_point_roundtrip():
+    dev = cal.get_device(SYSTEM)
+    nom = dev.nominal_point
+    assert nom.freq_mhz == dev.vf.f_nom_mhz
+    dev.set_operating_point(dev.vf.f_min_mhz, power_cap_w=100.0)
+    pt = dev.operating_point
+    assert (pt.freq_mhz, pt.power_cap_w) == (dev.vf.f_min_mhz, 100.0)
+    dev.reset_operating_point()
+    assert dev.operating_point.freq_mhz == nom.freq_mhz
+
+
+def test_as_point_forms():
+    dev = cal.get_device(SYSTEM)
+    assert as_point(None) is None
+    assert as_point(700.0) == (700.0, None)
+    assert as_point((700.0, 150.0)) == (700.0, 150.0)
+    assert as_point([700.0, None]) == (700.0, None)
+    dev.set_operating_point(700.0, power_cap_w=150.0)
+    assert as_point(dev.operating_point) == (700.0, 150.0)
+    dev.reset_operating_point()
+
+
+# ---------------------------------------------------------------------------
+# v2 -> v3 migration: old tables are a one-point family, bitwise intact.
+# ---------------------------------------------------------------------------
+def _v2_payload():
+    return {
+        "schema": 2,
+        "system": SYSTEM,
+        "p_const": 41.5,
+        "p_static": 48.25,
+        "direct": {"add.f32": 1e-11, "dot.bf16": 1.3e-12,
+                   "exp.f32": 3.4e-11, "slice": 0.0},
+        "scaled": {"vmem.write": 1.7e-12},
+        "bucket_means": {"vpu_simple": 1e-11, "mxu": 1.3e-12},
+        "meta": {"isa_gen": 0.0, "residual_rel": 0.01},
+        "provenance": {"suite": "test"},
+    }
+
+
+def test_v2_migrates_to_one_point_family(tmp_path):
+    store = TableStore(tmp_path)
+    (tmp_path / f"{SYSTEM}__gen0__v2.json").write_text(
+        json.dumps(_v2_payload()))
+
+    table = store.get(SYSTEM)
+    assert table is not None
+    assert table.provenance["migrated_from_schema"] == 2
+    assert table.points == {}                    # empty family ...
+    assert len(table.family()) == 1              # ... = one-point family
+    # republished under the v3 path
+    assert json.loads(store.path_for(SYSTEM).read_text())["schema"] \
+        == SCHEMA_VERSION
+
+    # the one-point family answers ANY operating point with its anchor,
+    # bitwise: legacy predictions are untouched by the new axis
+    legacy = EnergyTable.from_dict(
+        {k: v for k, v in _v2_payload().items()
+         if k not in ("schema", "provenance")})
+    pred, ref = TablePredictor(table), TablePredictor(legacy)
+    c = _counts()
+    for op in (None, 700.0, (1128.0, 215.0)):
+        got = pred.predict(c, 5.0, operating_point=op)
+        want = ref.predict(c, 5.0)
+        assert got.total_j == want.total_j
+
+
+def test_migrate_table_dict_v2_path():
+    d = migrate_table_dict(_v2_payload())
+    assert d["schema"] == SCHEMA_VERSION
+    assert d["operating_points"] == []
+    assert d["provenance"]["migrated_from_schema"] == 2
+    assert d["provenance"]["suite"] == "test"
+
+
+# ---------------------------------------------------------------------------
+# Calibrated family: bitwise at anchors, linear between, clamped outside.
+# ---------------------------------------------------------------------------
+def test_family_anchors_are_bitwise(family):
+    table, extra, _ = family
+    c = _counts()
+    fam_pred = TablePredictor(table)
+    for f, cap, sub in table.family():
+        via_family = fam_pred.predict(c, 5.0, operating_point=(f, cap))
+        direct = TablePredictor(sub).predict(c, 5.0)
+        assert via_family.total_j == direct.total_j, (f, cap)
+        p_const, p_static = fam_pred.point_powers((f, cap))
+        assert p_const == sub.p_const and p_static == sub.p_static
+
+
+def test_none_path_equals_anchor_point(family):
+    """Growing the family must not perturb the legacy (point=None) path."""
+    table, _, _ = family
+    pred = TablePredictor(table)
+    c = _counts()
+    anchor_pt = table.anchor_point()
+    assert anchor_pt is not None
+    assert pred.predict(c, 5.0).total_j \
+        == pred.predict(c, 5.0, operating_point=anchor_pt).total_j
+
+
+def test_interpolation_is_linear_and_clamped(family):
+    table, (f_lo, cap), _ = family
+    f_hi = table.anchor_point()[0]
+    mid = 0.5 * (f_lo + f_hi)
+    r = resolve(table, mid, cap)
+    assert not r.exact
+    lo, hi = r.lo, r.hi
+    w = r.w
+    ed, ep = r.vectors(8)
+    ed0, ep0 = lo.energy_vectors(8)
+    ed1, ep1 = hi.energy_vectors(8)
+    np.testing.assert_array_equal(ed, ed0 * (1 - w) + ed1 * w)
+    np.testing.assert_array_equal(ep, ep0 * (1 - w) + ep1 * w)
+    assert r.p_const == lo.p_const * (1 - w) + hi.p_const * w
+
+    # outside the calibrated span: clamp to the boundary member, exactly
+    below = resolve(table, f_lo - 100.0, cap)
+    above = resolve(table, f_hi + 100.0, cap)
+    assert below.exact and below.lo is table.points[(f_lo, cap)]
+    assert above.exact and above.lo is table
+
+
+def test_family_survives_store_roundtrip(family, tmp_path):
+    table, extra, _ = family
+    store = TableStore(tmp_path)
+    cal.publish(table, store)
+    loaded = store.get(SYSTEM)
+    assert loaded is not None
+    assert set(loaded.points) == set(table.points)
+    c = _counts()
+    for f, cap, _sub in table.family():
+        a = TablePredictor(table).predict(c, 5.0, operating_point=(f, cap))
+        b = TablePredictor(loaded).predict(c, 5.0, operating_point=(f, cap))
+        assert a.total_j == b.total_j
+
+
+def test_sweep_resume_is_bitwise(family):
+    table, extra, rd = family
+    again = cal.calibrate_sweep(SYSTEM, points=[extra], run_dir=rd, **FAST)
+    assert set(again.points) == set(table.points)
+    for key in table.points:
+        assert dict(again.points[key].direct.items()) \
+            == dict(table.points[key].direct.items())
+    assert again.p_const == table.p_const
+
+
+# ---------------------------------------------------------------------------
+# Governor: SLA filter, hysteresis, drift pause, workload-shift re-explore.
+# ---------------------------------------------------------------------------
+A, B = (564.0, 215.0), (940.0, 215.0)
+
+
+def _feed(gov, point, j_per_work, work_per_s, times=1):
+    for _ in range(times):
+        gov.observe(point, measured_j=j_per_work * 10.0,
+                    duration_s=10.0 / work_per_s, work_units=10.0)
+
+
+def test_governor_explores_then_holds_best():
+    gov = SweetSpotGovernor([A, B])
+    p1 = gov.propose()
+    _feed(gov, p1, 1.0, 50.0)
+    p2 = gov.propose()
+    _feed(gov, p2, 2.0, 200.0)
+    assert {p1, p2} == {A, B}
+    assert gov.best_measured() == A         # min J/work, no SLA
+    # hysteresis: it dwells at the last-explored point until the floor is
+    # met, then switches to the measured argmin and holds it
+    while gov.propose() != A:
+        assert gov.decisions[-1].reason == "hold"
+        _feed(gov, gov.current, 2.0, 200.0)
+        assert len(gov.decisions) < 10      # must converge quickly
+    assert gov.decisions[-1].reason == "switch"
+    _feed(gov, A, 1.0, 50.0)
+    assert gov.propose() == A
+    assert gov.decisions[-1].reason == "hold"
+
+
+def test_governor_sla_excludes_slow_points():
+    gov = SweetSpotGovernor([A, B], GovernorConfig(sla_work_per_s=100.0))
+    _feed(gov, gov.propose(), 1.0, 50.0)    # A: cheapest but too slow
+    _feed(gov, gov.propose(), 2.0, 200.0)   # B: meets the SLA
+    assert gov.propose() == B
+    assert gov.best_measured() == B
+    # nothing meets the SLA -> fastest point, reason "sla"
+    strict = SweetSpotGovernor([A, B], GovernorConfig(sla_work_per_s=1e9))
+    _feed(strict, strict.propose(), 1.0, 50.0)
+    _feed(strict, strict.propose(), 2.0, 200.0)
+    assert strict.propose() == B            # fastest measured
+    assert strict.decisions[-1].reason == "sla"
+
+
+def test_governor_hysteresis_delays_switch():
+    gov = SweetSpotGovernor([B, A],
+                            GovernorConfig(hysteresis_windows=2,
+                                           min_improvement=0.02,
+                                           restale_tol=1e9))
+    _feed(gov, gov.propose(), 1.0, 200.0)   # B first (explore order)
+    _feed(gov, gov.propose(), 0.5, 100.0)   # A: 2x better
+    # current is A already (last explored) -> best == current, holds
+    assert gov.propose() == A
+    # force current back to the worse point, dwell below the floor
+    _feed(gov, A, 2.0, 100.0, times=1)      # A now looks worse than B
+    gov._current, gov._dwell = A, 0
+    assert gov.propose() == A               # dwell < hysteresis: no switch
+    assert gov.decisions[-1].reason == "hold"
+    _feed(gov, A, 2.0, 100.0, times=2)      # dwell reaches the floor
+    assert gov.propose() == B
+    assert gov.decisions[-1].reason == "switch"
+
+
+def test_governor_drift_pause_freezes():
+    drifting = [False]
+    gov = SweetSpotGovernor([A, B], drift_flag=lambda: drifting[0])
+    _feed(gov, gov.propose(), 1.0, 100.0)
+    drifting[0] = True
+    held = gov.propose()
+    assert gov.decisions[-1].reason == "drift-pause"
+    assert held == gov.current
+    drifting[0] = False
+    gov.propose()
+    assert gov.decisions[-1].reason != "drift-pause"
+
+
+def test_governor_reexplores_on_workload_shift():
+    gov = SweetSpotGovernor([A, B], GovernorConfig(restale_tol=0.25))
+    _feed(gov, gov.propose(), 1.0, 100.0)
+    _feed(gov, gov.propose(), 2.0, 100.0)
+    _feed(gov, B, 2.0, 100.0, times=2)      # dwell past the hysteresis floor
+    assert gov.propose() == A               # converged on A
+    _feed(gov, A, 1.05, 100.0)              # +5%: within tolerance
+    assert gov.propose() == A
+    _feed(gov, A, 3.0, 100.0)               # the mix shifted under it
+    assert gov.propose() == B               # stats reset -> re-explore
+    assert gov.decisions[-1].reason == "re-explore"
+
+
+def test_governor_seeded_exploration_order():
+    gov = SweetSpotGovernor([A, B])
+    gov.seed_exploration(lambda p: {A: 2.0, B: 1.0}[p])
+    assert gov.propose() == B               # best predicted first
+
+
+def test_service_reports_governor():
+    gov = SweetSpotGovernor([A, B])
+    _feed(gov, gov.propose(), 1.0, 100.0)
+    svc = TelemetryService()
+    svc.register_governor("serve/test", gov)
+    snap = svc.snapshot()
+    g = snap["governors"]["serve/test"]
+    assert g["current"]["freq_mhz"] in (A[0], B[0])
+    json.dumps(snap)                        # JSON-safe end to end
+    with pytest.raises(TypeError):
+        svc.register_governor("bad", object())
+
+
+# ---------------------------------------------------------------------------
+# fork(): copy-on-repair isolation.
+# ---------------------------------------------------------------------------
+def test_fork_isolates_table_mutations():
+    table = EnergyTable.from_dict(
+        {k: v for k, v in _v2_payload().items()
+         if k not in ("schema", "provenance")})
+    model = EnergyModel(table, system=SYSTEM)
+    forked = model.fork()
+    c = _counts()
+    before = model.predict(c, 5.0).total_j
+    assert forked.predict(c, 5.0).total_j == before
+    for cls in forked.table.direct:
+        forked.table.direct[cls] *= 2.0
+    assert model.predict(c, 5.0).total_j == before       # original intact
+    assert forked.predict(c, 5.0).total_j != before
+    assert forked.table is not model.table
+
+
+# ---------------------------------------------------------------------------
+# Closed loop over the real streaming pipeline (slow tail).
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_governed_run_end_to_end(family):
+    table, extra, _ = family
+    model = EnergyModel(table, system=SYSTEM)
+    pts = [p for p, _, _ in
+           ((table.anchor_point(), None, None), (extra, None, None))]
+    gov = SweetSpotGovernor(pts)
+    run = model.govern(_counts(), gov, rounds=5, steps=2,
+                      work_units=64.0, min_duration_s=4.0)
+    assert len(run.rounds) == 5
+    assert run.final_point in pts
+    # device restored after the governed run
+    assert model.device.operating_point.freq_mhz \
+        == model.device.vf.f_nom_mhz
