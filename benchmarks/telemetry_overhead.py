@@ -11,6 +11,17 @@ Emits JSON (``--out``, default ``results/BENCH_telemetry_overhead.json``)
 recording ns/sample for both paths plus the devices-per-monitor headroom
 each implies, and the repo's CSV line format on stdout.  ``--min-speedup``
 turns it into a CI gate.
+
+The **shard sweep** (``--shards-out``, default
+``results/BENCH_telemetry_shards.json``) measures the sharded telemetry
+plane: real ``EnergyModel`` sessions partitioned across 1/2/4/8 shards,
+each shard's drain timed separately.  Modeled wall-clock per plane is the
+*max* per-shard drain time — the per-core capacity model for one worker
+per shard (this container pins the suite to one core, so shards are timed
+sequentially; on a multi-core collector the shards genuinely overlap).
+The sweep also re-checks the tiling guarantee end-to-end: a 4-shard
+plane's snapshot must be bitwise-identical to the unsharded service's.
+``--min-shard-speedup`` gates the modeled speedup at 4 shards.
 """
 from __future__ import annotations
 
@@ -31,6 +42,11 @@ N_SAMPLES = 200_000
 SAMPLES_PER_STEP = 100          # marker cadence
 CHUNK_SIZES = (64, 512, 4096)
 SENSOR_HZ = 10.0                # NVML-ish poll rate, for the headroom math
+
+SHARD_COUNTS = (1, 2, 4, 8)
+SHARD_SESSIONS = 16             # sessions per plane (divisible by all counts)
+SHARD_STEPS = 8                 # steps per session
+SHARD_REPEATS = 3               # take the min modeled wall over repeats
 
 
 def _synthetic(n: int):
@@ -82,6 +98,129 @@ def _integrator_only(ts, ps, chunk: int | None):
     return (time.perf_counter() - t0) / n * 1e9, integ.energy_j
 
 
+# ---------------------------------------------------------------------------
+# Shard sweep: the sharded plane's per-core capacity model + tiling check
+# ---------------------------------------------------------------------------
+def _shard_counts_vec(i: int):
+    from repro.core.counting import OpCounts
+    c = OpCounts()
+    c.add("dot", 1e9 * (i % 7 + 1))
+    c.add("add", 5e8)
+    c.naive_bytes = 1e8
+    c.boundary_read_bytes = 4e7
+    c.boundary_write_bytes = 2e7
+    c.flops = 2e9
+    return c
+
+
+def _build_plane(n_shards: int, sessions: int, steps: int):
+    """A fresh plane with ``sessions`` started streaming sessions.
+
+    A fresh ``EnergyModel.from_store`` per plane: the sim device's
+    sensor-noise RNG is a device-lifetime stream, so identical build
+    order on a fresh device reproduces the exact same traces — that is
+    what lets every configuration drain the same samples and the 4-shard
+    snapshot compare bitwise against the unsharded service.
+    """
+    from repro.api import EnergyModel
+    from repro.telemetry import TelemetryPlane
+    model = EnergyModel.from_store("sim-v5e-air")
+    plane = TelemetryPlane(n_shards, runner="serial")
+    for i in range(sessions):
+        s = model.stream(_shard_counts_vec(i), name=f"w{i}",
+                         recalibrate=None, chunk_size=512)
+        plane.register(s, f"dev{i}/w{i}")
+        for _ in range(steps):
+            s.step()
+        s.start()
+    return plane
+
+
+def _shard_sweep(sessions: int, steps: int, repeats: int):
+    """Time each shard's drain separately across SHARD_COUNTS planes."""
+    rows = {}
+    for n in SHARD_COUNTS:
+        best_wall, shard_s, total = None, None, 0
+        for _ in range(repeats):
+            plane = _build_plane(n, sessions, steps)
+            times = []
+            for sh in plane.shards:
+                t0 = time.perf_counter()
+                sh.drain()
+                times.append(time.perf_counter() - t0)
+            plane.finish_all()
+            total = sum(s.samples_drained
+                        for s in plane._sessions.values())
+            if best_wall is None or max(times) < best_wall:
+                best_wall, shard_s = max(times), times
+        rows[str(n)] = {
+            "n_shards": n,
+            "total_samples": total,
+            "shard_drain_s": shard_s,
+            "modeled_wall_s": best_wall,
+            "per_core_ns_per_sample": best_wall / total * n * 1e9,
+            "devices_per_plane_at_10hz": int(total / best_wall / SENSOR_HZ),
+        }
+    base = rows[str(SHARD_COUNTS[0])]["modeled_wall_s"]
+    for row in rows.values():
+        row["speedup_vs_1_shard"] = base / row["modeled_wall_s"]
+        row["scaling_efficiency"] = (row["speedup_vs_1_shard"]
+                                     / row["n_shards"])
+    return rows
+
+
+def _shard_bitwise_check(sessions: int, steps: int) -> bool:
+    """End-to-end tiling guarantee: 4-shard plane == unsharded service."""
+    from repro.api import EnergyModel
+    from repro.telemetry import TelemetryService
+    ref = TelemetryService()
+    model = EnergyModel.from_store("sim-v5e-air")
+    for i in range(sessions):
+        s = model.stream(_shard_counts_vec(i), name=f"w{i}",
+                         recalibrate=None, chunk_size=512)
+        ref.register(s, f"dev{i}/w{i}")
+        for _ in range(steps):
+            s.step()
+        s.start()
+    while ref.poll_all(4):
+        pass
+    ref.finish_all()
+    plane = _build_plane(4, sessions, steps)
+    plane.finish_all()
+    return plane.to_json() == ref.to_json()
+
+
+def run_shard_sweep(args) -> dict:
+    bitwise = _shard_bitwise_check(args.shard_sessions, args.shard_steps)
+    rows = _shard_sweep(args.shard_sessions, args.shard_steps,
+                        args.shard_repeats)
+    at4 = rows["4"]["speedup_vs_1_shard"] if "4" in rows else None
+    result = {
+        "benchmark": "telemetry_shards",
+        "sessions_per_plane": args.shard_sessions,
+        "steps_per_session": args.shard_steps,
+        "runner": "serial (per-shard sequential timing; modeled wall = "
+                  "max per-shard drain, one core per shard)",
+        "shards": rows,
+        "speedup_at_4_shards": at4,
+        "plane_bitwise_identical_to_service": bitwise,
+    }
+    out = pathlib.Path(args.shards_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+
+    for n, row in rows.items():
+        record(f"telemetry_plane_{n}_shards", row["modeled_wall_s"] * 1e3,
+               f"speedup=x{row['speedup_vs_1_shard']:.2f} "
+               f"eff={row['scaling_efficiency']:.2f} "
+               f"devices@10Hz={row['devices_per_plane_at_10hz']}")
+    print(f"shard sweep: x{at4:.2f} modeled speedup at 4 shards "
+          f"({rows['4']['devices_per_plane_at_10hz']} devices/plane @10Hz), "
+          f"bitwise={bitwise}")
+    print(f"wrote {out}")
+    return result
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="results/BENCH_telemetry_overhead.json")
@@ -89,7 +228,32 @@ def main(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail unless the best chunked full pipeline beats "
                          "the per-sample path by this factor")
+    ap.add_argument("--shards-out",
+                    default="results/BENCH_telemetry_shards.json")
+    ap.add_argument("--shard-sessions", type=int, default=SHARD_SESSIONS)
+    ap.add_argument("--shard-steps", type=int, default=SHARD_STEPS)
+    ap.add_argument("--shard-repeats", type=int, default=SHARD_REPEATS)
+    ap.add_argument("--min-shard-speedup", type=float, default=0.0,
+                    help="fail unless the modeled 4-shard plane beats one "
+                         "shard by this factor")
+    ap.add_argument("--no-shards", action="store_true",
+                    help="skip the shard sweep (chunked-ingestion part only)")
+    ap.add_argument("--shards-only", action="store_true",
+                    help="run only the shard sweep")
     args = ap.parse_args(argv)
+
+    if args.shards_only:
+        shards = run_shard_sweep(args)
+        if not shards["plane_bitwise_identical_to_service"]:
+            print("FAIL: sharded plane snapshot differs from the unsharded "
+                  "service", file=sys.stderr)
+            return 1
+        if shards["speedup_at_4_shards"] < args.min_shard_speedup:
+            print(f"FAIL: shard speedup x{shards['speedup_at_4_shards']:.2f}"
+                  f" < required x{args.min_shard_speedup:.2f}",
+                  file=sys.stderr)
+            return 1
+        return 0
 
     ts, ps = _synthetic(args.samples)
     bounds = ts[::SAMPLES_PER_STEP]
@@ -158,6 +322,18 @@ def main(argv=None) -> int:
         print(f"FAIL: speedup x{speedup:.1f} < required "
               f"x{args.min_speedup:.1f}", file=sys.stderr)
         return 1
+
+    if not args.no_shards:
+        shards = run_shard_sweep(args)
+        if not shards["plane_bitwise_identical_to_service"]:
+            print("FAIL: sharded plane snapshot differs from the unsharded "
+                  "service", file=sys.stderr)
+            return 1
+        if shards["speedup_at_4_shards"] < args.min_shard_speedup:
+            print(f"FAIL: shard speedup x{shards['speedup_at_4_shards']:.2f}"
+                  f" < required x{args.min_shard_speedup:.2f}",
+                  file=sys.stderr)
+            return 1
     return 0
 
 

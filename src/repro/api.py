@@ -630,6 +630,24 @@ class EnergyModel:
             service.register(session)
         return session
 
+    def plane(self, n_shards: int = 2, *, runner: str = "thread"):
+        """A sharded ``telemetry.TelemetryPlane`` — a drop-in
+        ``TelemetryService`` whose registered sessions are partitioned
+        across ``n_shards`` shards and whose snapshot is merged from
+        per-shard summaries, bitwise-identical to the unsharded service:
+
+            plane = model.plane(4)
+            model.serve(counts_fn, service=plane, ...)
+            ...
+            print(plane.to_json())          # same bits, any shard count
+
+        ``runner`` picks the drain substrate: ``"thread"`` (default),
+        ``"serial"``, or ``"process"`` (spawned workers over
+        shared-memory rings; a batch drain for unstarted sessions).
+        """
+        from repro.telemetry.plane import TelemetryPlane
+        return TelemetryPlane(n_shards, runner=runner)
+
     def serve(self, counts_fn=None, *, requests=None, **kwargs):
         """An energy-metered continuous-batching server on this model.
 

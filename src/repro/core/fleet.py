@@ -80,6 +80,22 @@ class EnergyMonitor:
         """Default per-step op counts (one profile per program, §5.3.2)."""
         self.step_counts = counts
 
+    def bind(self, service, key: Optional[str] = None) -> str:
+        """Ride a ``TelemetryService``/``TelemetryPlane``: register the live
+        session (and governor pane, when present) so this monitor's
+        workload shows up in the fleet snapshot and drains through
+        plane-wide ``poll_all``/``finish_all``.  Returns the session key.
+        """
+        if self.live is None:
+            raise RuntimeError("no live session: create the monitor with "
+                               "monitor(live=True) before bind()")
+        key = key or f"{self.live.device.name}/{self.live.name}"
+        service.register(self.live, key)
+        if self.governor is not None and hasattr(service,
+                                                 "register_governor"):
+            service.register_governor(key, self.governor)
+        return key
+
     def observe(self, step: int, counts: Optional[OpCounts] = None,
                 duration_s: Optional[float] = None,
                 counters: Optional[dict] = None,

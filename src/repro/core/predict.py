@@ -22,7 +22,10 @@ import numpy as np
 
 from repro.core import isa
 from repro.core.counting import counts_matrix
-from repro.core.opcount import OpCounts
+# the accumulation core defines OpCounts; importing it from there (not the
+# jax front-end ``core.opcount``) keeps this module importable in processes
+# without jax — telemetry shard workers price windows through it
+from repro.core.counting import OpCounts
 from repro.core.table import EnergyTable
 
 # How predicted traffic is split when no profiled counters are available

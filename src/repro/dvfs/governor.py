@@ -275,3 +275,84 @@ class SweetSpotGovernor:
                 for p in self.candidates],
             "decisions": [d.snapshot() for d in self.decisions[-history:]],
         }
+
+    # -- persistence --------------------------------------------------------
+    def state_dict(self) -> Dict[str, object]:
+        """Everything a restarted serve process needs to resume *exploit*.
+
+        JSON-safe.  Unlike ``snapshot`` (a dashboard view), this carries
+        the full EWMA statistics, the exploration order, and the dwell/
+        stale flags — so ``load_state``/``restore`` puts a fresh governor
+        exactly where this one stood: a converged governor proposes the
+        same operating point with reason ``"hold"`` on its first call.
+        """
+        def enc(p):
+            return None if p is None else [p[0], p[1]]
+        return {
+            "version": 1,
+            "config": dataclasses.asdict(self.config),
+            "candidates": [enc(p) for p in self.candidates],
+            "explore_order": [enc(p) for p in self._explore_order],
+            "current": enc(self._current),
+            "dwell": self._dwell,
+            "stale": self._stale,
+            "stats": [
+                {"point": enc(p), "j_per_work": s.j_per_work,
+                 "work_per_s": s.work_per_s,
+                 "last_j_per_work": s.last_j_per_work, "n": s.n}
+                for p, s in self._stats.items()],
+            "decisions": [d.snapshot() for d in self.decisions],
+        }
+
+    def load_state(self, state: Dict[str, object]) -> "SweetSpotGovernor":
+        """Fold a ``state_dict`` into this governor.
+
+        Tolerant of candidate-set changes across restarts: statistics for
+        points this governor doesn't know are dropped; new points it has
+        that the state lacks stay unexplored (they join the end of the
+        exploration order), so a grid extension after a restart is
+        explored incrementally rather than from scratch.
+        """
+        def dec(v):
+            if v is None:
+                return None
+            return (float(v[0]), None if v[1] is None else float(v[1]))
+        known = set(self.candidates)
+        for row in state.get("stats", []):
+            p = dec(row["point"])
+            if p not in known:
+                continue
+            s = self._stats[p]
+            s.j_per_work = row["j_per_work"]
+            s.work_per_s = row["work_per_s"]
+            s.last_j_per_work = row.get("last_j_per_work")
+            s.n = int(row["n"])
+        cur = dec(state.get("current"))
+        self._current = cur if cur in known else None
+        self._dwell = int(state.get("dwell", 0))
+        self._stale = bool(state.get("stale", False))
+        order = [p for p in (dec(v) for v in state.get("explore_order", []))
+                 if p in known]
+        order += [p for p in self._explore_order if p not in set(order)]
+        if order:
+            self._explore_order = order
+        self.decisions = [
+            GovernorDecision(index=d["index"], freq_mhz=d["freq_mhz"],
+                             power_cap_w=d["power_cap_w"],
+                             reason=d["reason"],
+                             j_per_work=d.get("j_per_work"),
+                             work_per_s=d.get("work_per_s"))
+            for d in state.get("decisions", [])]
+        return self
+
+    @classmethod
+    def restore(cls, state: Dict[str, object], *,
+                config: Optional[GovernorConfig] = None,
+                drift_flag: Optional[Callable[[], bool]] = None
+                ) -> "SweetSpotGovernor":
+        """Rebuild a governor from ``state_dict`` output alone."""
+        candidates = [(float(v[0]), None if v[1] is None else float(v[1]))
+                      for v in state["candidates"]]
+        cfg = config or GovernorConfig(**state["config"])
+        gov = cls(candidates, cfg, drift_flag=drift_flag)
+        return gov.load_state(state)

@@ -28,7 +28,9 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import isa
-from repro.core.opcount import OpCounts
+# OpCounts lives in the jax-free accumulation core; telemetry shard
+# workers import this module and must not pull in jax via core.opcount
+from repro.core.counting import OpCounts
 from repro.hw.spec import ChipSpec, VfCurve
 
 # Canonical class ids used on the timing/energy hot paths.

@@ -16,6 +16,7 @@ the energy accounting reflects the actual architecture at each batch size.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import Optional
 
@@ -77,6 +78,12 @@ def make_workload(*, tenants: int, requests: int, prompt_len: int,
     return reqs
 
 
+def _governor_state_path(energy_system: str):
+    """Where the sweet-spot governor persists across serve restarts."""
+    from repro.core.store import default_store
+    return default_store().run_dir(energy_system) / "governor_state.json"
+
+
 def run(arch: str, *, smoke: bool = True, tenants: int = 2,
         requests: int = 6, prompt_len: int = 16, max_new: int = 16,
         max_batch: int = 4, budget_j_per_token: Optional[float] = None,
@@ -84,7 +91,8 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
         telemetry_chunk: Optional[int] = 4096,
         min_phase_seconds: float = 4.0, verbose: bool = True,
         freq_mhz: Optional[float] = None, governor: bool = False,
-        sla_tokens_per_s: Optional[float] = None):
+        sla_tokens_per_s: Optional[float] = None,
+        telemetry_shards: Optional[int] = None):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
     max_seq = 2 * prompt_len + 2 * max_new + 1   # covers the 2× draws
@@ -101,17 +109,39 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
                    if f is not None]
         gov = SweetSpotGovernor(
             fam, GovernorConfig(sla_work_per_s=sla_tokens_per_s))
+        # resume where the previous serve run left off: a converged
+        # governor re-enters exploit at the same operating point instead
+        # of re-exploring the whole grid on every restart
+        state_path = _governor_state_path(energy_system)
+        if state_path.exists():
+            try:
+                gov.load_state(json.loads(state_path.read_text()))
+                if verbose:
+                    print(f"[dvfs] restored governor state "
+                          f"({state_path})")
+            except (ValueError, KeyError) as exc:
+                print(f"[dvfs] ignoring stale governor state: {exc}")
+    # sharded telemetry plane: billing, governor pane and the per-phase
+    # sessions ride it exactly like the one-process service (the plane is
+    # a drop-in TelemetryService with a merge-based snapshot)
+    plane = model.plane(telemetry_shards) if telemetry_shards else None
     server = model.serve(
         model_counts_fn(cfg, params, max_seq=max_seq),
         policy=EnergyPolicy(max_batch=max_batch,
                             budget_j_per_token=budget_j_per_token),
         min_phase_seconds=min_phase_seconds,
         telemetry_chunk=telemetry_chunk, name=f"serve/{arch}",
-        operating_point=freq_mhz, governor=gov)
+        operating_point=freq_mhz, governor=gov, service=plane)
     workload = make_workload(tenants=tenants, requests=requests,
                              prompt_len=prompt_len, max_new=max_new,
                              seed=seed)
     report = server.run(workload)
+    if gov is not None:
+        state_path = _governor_state_path(energy_system)
+        state_path.parent.mkdir(parents=True, exist_ok=True)
+        state_path.write_text(json.dumps(gov.state_dict(), indent=1))
+        if verbose:
+            print(f"[dvfs] governor state saved ({state_path})")
 
     if verbose:
         print(f"[serve] {arch}: {len(workload)} requests / {tenants} "
@@ -135,6 +165,11 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
                   f"{len(gov.decisions)} decisions")
         elif freq_mhz is not None:
             print(f"[dvfs] pinned at f={freq_mhz:g} MHz")
+        if plane is not None:
+            fleet = plane.snapshot()["fleet"]
+            print(f"[plane] {len(plane.shards)} shards, "
+                  f"{fleet['n_sessions']} sessions, "
+                  f"{fleet['measured_j']:.4e} J merged exactly")
     return report, server
 
 
@@ -156,6 +191,9 @@ def main(argv=None) -> int:
                     help="close the loop: sweet-spot DVFS per phase")
     ap.add_argument("--sla-tokens-per-s", type=float, default=None,
                     help="throughput floor the governor must hold")
+    ap.add_argument("--telemetry-shards", type=int, default=None,
+                    help="shard the telemetry plane across N workers "
+                         "(0/None = single-process service)")
     args = ap.parse_args(argv)
     report, _ = run(args.arch, smoke=args.smoke, tenants=args.tenants,
                     requests=args.requests, prompt_len=args.prompt_len,
@@ -163,7 +201,8 @@ def main(argv=None) -> int:
                     budget_j_per_token=args.budget_j_per_token,
                     telemetry_chunk=args.telemetry_chunk or None,
                     freq_mhz=args.freq_mhz, governor=args.governor,
-                    sla_tokens_per_s=args.sla_tokens_per_s)
+                    sla_tokens_per_s=args.sla_tokens_per_s,
+                    telemetry_shards=args.telemetry_shards or None)
     assert len(report.requests) == args.requests
     return 0
 

@@ -44,6 +44,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         telemetry_chunk: Optional[int] = 4096,
         freq_mhz: Optional[float] = None, governor: bool = False,
         sla_tokens_per_s: Optional[float] = None,
+        telemetry_shards: Optional[int] = None,
         seed: int = 0, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     shape = ShapeSpec("run", seq_len, global_batch, "train")
@@ -69,7 +70,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
     # A first-seen energy_system trains through the resumable calibration
     # pipeline; with a donor it is bootstrapped from a fraction of the
     # microbenchmark suite instead of a full profile (Fig. 14).
-    monitor = None
+    monitor, plane = None, None
     if energy_system:
         example = model_batch(cfg, shape, dcfg, 0)
         counts = count_fn(make_train_step(cfg, opt_cfg,
@@ -106,6 +107,12 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         monitor = model.monitor(live=True, step_counts=counts,
                                 telemetry_chunk=telemetry_chunk,
                                 operating_point=point, governor=gov)
+        # --telemetry-shards: the run's session rides a sharded telemetry
+        # plane (plane-wide drains, merge-based snapshot) instead of
+        # finishing stand-alone
+        plane = model.plane(telemetry_shards) if telemetry_shards else None
+        if plane is not None:
+            monitor.bind(plane)
 
     straggler = StragglerMonitor()
     losses = []
@@ -128,7 +135,17 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         if verbose:
             print(f"[train] step {step} loss={loss:.4f} ({dt*1e3:.0f}ms)")
     if monitor is not None and monitor.live.steps_registered:
-        summary = monitor.live.finish()
+        if plane is not None:
+            monitor.live.start()
+            plane.finish_all()       # plane-wide drain over all shards
+            summary = monitor.live.summary
+            if verbose:
+                fleet = plane.snapshot()["fleet"]
+                print(f"[plane] {len(plane.shards)} shards, "
+                      f"{fleet['n_sessions']} sessions, "
+                      f"{fleet['measured_j']:.4e} J merged exactly")
+        else:
+            summary = monitor.live.finish()
         if verbose:
             rec = monitor.records[-1]
             print(f"[train] E/token={rec.joules_per_unit_work:.2e}J "
@@ -172,6 +189,9 @@ def main(argv=None) -> int:
                          "frequency and feed it per-step measurements")
     ap.add_argument("--sla-tokens-per-s", type=float, default=None,
                     help="throughput floor the governor must hold")
+    ap.add_argument("--telemetry-shards", type=int, default=None,
+                    help="shard the telemetry plane across N workers "
+                         "(0/None = single-process service)")
     args = ap.parse_args(argv)
     _, losses, _ = run(args.arch, smoke=args.smoke, steps=args.steps,
                        seq_len=args.seq_len, global_batch=args.global_batch,
@@ -182,7 +202,8 @@ def main(argv=None) -> int:
                        energy_profile_fraction=args.energy_profile_fraction,
                        telemetry_chunk=args.telemetry_chunk or None,
                        freq_mhz=args.freq_mhz, governor=args.governor,
-                       sla_tokens_per_s=args.sla_tokens_per_s)
+                       sla_tokens_per_s=args.sla_tokens_per_s,
+                       telemetry_shards=args.telemetry_shards or None)
     ok = np.isfinite(losses).all() and losses[-1] < losses[0]
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if ok else 'check'})")

@@ -8,6 +8,8 @@ The runtime layer between raw power sensors and the fleet monitor:
     align    — MTSM-style marker synchronization → measured J per step
     attrib   — measured-vs-predicted residuals, drift, recalibration
     service  — per-workload sessions + the multi-device aggregator
+    shard    — mergeable per-shard summaries + the worker runtime
+    plane    — the sharded service: N shards, one exactly-tiling snapshot
 
 Every stage has two ingestion surfaces: the per-sample ``PowerSample``
 reference path and a chunked ndarray fast path (``chunks(n)`` samplers,
@@ -20,15 +22,19 @@ Entry point: ``repro.api.EnergyModel.stream(...)`` /
 ``EnergyModel.monitor(live=...)``.
 """
 from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
-                                   align_trace, contiguous_markers)
+                                   align_trace, contiguous_markers,
+                                   window_tiling)
 from repro.telemetry.attrib import (DriftDetector, DriftState,
                                     OnlineAttributor, StepAttribution,
                                     rescale_table)
+from repro.telemetry.plane import TelemetryPlane
 from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
                                      FeedSampler, PowerSample, SampleRing,
-                                     TraceReplaySampler, iter_chunks)
+                                     SharedSampleRing, TraceReplaySampler,
+                                     iter_chunks)
 from repro.telemetry.service import (StreamSession, StreamSummary,
-                                     TelemetryService)
+                                     TelemetryService, fleet_block)
+from repro.telemetry.shard import Shard, ShardSummary
 from repro.telemetry.stream import (OnlineSteadyState, PlateauState,
                                     StreamingIntegrator, rolling_std,
                                     trapezoid_energy)
@@ -40,5 +46,6 @@ __all__ = [
     "PowerSample", "SampleRing", "TraceReplaySampler", "StreamSession",
     "StreamSummary", "TelemetryService", "OnlineSteadyState", "PlateauState",
     "StreamingIntegrator", "rolling_std", "trapezoid_energy",
-    "DEFAULT_CHUNK", "iter_chunks",
+    "DEFAULT_CHUNK", "iter_chunks", "TelemetryPlane", "Shard",
+    "ShardSummary", "SharedSampleRing", "fleet_block", "window_tiling",
 ]

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Callable, Iterable, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -280,6 +280,24 @@ def align_trace(trace: SensorTrace,
     for i in range(len(t)):
         aligner.add_sample(PowerSample(float(t[i]), float(p[i])))
     return aligner.close()
+
+
+def window_tiling(windows: Sequence[AlignedWindow]) -> Dict[str, object]:
+    """The per-session tiling record a ``ShardSummary`` carries.
+
+    ``step_j`` lists each logical step's measured joules in window order;
+    ``startup_j`` collects the pre-marker spans (step < 0) in arrival
+    order — the same order ``StreamSession`` accumulated them, so anyone
+    re-summing the tiling reproduces the session's floats bitwise.
+    """
+    startup_j = 0.0
+    step_j: List[float] = []
+    for w in windows:
+        if w.step < 0:
+            startup_j += w.measured_j
+        else:
+            step_j.append(w.measured_j)
+    return {"startup_j": startup_j, "step_j": step_j}
 
 
 def contiguous_markers(boundaries: Sequence[float], *, names=None,

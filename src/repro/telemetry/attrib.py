@@ -27,7 +27,9 @@ from typing import Callable, Dict, List, Optional, Union
 import numpy as np
 
 from repro.core import isa
-from repro.core.opcount import OpCounts
+# the pure-numpy accumulation core, not the jax-importing counters:
+# telemetry shard workers import this module at spawn
+from repro.core.counting import OpCounts
 from repro.core.predict import Prediction, TablePredictor
 from repro.telemetry.align import AlignedWindow
 
@@ -143,6 +145,38 @@ class DriftDetector:
         self._consecutive = 0
         if not keep_baseline:
             self.baseline = math.nan
+
+    def state_dict(self) -> dict:
+        """The detector's complete state, JSON/pickle-safe.
+
+        ``load_state`` restores it exactly — same rolling window contents,
+        same baseline-learning buffer, same streak counters — so a detector
+        handed across a process boundary (telemetry shard workers) resumes
+        bit-for-bit where this one stands.
+        """
+        return {
+            "window": self.window,
+            "rel_tol": self.rel_tol,
+            "baseline_windows": self.baseline_windows,
+            "patience": self.patience,
+            "baseline": self.baseline,
+            "ratios": list(self._ratios),
+            "seen": list(self._seen),
+            "consecutive": self._consecutive,
+            "n": self._n,
+        }
+
+    def load_state(self, state: dict) -> "DriftDetector":
+        self.window = int(state["window"])
+        self.rel_tol = float(state["rel_tol"])
+        self.baseline_windows = int(state["baseline_windows"])
+        self.patience = int(state["patience"])
+        self.baseline = float(state["baseline"])
+        self._ratios = deque(state["ratios"], maxlen=self.window)
+        self._seen = list(state["seen"])
+        self._consecutive = int(state["consecutive"])
+        self._n = int(state["n"])
+        return self
 
 
 def mape_pct(attributions) -> float:

@@ -1,0 +1,260 @@
+"""The sharded telemetry plane: N shards, one exactly-tiling snapshot.
+
+``TelemetryPlane`` is a drop-in ``TelemetryService`` — same ``register`` /
+``poll_all`` / ``finish_all`` / ``snapshot`` surface, so billing panes,
+governors, the serving scheduler and the fleet monitor ride it unchanged —
+that partitions registered sessions across ``Shard``s and merges their
+``ShardSummary``s back into one snapshot.  The merge is exact: every float
+is either per-session (one shard computed it) or re-summed in the canonical
+sorted-key order shared with the single-process service, so the plane's
+snapshot is bitwise-identical to an unsharded service over the same
+sessions, for any shard count and any partition.
+
+Three runners cover the deployment spectrum with one drain code path
+(``Shard.poll`` — the same rotating round-robin the service uses):
+
+* ``"serial"`` — shards drain in-line, one after another.  The reference.
+* ``"thread"`` (default) — one pool thread per shard.  Sessions on
+  different shards interleave in time, exactly like production; totals are
+  unchanged because each session's pipeline is touched by only its shard.
+* ``"process"`` — spawned workers drain shards over shared-memory rings
+  (``telemetry.shard``): the parent launches device runs and publishes
+  traces into ``SharedSampleRing``s, workers rebuild the sessions
+  (``StreamSession.attached``) and ship results back for
+  ``adopt_remote``.  Workers never import jax.
+
+Elastic membership: ``detach_shard`` retires a shard — its unfinished
+sessions are rehomed to the survivors, its finished history is frozen as a
+``ShardSummary`` that keeps merging into every later snapshot, so a shard
+loss never loses a joule (``train.elastic.fold_shard_loss`` wraps this for
+the checkpoint-restart path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+from repro.telemetry.service import StreamSession, TelemetryService
+from repro.telemetry.shard import Shard, ShardSummary, export_session
+
+RUNNERS = ("serial", "thread", "process")
+
+
+class TelemetryPlane(TelemetryService):
+    """A ``TelemetryService`` partitioned into mergeable shards."""
+
+    def __init__(self, n_shards: int = 2, *, runner: str = "thread"):
+        super().__init__()
+        if n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {n_shards}")
+        if runner not in RUNNERS:
+            raise ValueError(f"unknown runner {runner!r} (one of {RUNNERS})")
+        self.runner = runner
+        self.shards: List[Shard] = [Shard(i) for i in range(n_shards)]
+        self._retired: List[ShardSummary] = []
+        self._assignment: Dict[str, Shard] = {}
+        self._delegated = False        # process runner already dispatched
+        self._pool = None
+
+    # -- membership ----------------------------------------------------------
+    def register(self, session: StreamSession, key: Optional[str] = None,
+                 *, shard: Optional[int] = None) -> StreamSession:
+        """Register a session and place it on a shard.
+
+        Default placement is least-loaded (ties to the lowest shard id) —
+        deterministic round-robin for a stream of registrations, so the
+        same registration order always yields the same partition.
+        ``shard=`` pins the session explicitly.
+        """
+        session = super().register(session, key)
+        key = next(k for k, s in self._sessions.items() if s is session)
+        if shard is None:
+            target = min(self.shards, key=lambda sh: (len(sh), sh.id))
+        else:
+            target = self.shard(shard)
+        target.add(key, session)
+        self._assignment[key] = target
+        return session
+
+    def shard(self, shard_id: int) -> Shard:
+        for sh in self.shards:
+            if sh.id == shard_id:
+                return sh
+        raise KeyError(f"no shard {shard_id} "
+                       f"(have {[s.id for s in self.shards]})")
+
+    # -- drains --------------------------------------------------------------
+    def poll_all(self, max_chunks: int = 1) -> int:
+        """One drain pass over every shard (plane-wide ``poll_all``)."""
+        if self.runner == "process":
+            return self._drain_remote()
+        active = [sh for sh in self.shards if sh.active()]
+        if not active:
+            return 0
+        if self.runner == "thread" and len(active) > 1:
+            pool = self._thread_pool()
+            return sum(pool.map(lambda sh: sh.poll(max_chunks), active))
+        return sum(sh.poll(max_chunks) for sh in active)
+
+    def finish_all(self) -> Dict[str, object]:
+        """Drain every shard to completion; key -> summary."""
+        if self.runner == "process":
+            self._drain_remote()
+        else:
+            while self.poll_all(max_chunks=64):
+                pass
+        return {k: s.summary for k, s in self._sessions.items()
+                if s.summary is not None}
+
+    def _thread_pool(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=len(self.shards),
+                thread_name_prefix="telemetry-shard")
+        return self._pool
+
+    def _drain_remote(self) -> int:
+        """Dispatch every shard's pending sessions to spawned workers.
+
+        Sessions that were already started in this process (their pipeline
+        state lives here) drain locally; unstarted ones are exported —
+        the parent runs the device half, publishes the trace into a
+        shared ring, and the worker runs the ingest half.  One shot per
+        plane: the process runner is a batch drain, not an incremental
+        poll.
+        """
+        import multiprocessing as mp
+
+        total = 0
+        if self._delegated:
+            for sh in self.shards:
+                total += sh.drain()
+            return total
+        self._delegated = True
+        from repro.core import isa
+        ctx = mp.get_context("spawn")
+        class_names = isa.CLASS_INDEX.names()
+        # Launch device runs in *registration* order, not shard order: a
+        # shared device's sensor-noise stream is consumed run by run, so
+        # the trace each session gets must not depend on how sessions were
+        # grouped into shards — this is part of the partition-invariance
+        # guarantee (the unsharded reference starts sessions in the same
+        # registration order).
+        per_shard: Dict[int, list] = {}
+        jobs = []
+        try:
+            for key, s in self._sessions.items():
+                if s.summary is not None or s.started or not s._steps:
+                    continue       # finished/armed-here/idle: stays local
+                sh = self._assignment.get(key)
+                if sh is None:
+                    continue
+                spec, ring = export_session(key, s)
+                per_shard.setdefault(sh.id, []).append((spec, ring, s))
+            for sh in self.shards:
+                exported = per_shard.get(sh.id, [])
+                if not exported:
+                    continue
+                specs = [spec for spec, _, _ in exported]
+                rings = [ring for _, ring, _ in exported]
+                tables = {}
+                for spec, _, s in exported:
+                    tables.setdefault(spec["table_ref"],
+                                      s.predictor.table.to_dict())
+                parent_conn, child_conn = ctx.Pipe(duplex=False)
+                proc = ctx.Process(
+                    target=_worker_main,
+                    args=(sh.id, class_names, tables, specs, child_conn),
+                    daemon=True)
+                proc.start()
+                child_conn.close()
+                jobs.append((sh, specs, rings, parent_conn, proc))
+            for sh, specs, rings, conn, proc in jobs:
+                if not conn.poll(300.0):
+                    proc.terminate()
+                    raise RuntimeError(
+                        f"telemetry shard {sh.id} worker timed out")
+                reply = conn.recv()       # before join: avoid pipe deadlock
+                proc.join()
+                if not reply["ok"]:
+                    raise RuntimeError(
+                        f"telemetry shard {sh.id} worker failed:\n"
+                        f"{reply['error']}")
+                for spec in specs:
+                    result = reply["results"][spec["key"]]
+                    sh.sessions[spec["key"]].adopt_remote(result)
+                    total += int(result["samples_drained"])
+        finally:
+            for _, _, _, conn, _ in jobs:
+                conn.close()
+            for exported in per_shard.values():
+                for _, ring, _ in exported:
+                    ring.close()
+                    ring.unlink()
+        # anything armed in this process (serve-style inline sessions)
+        # still drains here
+        for sh in self.shards:
+            total += sh.drain()
+        return total
+
+    # -- snapshots ------------------------------------------------------------
+    def shard_summaries(self) -> List[ShardSummary]:
+        """Live summaries of every populated shard, plus retired ones."""
+        live = [sh.summarize() for sh in self.shards if len(sh)]
+        return live + list(self._retired)
+
+    def merged(self) -> ShardSummary:
+        return functools.reduce(ShardSummary.merge, self.shard_summaries(),
+                                ShardSummary())
+
+    def snapshot(self) -> dict:
+        """Merge-based snapshot: bitwise the unsharded service's."""
+        out = self.merged().snapshot()
+        if self._billing:
+            out["billing"] = {k: fn() for k, fn in self._billing.items()}
+        if self._governors:
+            out["governors"] = {k: g.snapshot()
+                                for k, g in self._governors.items()}
+        return out
+
+    # -- elastic membership ---------------------------------------------------
+    def detach_shard(self, shard_id: int, *,
+                     rehome: bool = True) -> ShardSummary:
+        """Retire a shard with exact accounting.
+
+        The departing shard's finished sessions freeze into a
+        ``ShardSummary`` that every later ``snapshot()`` still merges —
+        their joules stay on the books forever.  Unfinished sessions are
+        rehomed to the least-loaded survivors (``rehome=False`` drops
+        them *from the plane's live set* but they remain registered, so a
+        caller can still finish them by hand).  Returns the frozen
+        summary.
+        """
+        shard = self.shard(shard_id)
+        survivors = [sh for sh in self.shards if sh.id != shard_id]
+        if not survivors:
+            raise ValueError("cannot detach the last shard")
+        moved = {k: s for k, s in shard.sessions.items()
+                 if s.summary is None}
+        for k in moved:
+            del shard.sessions[k]
+        final = shard.summarize()          # finished history only — frozen
+        if len(shard):
+            self._retired.append(final)
+        if rehome:
+            for k in sorted(moved):
+                target = min(survivors, key=lambda sh: (len(sh), sh.id))
+                target.add(k, moved[k])
+                self._assignment[k] = target
+        else:
+            for k in moved:
+                self._assignment.pop(k, None)
+        self.shards = survivors
+        return final
+
+
+def _worker_main(shard_id, class_names, tables, specs, conn):
+    """Top-level spawn target (bound methods don't pickle across spawn)."""
+    from repro.telemetry.shard import run_shard_worker
+    run_shard_worker(shard_id, class_names, tables, specs, conn)

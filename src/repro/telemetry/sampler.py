@@ -155,6 +155,140 @@ class SampleRing:
             return np.arange(self._count)
         return (np.arange(self.capacity) + self._head) % self.capacity
 
+    def views(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(times, power, util, temp) oldest-first — zero-copy when possible.
+
+        When the buffered window is laid out contiguously (the common case
+        for a publisher that wrote exactly ``capacity`` samples, or fewer
+        than one wrap), the returned arrays are direct views of the ring
+        storage — this is what lets a shard worker consume a shared-memory
+        ring without ever copying the trace.  A wrapped window falls back
+        to the ordered copy.
+        """
+        if self._count == self.capacity and self._head == 0:
+            return self._t, self._p, self._u, self._c
+        if self._count < self.capacity and self._head == self._count:
+            n = self._count
+            return self._t[:n], self._p[:n], self._u[:n], self._c[:n]
+        idx = self._order()
+        return (self._t[idx], self._p[idx], self._u[idx], self._c[idx])
+
+
+class SharedSampleRing(SampleRing):
+    """A ``SampleRing`` whose storage lives in ``multiprocessing``
+    shared memory — the zero-copy transport between a telemetry plane's
+    publisher process and its shard workers.
+
+    Layout: an int64 header ``[capacity, head, count, total, dropped]``
+    followed by four float64 arrays (times, power, util, temp).  Header
+    counters are ndarray views into the segment too, so publisher-side
+    ``append``/``extend`` bookkeeping is visible to an attached consumer
+    with no extra protocol.  The intended discipline is single-writer:
+    the publisher fills the ring, then workers ``attach`` and read
+    ``views()`` — which, for an unwrapped window, are direct views of the
+    shared segment (no copy anywhere on the path).
+
+    ``create`` owns the segment (``unlink`` releases it); ``attach`` maps
+    an existing one by name and never unlinks.
+    """
+
+    _HEADER = 5 * 8          # five int64 header slots
+
+    def __init__(self, capacity: int = 4096, *, _shm=None):
+        if capacity < 2:
+            raise ValueError(f"ring capacity must be >= 2, got {capacity}")
+        if _shm is None:
+            from multiprocessing import shared_memory
+            size = self._HEADER + 4 * 8 * int(capacity)
+            _shm = shared_memory.SharedMemory(create=True, size=size)
+            fresh = True
+        else:
+            fresh = False
+        self.shm = _shm
+        cap = int(capacity)
+        self._hdr = np.ndarray((5,), dtype=np.int64, buffer=_shm.buf)
+        off = self._HEADER
+        arrays = []
+        for _ in range(4):
+            arrays.append(np.ndarray((cap,), dtype=np.float64,
+                                     buffer=_shm.buf, offset=off))
+            off += 8 * cap
+        self._t, self._p, self._u, self._c = arrays
+        self.capacity = cap
+        if fresh:
+            self._hdr[0] = cap
+            self._hdr[1:] = 0
+            self._t[:] = 0.0
+            self._p[:] = 0.0
+            self._u[:] = math.nan
+            self._c[:] = math.nan
+
+    # base-class code manipulates these as instance attributes; as data
+    # descriptors they shadow that and route every access to the header
+    @property
+    def _head(self) -> int:
+        return int(self._hdr[1])
+
+    @_head.setter
+    def _head(self, v: int) -> None:
+        self._hdr[1] = v
+
+    @property
+    def _count(self) -> int:
+        return int(self._hdr[2])
+
+    @_count.setter
+    def _count(self, v: int) -> None:
+        self._hdr[2] = v
+
+    @property
+    def total(self) -> int:
+        return int(self._hdr[3])
+
+    @total.setter
+    def total(self, v: int) -> None:
+        self._hdr[3] = v
+
+    @property
+    def dropped(self) -> int:
+        return int(self._hdr[4])
+
+    @dropped.setter
+    def dropped(self, v: int) -> None:
+        self._hdr[4] = v
+
+    @classmethod
+    def create(cls, capacity: int = 4096) -> "SharedSampleRing":
+        return cls(capacity)
+
+    @classmethod
+    def attach(cls, name: str) -> "SharedSampleRing":
+        from multiprocessing import shared_memory
+        # Python 3.10 registers this attach with the resource tracker too
+        # (bpo-39959); spawned workers share the creator's tracker and the
+        # cache is name-keyed, so the duplicate is harmless — the creator's
+        # ``unlink`` clears the one entry.
+        shm = shared_memory.SharedMemory(name=name)
+        cap = int(np.ndarray((1,), dtype=np.int64, buffer=shm.buf)[0])
+        return cls(cap, _shm=shm)
+
+    @property
+    def shm_name(self) -> str:
+        return self.shm.name
+
+    def close(self) -> None:
+        """Drop this process's mapping (the segment itself survives)."""
+        # ndarray views pin the buffer; release them before closing
+        self._hdr = self._t = self._p = self._u = self._c = None
+        self.shm.close()
+
+    def unlink(self) -> None:
+        """Release the segment system-wide (creator-side, after close)."""
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:
+            pass
+
 
 # ---------------------------------------------------------------------------
 # Sources.

@@ -30,14 +30,19 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.opcount import OpCounts
+# OpCounts from the pure-numpy accumulation core (not the jax-importing
+# ``core.opcount`` counters): spawned telemetry shard workers import this
+# module, and their startup must not pay for (or depend on) jax.
+from repro.core.counting import OpCounts
 from repro.core.predict import TablePredictor
 from repro.hw.device import Program, RunRecord, SimDevice
 from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
                                    contiguous_markers)
 from repro.telemetry.attrib import DriftState, OnlineAttributor, mape_pct
+from repro.telemetry.attrib import rescale_table
 from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
-                                     SampleRing, iter_chunks)
+                                     SampleRing, TraceReplaySampler,
+                                     iter_chunks)
 from repro.telemetry.stream import OnlineSteadyState, StreamingIntegrator
 
 _BYTE_COUNTERS = ("hbm_read_bytes", "hbm_write_bytes",
@@ -52,6 +57,42 @@ class _HostStep:
     host_duration_s: Optional[float]
     work_units: float
     counters: Optional[dict]
+
+
+@dataclasses.dataclass
+class _AttachedDevice:
+    """Stands in for a ``SimDevice`` on sessions attached to a trace that
+    was produced elsewhere (a shard worker, a replayed recording).  Only
+    the snapshot-facing surface exists — such a session never launches a
+    program."""
+
+    name: str
+    operating_point: Optional[object] = None
+
+
+def fleet_block(per: Dict[str, dict], anomalies: int) -> dict:
+    """The fleet roll-up over per-session snapshot dicts.
+
+    Float totals accumulate in **sorted-key order** — the canonical order
+    shared by ``TelemetryService.snapshot`` and the sharded plane's
+    ``ShardSummary`` merges.  Float addition is not associative, so fixing
+    one order is what makes the roll-up partition-invariant: any grouping
+    of the same sessions into shards reproduces the same fleet floats
+    bitwise.
+    """
+    keys = sorted(per)
+    measured_j = 0.0
+    samples = 0
+    for k in keys:
+        measured_j += per[k]["measured_j"]
+        samples += per[k]["samples"]
+    return {
+        "n_sessions": len(per),
+        "measured_j": measured_j,
+        "samples": samples,
+        "drifting": sorted(k for k in keys if per[k]["drifting"]),
+        "anomalies": anomalies,
+    }
 
 
 @dataclasses.dataclass
@@ -120,6 +161,12 @@ class StreamSession:
         self._aligner: Optional[StreamAligner] = None
         self._source = None          # chunk/sample iterator while draining
         self._pending: List[AlignedWindow] = []   # chunked: await batch fuse
+        # drain accounting: every chunk (including the final, possibly
+        # partial one that closes the session) is counted, so plane-level
+        # sums over polls reconcile exactly with summary.n_samples
+        self.samples_drained = 0
+        self.chunks_drained = 0
+        self._remote_snapshot: Optional[dict] = None   # set by adopt_remote
         # session-local slices into a possibly shared attributor
         self._a0 = len(self.attributor.attributions)
         self._recal0 = len(self.attributor.recalibrations)
@@ -182,6 +229,19 @@ class StreamSession:
         """
         if self.summary is not None or self._aligner is not None:
             return self
+        rec, sampler = self._launch(steps)
+        self._arm(rec, self._markers(rec, self._n), sampler)
+        return self
+
+    def _launch(self, steps: Optional[int] = None):
+        """Device half of ``start``: fix the step grid, run the program.
+
+        Returns ``(record, sampler)`` without arming the ingest pipeline.
+        The sharded plane uses this split: the parent process launches the
+        device run, publishes the trace through a shared-memory ring, and
+        a worker ``_arm``s an attached session around it — the two halves
+        compose back to exactly what ``start`` does in one process.
+        """
         n = steps if steps is not None else len(self._steps)
         if n <= 0:
             raise ValueError("no steps registered; call session.step(...) "
@@ -204,13 +264,99 @@ class StreamSession:
         rec, sampler = DeviceSampler(self.device).run(
             Program(self.name, self.counts, iters=iters))
         self.record = rec
+        return rec, sampler
 
+    def _arm(self, record: Optional[RunRecord], markers: List[Marker],
+             sampler) -> None:
+        """Ingest half of ``start``: marker grid + chunk source."""
+        self.record = record
         self._aligner = StreamAligner(on_window=self._on_window)
-        for m in self._markers(rec, n):
+        for m in markers:
             self._aligner.add_marker(m)
         self._source = (iter_chunks(sampler, self.chunk_size)
                         if self.chunk_size else iter(sampler))
+
+    @classmethod
+    def attached(cls, predictor: TablePredictor, counts: OpCounts, *,
+                 name: str, trace, markers: List[Marker],
+                 record: Optional[RunRecord] = None, steps=None,
+                 n_steps: Optional[int] = None, group: float = 1.0,
+                 device_name: str = "attached", device_point=None,
+                 operating_point=None, monitor=None,
+                 ring_capacity: int = 4096, recalibrate="rescale",
+                 store=None, detector=None, attributor=None,
+                 chunk_size: Optional[int] = DEFAULT_CHUNK
+                 ) -> "StreamSession":
+        """A session armed around an externally produced trace.
+
+        The device half already ran somewhere else — a shard worker's
+        parent process, or a recorded run — so this constructor rebuilds
+        only the ingest half: the same ring/integrator/plateau/aligner/
+        attributor stack, fed by ``trace`` under the given ``markers``.
+        ``group``/``steps``/``record`` restore the launching session's
+        step grid so window counters and summaries come out identical.
+        Shard workers are the primary caller (``telemetry.shard``); the
+        shard-scaling benchmark uses it to build synthetic fleets.
+        """
+        dev = _AttachedDevice(device_name, device_point)
+        self = cls(predictor, dev, counts, name, monitor=monitor,
+                   ring_capacity=ring_capacity, recalibrate=recalibrate,
+                   store=store, detector=detector, attributor=attributor,
+                   chunk_size=chunk_size, operating_point=None)
+        # already resolved by the launching session — adopt verbatim
+        # (re-resolving could round differently than the parent did)
+        self.operating_point = operating_point
+        if steps is not None:
+            self._steps = list(steps)
+        n = n_steps if n_steps is not None else len(self._steps)
+        if n <= 0:
+            raise ValueError("attached session needs steps= or n_steps=")
+        while len(self._steps) < n:
+            self._steps.append(_HostStep(len(self._steps), None, 1.0, None))
+        self._n = n
+        self._group = float(group)
+        self._group_counts = counts.scaled(self._group)
+        if record is None:
+            t = np.asarray(trace.times_s, dtype=float)
+            dur = float(t[-1] - t[0]) if t.size else 0.0
+            record = RunRecord(name=name, duration_s=dur,
+                               iters=max(int(round(group * n)), 1),
+                               trace=None, energy_counter_j=0.0, counters={})
+        self._arm(record, list(markers), TraceReplaySampler(trace))
         return self
+
+    def adopt_remote(self, result: dict, *,
+                     apply_recalibrations: bool = True) -> StreamSummary:
+        """Install a shard worker's finished state onto this session.
+
+        The worker ran the identical ingest pipeline over this session's
+        trace in another process; everything a snapshot or a
+        ``ShardSummary`` reads is restored here — summary, windows,
+        integrator state, drift-detector state, recalibration history and
+        drain accounting.  The worker's ring/plateau live state stays
+        remote; its final values arrive in the frozen snapshot this
+        session serves from now on.  ``apply_recalibrations`` replays any
+        drift repairs onto the parent's table (same ratios, same order —
+        per-entry multiplication reproduces the worker's table bitwise).
+        """
+        if self.summary is not None:
+            raise RuntimeError("session already finished; nothing to adopt")
+        self.summary = result["summary"]
+        self.windows = list(result["windows"])
+        self.startup_j = self.summary.startup_j
+        self.integrator.load_state(result["integrator"])
+        self.attributor.detector.load_state(result["detector"])
+        self.attributor.drift = self.summary.drift
+        if apply_recalibrations:
+            for ratio in result["recalibrations"]:
+                rescale_table(self.attributor.predictor, ratio,
+                              store=self.attributor.store)
+        self.attributor.recalibrations.extend(result["recalibrations"])
+        self.samples_drained = int(result["samples_drained"])
+        self.chunks_drained = int(result["chunks_drained"])
+        self._remote_snapshot = dict(result["snapshot"])
+        self._source = None
+        return self.summary
 
     def poll(self, max_chunks: int = 1) -> int:
         """Ingest up to ``max_chunks`` chunks; returns samples consumed.
@@ -222,6 +368,11 @@ class StreamSession:
         path (``chunk_size=None``) ingests the same number of samples one
         ``PowerSample`` at a time — the reference implementation.  When the
         sampler is exhausted the session closes and ``summary`` appears.
+
+        Every chunk is counted in ``chunks_drained`` — including the final,
+        possibly partial one that closes the session — so plane-level drain
+        accounting (sums of poll returns, per-shard chunk tallies)
+        reconciles exactly with ``summary.n_samples``.
         """
         if self.summary is not None:
             return 0
@@ -241,8 +392,12 @@ class StreamSession:
                 self.plateau.update_chunk(t, p)
                 self._aligner.add_samples(t, p)
                 self._flush_pending()
-                ingested += int(np.asarray(t).size)
+                size = int(np.asarray(t).size)
+                ingested += size
+                self.chunks_drained += 1
+                self.samples_drained += size
         else:
+            n_before = ingested
             for _ in range(max_chunks * DEFAULT_CHUNK):
                 s = next(self._source, None)
                 if s is None:
@@ -253,6 +408,11 @@ class StreamSession:
                 self.plateau.update(s.t_s, s.power_w)
                 self._aligner.add_sample(s)
                 ingested += 1
+            got = ingested - n_before
+            self.samples_drained += got
+            # per-sample path: account in reference chunk units, rounding
+            # the final partial group up so it is never dropped
+            self.chunks_drained += -(-got // DEFAULT_CHUNK) if got else 0
         return ingested
 
     def finish(self, steps: Optional[int] = None) -> StreamSummary:
@@ -381,7 +541,12 @@ class StreamSession:
 
         All statistics are session-local even when the attributor is
         shared across sessions (drift state is the live detector's).
+
+        A session adopted from a shard worker serves the worker's frozen
+        snapshot verbatim — the ring/plateau live state stayed remote.
         """
+        if self._remote_snapshot is not None:
+            return dict(self._remote_snapshot)
         latest = self.ring.latest()
         dev_pt = getattr(self.device, "operating_point", None)
         out = {
@@ -421,6 +586,7 @@ class TelemetryService:
         self._sessions: Dict[str, StreamSession] = {}
         self._billing: Dict[str, object] = {}   # key -> provider() -> dict
         self._governors: Dict[str, object] = {}  # key -> SweetSpotGovernor
+        self._cursor = 0                         # poll_all round-robin start
 
     def register_governor(self, key: str, governor) -> None:
         """Attach a DVFS governor pane: its decision history and per-point
@@ -467,11 +633,21 @@ class TelemetryService:
 
             while service.poll_all(max_chunks=4):
                 render(service.snapshot())
+
+        Sessions drain round-robin from a rotating cursor, not in
+        registration order: with unequal backlogs and a small
+        ``max_chunks`` budget, dict-order draining lets early-registered
+        sessions monopolize every pass while late ones starve.
         """
+        keys = [k for k, s in self._sessions.items()
+                if s.summary is None and s.started]
+        if not keys:
+            return 0
+        start = self._cursor % len(keys)
+        self._cursor += 1
         total = 0
-        for s in self._sessions.values():
-            if s.summary is None and s.started:
-                total += s.poll(max_chunks)
+        for k in keys[start:] + keys[:start]:
+            total += self._sessions[k].poll(max_chunks)
         return total
 
     def finish_all(self) -> Dict[str, "StreamSummary"]:
@@ -486,14 +662,7 @@ class TelemetryService:
                         if s.monitor is not None)
         out = {
             "sessions": per,
-            "fleet": {
-                "n_sessions": len(per),
-                "measured_j": sum(p["measured_j"] for p in per.values()),
-                "samples": sum(p["samples"] for p in per.values()),
-                "drifting": sorted(k for k, p in per.items()
-                                   if p["drifting"]),
-                "anomalies": anomalies,
-            },
+            "fleet": fleet_block(per, anomalies),
         }
         if self._billing:
             out["billing"] = {k: fn() for k, fn in self._billing.items()}

@@ -1,0 +1,336 @@
+"""Telemetry shards: mergeable per-worker summaries + the worker runtime.
+
+One monitor process tops out around ~100k devices at 10 Hz (PR 5's chunked
+path); scaling past that is partitioning, not micro-optimization.  A
+``Shard`` owns a subset of a fleet's ``StreamSession``s and drains them with
+exactly the round-robin loop ``TelemetryService.poll_all`` uses; its
+``ShardSummary`` is the CRDT-style exportable view — per-session snapshot
+dicts, window tilings, drift-detector state, drain accounting — whose
+``merge`` is associative and commutative over disjoint shards.  Because
+every float in a merged snapshot is either a per-session value (computed by
+exactly one shard) or a fleet roll-up re-summed in the canonical sorted-key
+order (``service.fleet_block``), *any* partition of the same sessions into
+shards reproduces the single-process ``TelemetryService.snapshot()``
+bitwise.
+
+The bottom half of this module is the worker runtime for the process
+runner: the parent launches the device run, publishes the trace through a
+``SharedSampleRing`` (zero-copy shared memory), and ships a spec — markers,
+step grid, op counts, table payload, detector state.  A spawned worker
+rebuilds each session with ``StreamSession.attached``, drains its shard,
+and returns per-session results the parent folds back in with
+``StreamSession.adopt_remote``.  Workers never import jax: everything on
+this import path goes through the numpy-only accumulation core.
+
+Bitwise scope note: sessions that *share* one table across different shards
+with live drift repair are order-dependent by construction (a repair in one
+shard would have re-priced the other's later windows).  The plane keeps
+repair exact by replaying each worker's recalibration ratios onto the
+parent table; the partition-invariance guarantee is stated for sessions
+that do not couple through mid-run repair (``recalibrate=None`` or
+per-session tables), which is also the deployment shape — a fleet shard
+watches distinct devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import isa
+from repro.core.counting import OpCounts
+from repro.core.predict import TablePredictor
+from repro.core.table import EnergyTable
+from repro.hw.device import SensorTrace
+from repro.telemetry.align import window_tiling
+from repro.telemetry.attrib import DriftDetector
+from repro.telemetry.sampler import SharedSampleRing
+from repro.telemetry.service import StreamSession, fleet_block
+
+#: OpCounts aggregate attributes shipped by name (the unit vector travels
+#: as a name->value dict so the worker's vector layout can differ safely).
+_COUNT_AGGS = ("naive_bytes", "boundary_read_bytes", "boundary_write_bytes",
+               "fused_bytes", "flops", "exec_count", "dispatch_count",
+               "max_buffer_bytes", "mxu_macs_total", "mxu_macs_aligned")
+
+
+def _counts_payload(counts: OpCounts) -> dict:
+    """Name-keyed transport form of an ``OpCounts``.
+
+    Unit values re-enter through ``OpCounts.add`` on the far side — adding
+    each float once into a zero slot is exact (``0.0 + x == x``), so the
+    rebuilt vector matches the original bit-for-bit regardless of either
+    process's interning history.
+    """
+    vec = counts._vec
+    names = isa.CLASS_INDEX.names(vec.size)
+    units = {names[i]: float(vec[i]) for i in range(vec.size) if vec[i]}
+    return {"units": units,
+            "aggregates": {a: getattr(counts, a) for a in _COUNT_AGGS}}
+
+
+def _counts_restore(payload: dict) -> OpCounts:
+    counts = OpCounts()
+    for name, v in payload["units"].items():
+        counts.add(name, v)
+    for a, v in payload["aggregates"].items():
+        setattr(counts, a, v)
+    return counts
+
+
+@dataclasses.dataclass
+class ShardSummary:
+    """One shard's exportable state; ``merge`` composes disjoint shards.
+
+    Every field is a dict keyed by session key (or a sorted tuple of shard
+    ids), so ``merge`` is a disjoint union per field — associative and
+    commutative.  The only cross-session floats, the fleet roll-up, are
+    *recomputed* from the merged per-session dicts in sorted-key order
+    (``fleet_block``), never carried as pre-summed totals; that is what
+    makes the merged snapshot independent of how sessions were grouped.
+    """
+
+    shard_ids: Tuple[int, ...] = ()
+    sessions: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    anomalies: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tilings: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    drift: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    samples_drained: Dict[str, int] = dataclasses.field(default_factory=dict)
+    chunks_drained: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def of(cls, shard_id: int,
+           sessions: Dict[str, StreamSession]) -> "ShardSummary":
+        out = cls(shard_ids=(int(shard_id),))
+        for key in sorted(sessions):
+            s = sessions[key]
+            out.sessions[key] = s.snapshot()
+            out.anomalies[key] = (len(s.monitor.anomalies)
+                                  if s.monitor is not None else 0)
+            out.tilings[key] = window_tiling(s.windows)
+            out.drift[key] = s.attributor.detector.state_dict()
+            out.samples_drained[key] = s.samples_drained
+            out.chunks_drained[key] = s.chunks_drained
+        return out
+
+    def merge(self, other: "ShardSummary") -> "ShardSummary":
+        """Disjoint union of two shard summaries.
+
+        A session key present in both operands with *identical* state is
+        tolerated (merging a summary with itself is idempotent — the CRDT
+        posture); conflicting duplicates raise, because two shards claiming
+        different views of one session means the partition was wrong.
+        """
+        merged = ShardSummary(
+            shard_ids=tuple(sorted(set(self.shard_ids)
+                                   | set(other.shard_ids))))
+        for field in ("sessions", "anomalies", "tilings", "drift",
+                      "samples_drained", "chunks_drained"):
+            a, b = getattr(self, field), getattr(other, field)
+            out = dict(a)
+            for k, v in b.items():
+                if k in out and out[k] != v:
+                    raise ValueError(
+                        f"conflicting duplicate session {k!r} in "
+                        f"ShardSummary.merge ({field})")
+                out[k] = v
+            setattr(merged, field, out)
+        return merged
+
+    def fleet(self) -> dict:
+        keys = sorted(self.anomalies)
+        return fleet_block(self.sessions,
+                           sum(self.anomalies[k] for k in keys))
+
+    def snapshot(self) -> dict:
+        """The ``TelemetryService.snapshot()``-shaped view of this summary."""
+        return {"sessions": dict(self.sessions), "fleet": self.fleet()}
+
+
+class Shard:
+    """One worker's slice of the fleet: sessions + the drain loop.
+
+    The poll loop is the same rotating round-robin as
+    ``TelemetryService.poll_all`` — a shard *is* a miniature service —
+    so the thread/serial/process runners all execute identical code over
+    their partitions.
+    """
+
+    def __init__(self, shard_id: int):
+        self.id = int(shard_id)
+        self.sessions: Dict[str, StreamSession] = {}
+        self._cursor = 0
+
+    def add(self, key: str, session: StreamSession) -> None:
+        if key in self.sessions:
+            raise KeyError(f"session {key!r} already on shard {self.id}")
+        self.sessions[key] = session
+
+    def __len__(self) -> int:
+        return len(self.sessions)
+
+    def active(self) -> List[str]:
+        """Keys with started, unfinished sessions (drainable now)."""
+        return [k for k, s in self.sessions.items()
+                if s.summary is None and s.started]
+
+    def poll(self, max_chunks: int = 1) -> int:
+        keys = self.active()
+        if not keys:
+            return 0
+        start = self._cursor % len(keys)
+        self._cursor += 1
+        total = 0
+        for k in keys[start:] + keys[:start]:
+            total += self.sessions[k].poll(max_chunks)
+        return total
+
+    def drain(self, max_chunks: int = 64) -> int:
+        """Poll until every started session on this shard is finished."""
+        total = 0
+        while True:
+            got = self.poll(max_chunks)
+            if not got:
+                return total
+            total += got
+
+    def summarize(self) -> ShardSummary:
+        return ShardSummary.of(self.id, self.sessions)
+
+
+# ---------------------------------------------------------------------------
+# Process-runner transport: parent-side export, worker-side rebuild.
+# ---------------------------------------------------------------------------
+def export_session(key: str, session: StreamSession):
+    """Launch a session's device run and package it for a shard worker.
+
+    Returns ``(spec, ring)``: the spec is a picklable description of the
+    ingest half (markers, step grid, counts, detector state, table
+    reference) and the ring is a ``SharedSampleRing`` holding the full
+    trace — sized exactly, so the worker's ``views()`` are zero-copy
+    reads of the shared segment.  The caller owns the ring's lifetime
+    (close + unlink after the worker reports back).
+    """
+    if session.monitor is not None:
+        raise ValueError(
+            f"session {key!r} has a fleet monitor attached; anomaly "
+            "callbacks cannot cross the process boundary — keep it on a "
+            "thread/serial shard")
+    if callable(session.attributor.recalibrate):
+        raise ValueError(
+            f"session {key!r} uses a callable recalibrate strategy; only "
+            "None/'rescale' ship to shard workers")
+    rec, _sampler = session._launch()
+    trace = rec.trace
+    n = int(len(trace.times_s))
+    ring = SharedSampleRing(max(n, 2))
+    ring.extend(trace.times_s, trace.power_w, trace.util, trace.temp_c)
+    device = session.device
+    spec = {
+        "key": key,
+        "name": session.name,
+        "device_name": device.name,
+        "device_point": getattr(device, "operating_point", None),
+        "session_point": session.operating_point,
+        "shm_name": ring.shm_name,
+        "markers": session._markers(rec, session._n),
+        "steps": list(session._steps),
+        "n": session._n,
+        "group": session._group,
+        "record": dataclasses.replace(rec, trace=None),
+        "counts": _counts_payload(session.counts),
+        "chunk_size": session.chunk_size,
+        "ring_capacity": session.ring.capacity,
+        "recalibrate": session.attributor.recalibrate,
+        "detector": session.attributor.detector.state_dict(),
+        "table_ref": id(session.predictor.table),
+    }
+    return spec, ring
+
+
+def drain_shard_in_process(shard_id: int, class_names: List[str],
+                           tables: Dict[int, dict],
+                           specs: List[dict]) -> Dict[str, dict]:
+    """Rebuild a shard from specs, drain it, return per-session results.
+
+    Runs inside the spawned worker (also callable inline, which is how
+    tests exercise the exact worker code path without a fork).  Bitwise
+    discipline: the parent's ``CLASS_INDEX`` interning order is replayed
+    *first*, so every rebuilt vector — counts, class-energy splits,
+    bucket codes — has the layout the parent's arithmetic used; tables
+    are rebuilt once per ``table_ref`` so sessions that shared a table in
+    the parent share its rebuilt copy here (drift repair coupling inside
+    the shard is preserved).
+    """
+    for name in class_names:
+        isa.CLASS_INDEX.intern(name)
+    predictors: Dict[int, TablePredictor] = {}
+    for ref, payload in tables.items():
+        payload = dict(payload)
+        payload.pop("schema", None)     # to_dict stamps it; from_dict checks
+        pred = TablePredictor(EnergyTable.from_dict(payload))
+        pred.warm()
+        predictors[ref] = pred
+    shard = Shard(shard_id)
+    rings: List[SharedSampleRing] = []
+    sessions: Dict[str, StreamSession] = {}
+    try:
+        for spec in specs:
+            ring = SharedSampleRing.attach(spec["shm_name"])
+            rings.append(ring)
+            trace = SensorTrace(*ring.views())
+            detector = DriftDetector().load_state(spec["detector"])
+            session = StreamSession.attached(
+                predictors[spec["table_ref"]],
+                _counts_restore(spec["counts"]),
+                name=spec["name"], trace=trace, markers=spec["markers"],
+                record=spec["record"], steps=spec["steps"], n_steps=spec["n"],
+                group=spec["group"], device_name=spec["device_name"],
+                device_point=spec["device_point"],
+                operating_point=spec["session_point"],
+                ring_capacity=spec["ring_capacity"],
+                recalibrate=spec["recalibrate"], detector=detector,
+                chunk_size=spec["chunk_size"])
+            shard.add(spec["key"], session)
+            sessions[spec["key"]] = session
+            del trace        # keep no loose views into the shared segment
+        shard.drain()
+        results: Dict[str, dict] = {}
+        for key in sorted(sessions):
+            s = sessions[key]
+            results[key] = {
+                "summary": s.summary,
+                "snapshot": s.snapshot(),
+                "windows": list(s.windows),
+                "integrator": s.integrator.state_dict(),
+                "detector": s.attributor.detector.state_dict(),
+                "recalibrations": list(s.recalibrations),
+                "samples_drained": s.samples_drained,
+                "chunks_drained": s.chunks_drained,
+            }
+        return results
+    finally:
+        for s in sessions.values():
+            # drop trace views into the shared segments before closing them
+            s._source = None
+        del sessions
+        for ring in rings:
+            try:
+                ring.close()
+            except Exception:
+                pass
+
+
+def run_shard_worker(shard_id: int, class_names: List[str],
+                     tables: Dict[int, dict], specs: List[dict],
+                     conn) -> None:
+    """Spawned-process entry point: drain one shard, send results back."""
+    try:
+        results = drain_shard_in_process(shard_id, class_names, tables,
+                                         specs)
+        conn.send({"ok": True, "results": results})
+    except BaseException as exc:  # noqa: BLE001 — the parent re-raises
+        conn.send({"ok": False,
+                   "error": f"{exc!r}\n{traceback.format_exc()}"})
+    finally:
+        conn.close()

@@ -86,6 +86,25 @@ class StreamingIntegrator:
     def p_last(self) -> float:
         return self._p_last
 
+    def state_dict(self) -> dict:
+        """Complete integrator state; ``load_state`` restores it exactly.
+
+        The floats cross process boundaries (telemetry shard workers)
+        unchanged — pickle preserves IEEE-754 bits — so an integrator
+        rebuilt from this state continues the same accumulation sequence
+        bit-for-bit.
+        """
+        return {"energy_j": self.energy_j, "n_samples": self.n_samples,
+                "t_last": self._t_last, "p_last": self._p_last}
+
+    def load_state(self, state: dict) -> "StreamingIntegrator":
+        self.energy_j = float(state["energy_j"])
+        self.n_samples = int(state["n_samples"])
+        t_last = state["t_last"]
+        self._t_last = None if t_last is None else float(t_last)
+        self._p_last = float(state["p_last"])
+        return self
+
 
 @dataclasses.dataclass
 class PlateauState:

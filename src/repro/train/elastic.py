@@ -36,6 +36,29 @@ def scale_batch(global_batch: int, old_devices: int, new_devices: int) -> int:
     return per * new_devices
 
 
+def fold_shard_loss(plane, shard_id: int, *, rehome: bool = True):
+    """Retire a telemetry shard with exact energy accounting.
+
+    The elastic-membership half of the sharded telemetry plane: when the
+    host running a shard leaves the job (failure, scale-down), its
+    *finished* history is frozen into a ``ShardSummary`` that every later
+    plane snapshot still merges — no joule ever leaves the books — and
+    its unfinished sessions are rehomed onto the least-loaded survivors
+    so their runs complete there.  Returns ``(final_summary,
+    rehomed_keys)``; the summary's per-session totals tile into the
+    post-fold snapshot exactly (the merge is the same sorted-key
+    ``fleet_block`` the unsharded service computes).
+
+    ``plane`` is duck-typed (anything with ``shard``/``detach_shard``) so
+    this module keeps no telemetry import at module scope.
+    """
+    shard = plane.shard(shard_id)
+    rehomed = sorted(k for k, s in shard.sessions.items()
+                     if s.summary is None) if rehome else []
+    final = plane.detach_shard(shard_id, rehome=rehome)
+    return final, rehomed
+
+
 @dataclasses.dataclass
 class RebalanceEvent:
     step: int
