@@ -1,0 +1,117 @@
+"""Kernel J/op regression gate — the autotuner vs the shipped defaults.
+
+The block-size autotuner (``repro.kernels.autotune``) exists to make the
+shipped pallas kernels measurably cheaper per logical op; this benchmark
+holds that claim to account on the simulated device.  For each tunable
+kernel it runs the staged micro-calibration search (grid + successive
+halving, default config pinned into the final round) and reports the full
+measured J/op landscape: every surviving candidate, the winner, the
+shipped default, and the ref (non-pallas) baseline.
+
+Emits JSON (``--out``, default ``results/BENCH_kernel_energy.json``) plus
+the repo's CSV line format on stdout.  The gate — winner J/op <= default
+J/op for every kernel — always applies; ``--no-gate`` downgrades it to a
+report for exploratory runs.  (The tuner pins the default into the final
+round precisely so this inequality is measurable, not vacuous.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from benchmarks.common import record
+from repro.hw.systems import get_device
+from repro.kernels import autotune
+
+SYSTEM = "sim-v5e-air"
+KERNELS = ("flash_attention", "decode_attention", "ssd_chunked")
+
+
+def _entry_dict(e) -> dict:
+    return {"variant": e.variant, "config": list(e.config),
+            "j_per_op": e.j_per_op, "j_per_call": e.j_per_call,
+            "latency_s": e.latency_s, "ops_per_call": e.ops_per_call}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_kernel_energy.json")
+    ap.add_argument("--kernels", default=",".join(KERNELS),
+                    help="comma-separated subset of tunable kernels")
+    ap.add_argument("--durations", default=None,
+                    help="comma-separated per-round probe durations "
+                         "(seconds), e.g. '2,4'; default = the tuner's "
+                         "staged schedule")
+    ap.add_argument("--repeats", default=None,
+                    help="comma-separated per-round repeat counts, "
+                         "e.g. '1,2'")
+    ap.add_argument("--latency-ceiling-us", type=float, default=None,
+                    help="per-call latency ceiling for the search")
+    ap.add_argument("--exhaustive", action="store_true",
+                    help="measure every candidate in every round")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; do not fail on a regression")
+    args = ap.parse_args(argv)
+
+    kwargs = {}
+    if args.durations:
+        kwargs["durations"] = tuple(
+            float(d) for d in args.durations.split(","))
+    if args.repeats:
+        kwargs["repeats"] = tuple(int(r) for r in args.repeats.split(","))
+    if args.latency_ceiling_us is not None:
+        kwargs["latency_ceiling_s"] = args.latency_ceiling_us * 1e-6
+    if args.exhaustive:
+        kwargs["exhaustive"] = True
+
+    device = get_device(SYSTEM)
+    kernels = [k.strip() for k in args.kernels.split(",") if k.strip()]
+    results, failures = {}, []
+    for kernel in kernels:
+        res = autotune.tune(kernel, device, **kwargs)
+        w, d = res.winner, res.default
+        results[kernel] = {
+            "winner": _entry_dict(w),
+            "default": _entry_dict(d),
+            "improvement_pct": res.improvement * 100.0,
+            "entries": [_entry_dict(e) for e in res.entries],
+            "rounds": res.rounds,
+        }
+        record(f"kernel_energy_{kernel}", w.latency_s * 1e6,
+               f"j_per_op={w.j_per_op:.3e} default={d.j_per_op:.3e} "
+               f"config={'x'.join(map(str, w.config)) or w.variant} "
+               f"improvement={res.improvement * 100.0:+.1f}%")
+        if w.j_per_op > d.j_per_op:
+            failures.append(
+                f"{kernel}: tuned {w.j_per_op:.3e} J/op > default "
+                f"{d.j_per_op:.3e} J/op")
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "benchmark": "kernel_energy",
+        "system": SYSTEM,
+        "gate": "winner j_per_op <= default j_per_op per kernel",
+        "kernels": results,
+    }, indent=1) + "\n")
+    print(f"wrote {out}")
+
+    if failures and not args.no_gate:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def bench_kernel_energy():
+    """Harness entry (benchmarks.run): the full canonical configuration,
+    so the JSON under results/ is never overwritten with a reduced run."""
+    main([])
+
+
+ALL = [bench_kernel_energy]
+
+if __name__ == "__main__":
+    sys.exit(main())

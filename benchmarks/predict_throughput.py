@@ -6,6 +6,10 @@ Times three layers of the vectorized currency:
 * ``predict_loop`` vs ``predict_many`` — ≥1000 synthetic programs priced one
   at a time vs as one stacked counts matrix (``predict_batch``), asserting
   the batched ``Prediction`` totals are **bitwise identical** to the loop's;
+* ``fused_predict`` — the jitted fused path (``TablePredictor(fused=True)``)
+  vs the plain batch, both for predict-only and for predict+attribute
+  (``by_bucket`` materialized per program — the bincount the jit fuses),
+  asserting fused totals stay bitwise-identical to the plain path;
 * ``solver_assembly`` — ``solver.build_system`` over the real microbenchmark
   suite (the training-phase matrix assembled in one shot).
 
@@ -18,6 +22,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import statistics
 import sys
 import time
 
@@ -30,7 +35,7 @@ from repro.core.predict import TablePredictor
 from repro.core.table import EnergyTable
 from repro.hw.device import RunRecord, SensorTrace
 
-N_PROGRAMS = 1000
+N_PROGRAMS = 4000       # fleet-scale: where the batched/fused paths live
 SEED = 7
 
 
@@ -109,6 +114,35 @@ def main(argv=None) -> int:
         predictor.predict(c, d)
     us_single = (time.perf_counter() - t0) / n_single * 1e6
 
+    # -- fused (jitted) path vs the plain batch -----------------------------
+    fused = TablePredictor(synthetic_table(), fused=True)
+    fused.warm()
+    fused_on = fused.enable_fused()
+    fused_bitwise = fused_predict_speedup = fused_attr_speedup = None
+    if fused_on:
+        fused_preds = fused.predict_batch(programs, durations)
+        fused_bitwise = all(
+            a.total_j == b.total_j and a.dynamic_j == b.dynamic_j
+            and a.coverage == b.coverage
+            for a, b in zip(batch_preds, fused_preds))
+
+        def _time(pr, attribute, reps=7):
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                preds = pr.predict_batch(programs, durations)
+                if attribute:
+                    for p in preds:
+                        p.by_bucket
+                ts.append(time.perf_counter() - t0)
+            return statistics.median(ts)
+
+        # interleave-free warmup, then medians; attribute = by_bucket
+        # materialized per program (the bincount the fused kernel absorbs)
+        _time(fused, False, reps=1)
+        fused_predict_speedup = _time(predictor, False) / _time(fused, False)
+        fused_attr_speedup = _time(predictor, True) / _time(fused, True)
+
     suite = microbench.build_suite(isa_gen=0)
     targets = microbench.benched_classes(suite)
     records = [_fake_record(b, 1000) for b in suite]
@@ -127,6 +161,10 @@ def main(argv=None) -> int:
         "predict_many_us_per_program": t_batch / args.n * 1e6,
         "speedup_many_vs_loop": speedup,
         "totals_bitwise_identical": identical,
+        "fused_available": fused_on,
+        "fused_totals_bitwise_identical": fused_bitwise,
+        "speedup_fused_vs_batch_predict": fused_predict_speedup,
+        "speedup_fused_vs_batch_attribute": fused_attr_speedup,
         "single_predict_us": us_single,
         "solver_assembly_us": us_assembly,
         "solver_matrix_shape": list(system.matrix.shape),
@@ -138,6 +176,11 @@ def main(argv=None) -> int:
     record("predict_single", us_single, f"us_per_call={us_single:.1f}")
     record("predict_many", t_batch / args.n * 1e6,
            f"speedup_vs_loop=x{speedup:.1f} identical={identical}")
+    if fused_on:
+        record("predict_fused", fused_attr_speedup,
+               f"attr=x{fused_attr_speedup:.2f} "
+               f"predict=x{fused_predict_speedup:.2f} "
+               f"identical={fused_bitwise}")
     record("solver_assembly", us_assembly,
            f"shape={system.matrix.shape[0]}x{system.matrix.shape[1]}")
     print(f"wrote {out}")
@@ -145,6 +188,10 @@ def main(argv=None) -> int:
     if not identical:
         print("FAIL: batched totals are not bitwise-identical to the loop",
               file=sys.stderr)
+        return 1
+    if fused_on and not fused_bitwise:
+        print("FAIL: fused totals are not bitwise-identical to the plain "
+              "batch", file=sys.stderr)
         return 1
     if speedup < args.min_speedup:
         print(f"FAIL: speedup x{speedup:.1f} < required "

@@ -14,11 +14,12 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (case_backprop, case_qmc, linearity, mape_tables,
-                            roofline, serve_energy, telemetry_overhead,
-                            transfer_fig14)
+    from benchmarks import (case_backprop, case_qmc, kernel_energy, linearity,
+                            mape_tables, roofline, serve_energy,
+                            telemetry_overhead, transfer_fig14)
     for mod in (mape_tables, linearity, transfer_fig14, case_backprop,
-                case_qmc, roofline, telemetry_overhead, serve_energy):
+                case_qmc, roofline, telemetry_overhead, serve_energy,
+                kernel_energy):
         for bench in mod.ALL:
             try:
                 bench()

@@ -196,6 +196,29 @@ class PredictJob:
 
 
 @dataclasses.dataclass
+class MicroscopeReport:
+    """Kernel-level energy breakdown of one workload (``microscope``)."""
+
+    summary: Any                      # telemetry.StreamSummary
+    kernels: Mapping[str, dict]       # StreamSession.kernel_report()
+    session: Any                      # the finished StreamSession
+
+    @property
+    def tiling_exact(self) -> bool:
+        """Do the kernel windows tile every step's joules bitwise?"""
+        for w in self.session.windows:
+            if w.step < 0 or not w.children:
+                continue
+            if sum(c.measured_j for c in w.children) != w.measured_j:
+                return False
+        return True
+
+    @property
+    def attributed_j(self) -> float:
+        return self.summary.attributed_j
+
+
+@dataclasses.dataclass
 class Comparison:
     """Measured-vs-predicted energy for one workload run."""
 
@@ -677,6 +700,91 @@ class EnergyModel:
         """Full workload-suite evaluation (paper Figs. 6-9 pipeline)."""
         from repro.core.evaluate import evaluate_system
         return evaluate_system(self.system, model=self, **kwargs)
+
+    # -- kernel microscopy / autotuning ---------------------------------------
+    def microscope(self, launches, *, steps: int = 4,
+                   step_counts: Union[ProfileSource, OpCounts, None] = None,
+                   name: str = "microscope", **stream_kw) -> MicroscopeReport:
+        """Per-launch kernel energy breakdown of a repeated workload step.
+
+        ``launches`` declares the kernels inside one logical step, in
+        launch order; each item is a ``Profile`` (its counts become the
+        launch's counts), a ``(name, source)`` /
+        ``(name, source, variant)`` / ``(name, source, variant, config)``
+        tuple, or a dict with those keys.  The model streams ``steps``
+        identical steps on its device, subdivides every step's measured
+        joules into per-launch kernel windows (plus an
+        ``__unattributed__`` remainder), and returns a
+        ``MicroscopeReport`` whose windows tile step energy bitwise:
+
+            prof = model.profile(step_fn, *args)
+            rep = model.microscope([("flash", model.profile(attn, q, k, v))],
+                                   step_counts=prof)
+            rep.kernels["flash"]["j_per_launch"]
+
+        ``step_counts`` defaults to the sum of the launch counts (a step
+        that is nothing but the declared kernels).
+        """
+        specs = []
+        for item in launches:
+            variant, config = "pallas", ()
+            if isinstance(item, Profile):
+                lname, src = item.name, item
+            elif isinstance(item, dict):
+                lname = item["name"]
+                src = item.get("source", item.get("counts"))
+                variant = item.get("variant", variant)
+                config = tuple(item.get("config", ()) or ())
+            else:
+                lname, src, *rest = item
+                if rest:
+                    variant = rest[0]
+                if len(rest) > 1:
+                    config = tuple(rest[1] or ())
+            specs.append((str(lname), self._resolve(src), variant, config))
+        if not specs:
+            raise ValueError("microscope() needs at least one launch")
+        if step_counts is None:
+            total = OpCounts()
+            for _, c, _, _ in specs:
+                total.merge(c, 1.0)
+        else:
+            total = self._resolve(step_counts)
+        session = self.stream(total, name=name, **stream_kw)
+        for lname, c, variant, config in specs:
+            with session.kernel_scope(lname, variant=variant, config=config,
+                                      counts=c):
+                pass
+        for i in range(steps):
+            session.step(i)
+        summary = session.finish()
+        return MicroscopeReport(summary=summary,
+                                kernels=session.kernel_report(),
+                                session=session)
+
+    def tune_kernel(self, kernel: str, *, store=None, **kwargs):
+        """Search block configs for ``kernel``, minimizing measured J/op.
+
+        Runs the staged micro-calibration autotuner
+        (``repro.kernels.autotune``) on this model's device, persists the
+        measured entries to the store's kernel-energy tier
+        (``<system>__kernels__v1.json``) and activates them, so
+        ``block_config="auto"`` on the shipped kernels picks the winner:
+
+            result = model.tune_kernel("flash_attention")
+            result.improvement          # 1 - winner J/op / default J/op
+            ops.flash_attention(q, k, v, block_config="auto")
+
+        Keyword arguments (``operating_point``, ``latency_ceiling_s``,
+        ``shape``, ``exhaustive``, ...) pass through to
+        ``autotune.tune``.  Returns the ``KernelTuneResult``.
+        """
+        from repro.kernels import autotune
+        store_obj = store if isinstance(store, TableStore) else default_store()
+        kwargs.setdefault(
+            "run_dir", store_obj.root / "runs" / f"{self.system}__kernels")
+        return autotune.tune_and_store(kernel, self.device, self.system,
+                                       store=store_obj, **kwargs)
 
     def __repr__(self) -> str:
         return (f"EnergyModel(system={self.system!r}, "

@@ -96,6 +96,21 @@ class EnergyMonitor:
             service.register_governor(key, self.governor)
         return key
 
+    def kernel_scope(self, name: str, variant: str = "pallas",
+                     config=(), counts: Optional[OpCounts] = None):
+        """Declare a kernel launch on the live session (microscopy scope).
+
+        Delegates to ``StreamSession.kernel_scope`` — each step's aligned
+        window then subdivides into per-launch kernel windows that tile the
+        step's measured joules bitwise; read them back with
+        ``monitor.live.kernel_report()``.  Requires ``monitor(live=...)``.
+        """
+        if self.live is None:
+            raise RuntimeError("no live session: create the monitor with "
+                               "monitor(live=True) before kernel_scope()")
+        return self.live.kernel_scope(name, variant=variant, config=config,
+                                      counts=counts)
+
     def observe(self, step: int, counts: Optional[OpCounts] = None,
                 duration_s: Optional[float] = None,
                 counters: Optional[dict] = None,

@@ -1,0 +1,131 @@
+"""The second calibration tier: measured J/op per kernel launch config.
+
+The class-level ``EnergyTable`` prices *op classes*; this table prices
+*whole kernel launches* — (kernel, variant, block config, operating point)
+→ measured joules per call and per logical op.  It is the persistence
+layer behind the block-size autotuner (``repro.kernels.autotune``): staged
+micro-calibration fills it, ``block_config="auto"`` reads the winner back,
+and the ``TableStore`` ships it alongside the class table as
+``<system>__kernels__v1.json``.
+
+Pure stdlib + dataclasses on purpose: telemetry shard workers and the
+``TableStore`` import this module, and neither may pay for (or depend on)
+jax at startup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+KERNEL_SCHEMA_VERSION = 1
+
+
+class KernelTableError(ValueError):
+    """A serialized kernel table has an alien or stale schema."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One measured launch configuration."""
+
+    kernel: str                    # e.g. "flash_attention"
+    variant: str                   # "pallas" | "ref"
+    config: Tuple[int, ...]        # block sizes ((), for ref)
+    point: Optional[str]           # operating-point tag ("f940c170") | None
+    j_per_op: float                # the autotuner's objective
+    j_per_call: float
+    latency_s: float               # wall-clock per call (ceiling constraint)
+    ops_per_call: float            # fixed logical ops (config-independent)
+    energy_j: float                # median measured run total
+    duration_s: float              # measured run duration
+    iters: int                     # calls folded into the run
+    spec_id: str                   # measurement record / noise-substream id
+
+    @property
+    def key(self) -> Tuple[str, str, Tuple[int, ...], Optional[str]]:
+        return (self.kernel, self.variant, tuple(self.config), self.point)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["config"] = list(self.config)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "KernelEntry":
+        d = dict(d)
+        d["config"] = tuple(int(c) for c in d.get("config", ()))
+        return cls(**d)
+
+
+class KernelEnergyTable:
+    """All measured kernel entries for one system."""
+
+    def __init__(self, system: str,
+                 entries: Optional[List[KernelEntry]] = None):
+        self.system = system
+        self._entries: Dict[tuple, KernelEntry] = {}
+        for e in entries or []:
+            self.put(e)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, entry: KernelEntry) -> None:
+        self._entries[entry.key] = entry
+
+    def get(self, kernel: str, variant: str, config,
+            point: Optional[str] = None) -> Optional[KernelEntry]:
+        return self._entries.get((kernel, variant, tuple(config), point))
+
+    def entries(self, kernel: Optional[str] = None,
+                point: Optional[str] = "__any__",
+                variant: Optional[str] = None) -> List[KernelEntry]:
+        """Entries filtered by kernel/point/variant (point="__any__": all)."""
+        out = []
+        for e in self._entries.values():
+            if kernel is not None and e.kernel != kernel:
+                continue
+            if point != "__any__" and e.point != point:
+                continue
+            if variant is not None and e.variant != variant:
+                continue
+            out.append(e)
+        return sorted(out, key=lambda e: (e.kernel, e.variant, e.config,
+                                          e.point or ""))
+
+    def best(self, kernel: str, *, point: Optional[str] = None,
+             latency_ceiling_s: Optional[float] = None,
+             variant: Optional[str] = None) -> Optional[KernelEntry]:
+        """Minimum-J/op entry under the latency ceiling.
+
+        Entries measured at the requested operating point are preferred;
+        when the point has no entries at all, the nominal (``point=None``)
+        entries answer instead — a tuned block is a better default than an
+        untuned one even off its calibration point.
+        """
+        cands = self.entries(kernel, point=point, variant=variant)
+        if not cands and point is not None:
+            cands = self.entries(kernel, point=None, variant=variant)
+        if latency_ceiling_s is not None:
+            cands = [e for e in cands if e.latency_s <= latency_ceiling_s]
+        if not cands:
+            return None
+        return min(cands, key=lambda e: (e.j_per_op, e.latency_s))
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": KERNEL_SCHEMA_VERSION,
+            "system": self.system,
+            "entries": [e.to_dict() for e in self.entries()],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "KernelEnergyTable":
+        version = d.get("schema")
+        if version != KERNEL_SCHEMA_VERSION:
+            raise KernelTableError(
+                f"kernel table schema {version!r} != "
+                f"{KERNEL_SCHEMA_VERSION}")
+        return cls(d["system"],
+                   [KernelEntry.from_dict(e) for e in d.get("entries", [])])

@@ -38,11 +38,15 @@ from repro.core import counting
 from repro.core.counting import OpCounts  # noqa: F401  (compat re-export)
 
 # Ops that are pure metadata on TPU (relayouts handled by 'transpose').
+# The state primitives (get/swap — pallas ref reads/writes) are free here:
+# their traffic is the kernel's block streaming, priced once at the
+# ``pallas_call`` boundary from the grid × block-shape bytes.
 _FREE_PRIMS = {
     "reshape", "squeeze", "expand_dims", "bitcast_convert_type",
     "stop_gradient", "copy", "random_wrap", "random_unwrap", "random_seed",
     "split", "device_put", "sharding_constraint", "layout_constraint",
     "optimization_barrier", "pvary", "axis_index", "debug_callback",
+    "get", "swap", "program_id", "num_programs",
 }
 
 _UNARY_ELEMWISE = {
@@ -224,6 +228,64 @@ def _sliced_io(eqn, fuse: "_FuseInfo"):
     return out_b, b_write, f_write, max_buf
 
 
+def _block_bytes(bm) -> float:
+    """Per-grid-step VMEM bytes for one pallas BlockMapping."""
+    try:
+        shape = getattr(bm, "block_shape", ()) or ()
+        n = 1.0
+        for d in shape:
+            try:
+                n *= float(int(d))
+            except (TypeError, ValueError):
+                pass            # Squeezed/None/mapped dims contribute 1
+        asd = getattr(bm, "array_shape_dtype", None)
+        item = np.dtype(asd.dtype).itemsize if asd is not None else 4
+        return n * float(item)
+    except Exception:
+        return 0.0
+
+
+def _find_eqns(jaxpr, name: str, depth: int = 3):
+    """Yield eqns named ``name`` in ``jaxpr`` and (shallowly) nested calls."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in getattr(jaxpr, "eqns", ()):
+        if eqn.primitive.name == name:
+            yield eqn
+        elif depth > 0:
+            sub = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                   or eqn.params.get("body_jaxpr")) if eqn.params else None
+            if sub is not None:
+                yield from _find_eqns(sub, name, depth - 1)
+
+
+def _pallas_while_trips(body_jaxpr) -> int:
+    """Upper-bound trip count for traced-bound loops in a pallas body.
+
+    A dynamically bounded ``fori_loop`` (e.g. the causal flash-attention
+    K sweep, whose upper bound depends on ``program_id``) lowers to a
+    ``while`` whose trip count the jaxpr does not carry.  Each trip reads
+    a block-sized slice of a full-length ref, so the full-dim/slice-dim
+    ratio of the largest ``get`` inside the loop bounds the trips — for
+    flash that is ``s / block_k``.  An upper bound by construction
+    (early q blocks run fewer causal trips).
+    """
+    trips = 1
+    for weqn in _find_eqns(body_jaxpr, "while"):
+        wbody = weqn.params.get("body_jaxpr")
+        if wbody is None:
+            continue
+        for geqn in _find_eqns(wbody, "get"):
+            if not geqn.invars or not geqn.outvars:
+                continue
+            ref = getattr(geqn.invars[0], "aval", None)
+            outv = getattr(geqn.outvars[0], "aval", None)
+            r = _aval_elems(ref) if ref is not None else 0.0
+            o = _aval_elems(outv) if outv is not None else 0.0
+            if r > 0 and o > 0 and r > o:
+                trips = max(trips, int(math.ceil(r / o)))
+    return trips
+
+
 def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
                fuse: _FuseInfo) -> None:
     name = eqn.primitive.name
@@ -274,6 +336,59 @@ def _count_eqn(eqn, out: OpCounts, mult: float, ctx: _Ctx,
             out.merge(count_jaxpr(sub, axis_sizes=sizes,
                                   isa_gen=ctx.isa_gen), mult)
         return
+
+    if name == "pallas_call":
+        gm = eqn.params.get("grid_mapping")
+        body = eqn.params.get("jaxpr")
+        if gm is not None and body is not None:
+            try:
+                grid = 1
+                for g in getattr(gm, "grid", ()) or ():
+                    try:
+                        grid *= int(g)
+                    except (TypeError, ValueError):
+                        pass    # symbolic dims count as 1
+                grid = max(grid, 1)
+                sizes = dict(ctx.axis_sizes)
+                if "__while_trips__" not in sizes:
+                    trips = _pallas_while_trips(body)
+                    if trips > 1:
+                        sizes["__while_trips__"] = trips
+                inner = count_jaxpr(body, axis_sizes=sizes,
+                                    isa_gen=ctx.isa_gen)
+                # Inside the kernel every ref access is VMEM-resident: the
+                # body's "boundary" traffic never leaves the core, and its
+                # fusion roots are not separate launches — one pallas_call
+                # is one dispatch, booked below.
+                inner.fused_bytes += (inner.boundary_read_bytes
+                                      + inner.boundary_write_bytes)
+                inner.boundary_read_bytes = 0.0
+                inner.boundary_write_bytes = 0.0
+                inner.dispatch_count = 0.0
+                # the kernel body runs once per grid step; each step pays
+                # loop/control overhead like a scan trip
+                counting.merge_loop_body(out, inner, float(grid), mult)
+                # Block streaming: every grid step reads its input blocks
+                # from HBM and writes its output blocks back, so boundary
+                # traffic is grid x block bytes.  Operands whose block is
+                # the full array (e.g. K/V in flash attention) are re-read
+                # on every step — this is where block_q/block_k genuinely
+                # move the energy.
+                mappings = list(getattr(gm, "block_mappings", ()) or ())
+                n_out = int(getattr(gm, "num_outputs", len(eqn.outvars))
+                            or len(eqn.outvars))
+                in_maps = mappings[:len(mappings) - n_out]
+                out_maps = mappings[len(mappings) - n_out:]
+                read_b = sum(_block_bytes(bm) for bm in in_maps)
+                write_b = sum(_block_bytes(bm) for bm in out_maps)
+                out.add_io(grid * read_b, grid * write_b, 0.0, mult)
+                # resident set per grid step: all blocks live in VMEM at once
+                out.note_buffer(read_b + write_b)
+                out.exec_count += mult
+                out.dispatch_count += mult      # one launch per pallas_call
+                return
+            except Exception:
+                pass            # fall through to the unknown-prim fallback
 
     # ---- collectives -----------------------------------------------------
     if name in _COLLECTIVE_CLASS:

@@ -16,6 +16,8 @@ bitwise-equal to per-program totals.
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
@@ -43,14 +45,16 @@ class Prediction:
     """
 
     __slots__ = ("total_j", "const_j", "static_j", "dynamic_j", "coverage",
-                 "duration_s", "_by_class", "_by_bucket", "_class_vec")
+                 "duration_s", "_by_class", "_by_bucket", "_class_vec",
+                 "_bucket_vec")
 
     def __init__(self, total_j: float, const_j: float, static_j: float,
                  dynamic_j: float,
                  by_class: Optional[Mapping[str, float]] = None,
                  by_bucket: Optional[Mapping[str, float]] = None,
                  coverage: float = 1.0, duration_s: float = 0.0, *,
-                 class_vec: Optional[np.ndarray] = None):
+                 class_vec: Optional[np.ndarray] = None,
+                 bucket_vec: Optional[np.ndarray] = None):
         self.total_j = float(total_j)
         self.const_j = float(const_j)
         self.static_j = float(static_j)
@@ -60,6 +64,7 @@ class Prediction:
         self._by_class = dict(by_class) if by_class is not None else None
         self._by_bucket = dict(by_bucket) if by_bucket is not None else None
         self._class_vec = class_vec
+        self._bucket_vec = bucket_vec    # dynamic J over isa.BUCKET_ORDER
         if self._class_vec is None and self._by_class is None:
             self._by_class = {}
 
@@ -89,7 +94,10 @@ class Prediction:
     def by_bucket(self) -> Dict[str, float]:
         if self._by_bucket is None:
             out: Dict[str, float] = {}
-            if self._class_vec is not None:
+            if self._bucket_vec is not None:
+                out = {isa.BUCKET_ORDER[i]: float(s)
+                       for i, s in enumerate(self._bucket_vec) if s != 0.0}
+            elif self._class_vec is not None:
                 v = self._class_vec
                 if v.size:
                     codes = isa.CLASS_INDEX.bucket_codes(v.size)
@@ -153,6 +161,87 @@ _COUNTER_ITEMS = tuple(_COUNTER_TO_CLASS.items())
 _COUNTER_IDS = np.asarray([isa.CLASS_INDEX.intern(c)
                            for c in _COUNTER_TO_CLASS.values()])
 
+# below this batch size the XLA dispatch overhead exceeds the whole plain
+# computation; the fused predictor silently uses the plain path (bitwise
+# the same either way, so the switch is invisible)
+_FUSED_MIN_JOBS = 32
+
+
+def _build_fused_kernel():
+    """Jitted fused hot path (lazy: the only jax import in this module).
+
+    One XLA computation produces both elementwise energy products (direct
+    and pred vectors share a single pass over the counts matrix) and the
+    per-bucket reduction that ``Prediction.by_bucket`` otherwise recomputes
+    per row with ``np.bincount``.  Only *elementwise* work runs under XLA
+    — an IEEE multiply is the same bits everywhere — while the row
+    reductions that define totals stay in numpy, so the fused path is
+    bitwise-identical to the plain one.  Runs under ``enable_x64`` (the
+    thread-local flag, not the global config) so float64 counts are not
+    silently downcast.
+    """
+    import jax
+    from jax.experimental import enable_x64
+
+    @functools.partial(jax.jit, static_argnames=("direct_mode", "n_buckets"))
+    def _kernel(c_mat, e_direct, e_pred, codes, mem, ids, *,
+                direct_mode, n_buckets):
+        # one traversal of the counts matrix feeds both products, the
+        # counter-column fold and the bucket reduction; XLA fuses it all
+        vd = c_mat * e_direct
+        vp = c_mat * e_pred
+        val, other = (vd, vp) if direct_mode else (vp, vd)
+        e = e_direct if direct_mode else e_pred
+        # counter columns folded on device: still exactly one IEEE add per
+        # element, the same bits as the plain path's ``val[:, ci] += v``
+        vfin = val.at[:, ids].add(mem * e[ids])
+        # bucket bincount as a one-hot matmul: (jobs x classes) @
+        # (classes x buckets), no transposes materialized
+        buckets = vfin @ jax.nn.one_hot(codes, n_buckets, dtype=val.dtype)
+        return val, vfin, other, buckets
+
+    def _view(a):
+        """Zero-copy numpy view of a CPU jax buffer (copy as last resort)."""
+        try:
+            return np.from_dlpack(a)
+        except Exception:
+            return np.asarray(a)
+
+    def _feed(a):
+        """Zero-copy numpy -> jax import (device_put copies; dlpack not)."""
+        try:
+            return jax.dlpack.from_dlpack(a)
+        except Exception:
+            return a
+
+    feeds: dict = {}
+
+    def _feed_cached(a):
+        """Identity-keyed feed cache for call-stable arrays (the energy
+        vectors and bucket codes persist across calls until the table is
+        invalidated; re-exporting them every call is pure overhead).
+        Holding ``a`` in the entry keeps its id() valid while cached."""
+        hit = feeds.get(id(a))
+        if hit is not None and hit[0] is a:
+            return hit[1]
+        j = _feed(a)
+        if len(feeds) > 12:
+            feeds.clear()
+        feeds[id(a)] = (a, j)
+        return j
+
+    def run(c_mat, e_direct, e_pred, codes, mem, direct_mode, n_buckets):
+        with enable_x64():
+            val, vfin, other, buckets = _kernel(
+                _feed(c_mat), _feed_cached(e_direct), _feed_cached(e_pred),
+                _feed_cached(codes), _feed(mem), _feed_cached(_COUNTER_IDS),
+                direct_mode=direct_mode, n_buckets=n_buckets)
+        # everything comes back as zero-copy read-only views; retained
+        # Predictions copy their own rows out below
+        return _view(val), _view(vfin), _view(other), _view(buckets)
+
+    return run
+
 
 class TablePredictor:
     """Prediction engine bound to one table's resolved energy vectors.
@@ -167,12 +256,39 @@ class TablePredictor:
     for out-of-band mutation of table internals.
     """
 
-    def __init__(self, table: EnergyTable):
+    def __init__(self, table: EnergyTable, *, fused: bool = False):
         self.table = table
+        self._fused_requested = bool(fused)
+        self._fused_kernel = None        # built lazily; False = unavailable
 
     def _vectors(self, n: int):
         """(e_direct, e_pred) resolved for the first ``n`` class ids."""
         return self.table.energy_vectors(n)
+
+    # -- fused (jitted) hot path --------------------------------------------
+    def enable_fused(self) -> bool:
+        """Opt into the jitted hot path; True when jax is available.
+
+        Bitwise-identical totals to the plain path (see
+        ``_build_fused_kernel``); processes without jax fall back
+        silently, so telemetry shard workers can flip this on untested.
+        """
+        self._fused_requested = True
+        return self._ensure_fused() is not None
+
+    def _ensure_fused(self):
+        if not self._fused_requested or self._fused_kernel is False:
+            return None
+        if self._fused_kernel is None:
+            try:
+                self._fused_kernel = _build_fused_kernel()
+            except Exception as e:           # no jax in this process
+                warnings.warn(f"fused predict path unavailable ({e}); "
+                              f"using the plain numpy path", RuntimeWarning,
+                              stacklevel=3)
+                self._fused_kernel = False
+                return None
+        return self._fused_kernel
 
     def warm(self) -> None:
         """Precompute the class->energy vectors for the whole index.
@@ -232,11 +348,6 @@ class TablePredictor:
             e_direct, e_pred = rp.vectors(n)
             p_const, p_static = rp.p_const, rp.p_static
 
-        val = c_mat * (e_direct if direct_mode else e_pred)
-        dyn = val.sum(axis=1)
-        cover = (c_mat * e_pred).sum(axis=1)   # pred-mode energy of all work
-        direct = (c_mat * e_direct).sum(axis=1)  # ... of direct hits only
-
         # memory counters: profiled when given, static traffic model else
         mem = np.empty((n_jobs, len(_COUNTER_ITEMS)))
         need_default = [i for i, c in enumerate(counters_list) if c is None]
@@ -259,11 +370,39 @@ class TablePredictor:
             mem[given] = [[counters_list[i].get(key, 0.0)
                            for key, _ in _COUNTER_ITEMS] for i in given]
 
+        kern = self._ensure_fused() if n_jobs >= _FUSED_MIN_JOBS else None
+        if kern is not None:
+            codes = isa.CLASS_INDEX.bucket_codes(n)
+            val, val_fin, other, bucket_j = kern(
+                c_mat, e_direct, e_pred, codes, mem, direct_mode,
+                len(isa.BUCKET_ORDER))
+            # np.sum over the same float64 values in the same layout runs
+            # the identical pairwise reduction the plain path runs below —
+            # and the mode's own sum is reused for the cover/direct twin
+            # whose plain-path floats are expression-for-expression the
+            # same (``c_mat * e`` appears twice below), so everything the
+            # plain path derives stays bitwise while one full product +
+            # one full reduction disappear
+            dyn = np.sum(val, axis=1)
+            osum = np.sum(other, axis=1)
+            if direct_mode:
+                direct, cover = dyn.copy(), osum
+            else:
+                cover, direct = dyn.copy(), osum
+        else:
+            bucket_j = None
+            val = c_mat * (e_direct if direct_mode else e_pred)
+            val_fin = val            # counter columns land in place below
+            dyn = val.sum(axis=1)
+            cover = (c_mat * e_pred).sum(axis=1)  # pred-mode energy, all work
+            direct = (c_mat * e_direct).sum(axis=1)  # ... direct hits only
+
         for j, (_, cls) in enumerate(_COUNTER_ITEMS):
             ci = int(_COUNTER_IDS[j])
             units = mem[:, j]
             v = units * (e_direct[ci] if direct_mode else e_pred[ci])
-            val[:, ci] += v
+            if bucket_j is None:
+                val[:, ci] += v  # the fused kernel already folded these in
             dyn += v
             cover += units * e_pred[ci]
             direct += units * e_direct[ci]
@@ -278,9 +417,17 @@ class TablePredictor:
 
         # copy each row out of the batch matrix so a retained Prediction
         # doesn't pin the whole (n_jobs x n_classes) array via a view
+        if bucket_j is None:
+            return [Prediction(total[i], const[i], static[i], dyn[i],
+                               coverage=coverage[i], duration_s=dur[i],
+                               class_vec=val_fin[i].copy())
+                    for i in range(n_jobs)]
+        # bucket rows stay views: the whole bucket matrix is n_buckets
+        # floats per job, cheaper pinned than copied
         return [Prediction(total[i], const[i], static[i], dyn[i],
                            coverage=coverage[i], duration_s=dur[i],
-                           class_vec=val[i].copy())
+                           class_vec=val_fin[i].copy(),
+                           bucket_vec=bucket_j[i])
                 for i in range(n_jobs)]
 
     # -- public surface -----------------------------------------------------

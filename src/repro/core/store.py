@@ -195,6 +195,46 @@ class TableStore:
                 os.unlink(tmp)
         return path
 
+    # -- kernel energy tier -------------------------------------------------
+    def kernel_table_path(self, system: str) -> pathlib.Path:
+        """Second-tier artifact: measured J/op per kernel launch config.
+
+        The ``__kernels__`` stem cannot match ``_KEY_RE`` (no ``__gen<n>``
+        segment), so ``keys()``/``entries()`` never confuse the two tiers.
+        """
+        from repro.core.kernel_table import KERNEL_SCHEMA_VERSION
+        return self.root / f"{system}__kernels__v{KERNEL_SCHEMA_VERSION}.json"
+
+    def get_kernel_table(self, system: str):
+        """Load the system's ``KernelEnergyTable``, or None on miss/stale."""
+        from repro.core.kernel_table import KernelEnergyTable, KernelTableError
+        path = self.kernel_table_path(system)
+        if not path.exists():
+            return None
+        try:
+            d = json.loads(path.read_text())
+            if not isinstance(d, dict):
+                raise KernelTableError(f"{path}: not a JSON object")
+            return KernelEnergyTable.from_dict(d)
+        except (KernelTableError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(f"ignoring unreadable kernel energy table {path}: "
+                          f"{e}", RuntimeWarning, stacklevel=2)
+            return None
+
+    def put_kernel_table(self, ktable) -> pathlib.Path:
+        """Atomic publish, same discipline as ``put``."""
+        path = self.kernel_table_path(ktable.system)
+        self.root.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(ktable.to_dict(), f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
     def evict(self, system: str, isa_gen: Optional[int] = None) -> bool:
         path = self.path_for(system, isa_gen)
         if path.exists():

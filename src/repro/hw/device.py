@@ -76,6 +76,36 @@ class OperatingPoint:
         return (self.freq_mhz, self.power_cap_w)
 
 
+@dataclasses.dataclass(frozen=True)
+class LaunchSpec:
+    """One kernel launch inside an iteration, as declared by the host.
+
+    ``counts`` is the launch's own per-call op-count profile — the device
+    times it with the same roofline it times whole programs with, which is
+    how real profilers place kernel start/stop timestamps on the stream.
+    """
+
+    name: str
+    counts: OpCounts
+    variant: str = "pallas"
+    config: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchSpan:
+    """Profiler-style per-launch timing: fraction of one iteration's span."""
+
+    name: str
+    variant: str
+    config: tuple
+    frac_start: float
+    frac_end: float
+
+    @property
+    def frac(self) -> float:
+        return self.frac_end - self.frac_start
+
+
 @dataclasses.dataclass
 class RunRecord:
     """Result of executing one program on the device."""
@@ -88,6 +118,7 @@ class RunRecord:
     counters: Dict[str, float]         # profiler counters (true, per run)
     freq_mhz: float = 0.0              # operating point during the run
     power_cap_w: float = 0.0
+    launch_spans: Optional[list] = None   # per-iteration kernel timing
 
     @property
     def avg_power_w(self) -> float:
@@ -102,6 +133,7 @@ class Program:
     counts_per_iter: OpCounts
     iters: int = 1
     is_nanosleep: bool = False   # active-but-idle probe (Oles et al. analogue)
+    launches: Optional[list] = None      # declared LaunchSpecs per iteration
 
 
 # ---------------------------------------------------------------------------
@@ -606,6 +638,9 @@ class SimDevice:
             if p_est > h.throttle_knee * h.cap_w:
                 e_iter *= h.throttle_energy_mult
                 t_iter *= h.throttle_time_mult
+        launch_spans = None
+        if program.launches:
+            launch_spans = self._launch_spans(program.launches, t_iter)
         duration = h.startup_s + program.iters * t_iter
         p_dyn = (program.iters * e_iter) / max(duration - h.startup_s, 1e-9)
         trace = self._sample_trace(duration, p_dyn, util, h.startup_s,
@@ -624,7 +659,28 @@ class SimDevice:
                          iters=program.iters, trace=trace,
                          energy_counter_j=energy, counters=counters,
                          freq_mhz=self._point.freq_mhz,
-                         power_cap_w=self._point.power_cap_w)
+                         power_cap_w=self._point.power_cap_w,
+                         launch_spans=launch_spans)
+
+    def _launch_spans(self, launches, t_iter: float):
+        """Profiler-style timestamps for declared launches, as fractions of
+        one iteration.  Each launch is timed by the same roofline that times
+        whole programs; launches are placed back to back from the start of
+        the iteration and squeezed to fit when their stand-alone times
+        overcommit the fused iteration (overlap the roofline max hides).
+        The tail past the last launch is the unattributed remainder."""
+        h = self._hidden
+        durs = [h.times(l.counts)[0] for l in launches]
+        total = sum(durs)
+        scale = t_iter / total if total > t_iter > 0 else 1.0
+        spans, cursor = [], 0.0
+        for launch, d in zip(launches, durs):
+            frac = (d * scale) / t_iter if t_iter > 0 else 0.0
+            end = min(cursor + frac, 1.0)
+            spans.append(LaunchSpan(launch.name, launch.variant,
+                                    tuple(launch.config), cursor, end))
+            cursor = end
+        return spans
 
     # Iteration sizing helper so microbenchmarks reach steady state (§3.3).
     def iters_for_duration(self, counts_per_iter: OpCounts,

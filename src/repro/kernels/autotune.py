@@ -1,0 +1,410 @@
+"""J/op autotuner: block-size search that makes the kernels cheaper.
+
+The class table prices op classes; this stage measures *whole kernel
+launches* per candidate block configuration on the target device — the
+micro-calibration analogue of ``core.calibrate``, reusing its protocol
+piece by piece: steady-state runs sized by ``iters_for_duration``,
+deterministic per-(spec, repeat) sensor-noise substreams
+(``calib:{spec_id}:r{r}``), medians over repeats, and optional atomic
+per-spec record persistence for resumable campaigns.
+
+Search is grid + successive halving: every candidate (block config ×
+ref-vs-pallas variant) is measured under a short protocol, the better half
+advances to the full protocol, and the winner is the feasible (latency ≤
+ceiling) entry with minimum measured J/op.  Winners persist in the
+``KernelEnergyTable`` tier of the ``TableStore`` and are read back by the
+``block_config="auto"`` path of ``repro.kernels.ops`` — which falls back
+to the shipped defaults bitwise when no entry exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+import pathlib
+import tempfile
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import measure as measure_mod
+from repro.core.kernel_table import KernelEnergyTable, KernelEntry
+from repro.core.opcount import OpCounts, count_fn
+from repro.hw.device import Program, SimDevice
+
+RECORD_VERSION = 1
+
+ROUND_DURATION_S = (6.0, 24.0)     # successive-halving protocol per round
+ROUND_REPEATS = (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Search spaces: candidate grids + canonical benchmark shapes.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """One kernel's candidate grid and measurement recipe."""
+
+    kernel: str
+    configs: Tuple[Tuple[int, ...], ...]   # pallas candidates (defaults incl.)
+    default: Tuple[int, ...]
+    shape: Dict[str, int]                  # canonical benchmark shape
+    counts: Callable[..., OpCounts]        # (variant, config, **shape)
+    ops_per_call: Callable[..., float]     # (**shape) — config-independent
+
+
+def _flash_args(b, s, h, d, **_):
+    import jax.numpy as jnp
+    z = jnp.zeros((b, s, h, d), jnp.float32)
+    return z, z, z
+
+
+def _flash_counts(variant: str, config, **shape) -> OpCounts:
+    from repro.kernels import flash_attention as _fa
+    from repro.kernels import ref
+    if variant == "ref":
+        fn = functools.partial(ref.flash_attention_ref, causal=True)
+    else:
+        bq, bk = config
+        fn = functools.partial(_fa.flash_attention, causal=True,
+                               block_q=bq, block_k=bk, interpret=True)
+    return count_fn(fn, *_flash_args(**shape))
+
+
+def _flash_ops(b, s, h, d, **_) -> float:
+    # two [S,S]x[S,D] contractions, 2 flops per MAC
+    return float(4 * b * h * s * s * d)
+
+
+def _decode_args(b, s, h, d, kvh, **_):
+    import jax.numpy as jnp
+    q = jnp.zeros((b, h, d), jnp.float32)
+    kc = jnp.zeros((b, s, kvh, d), jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return q, kc, kc, lengths
+
+
+def _decode_counts(variant: str, config, **shape) -> OpCounts:
+    from repro.kernels import decode_attention as _dec
+    from repro.kernels import ref
+    if variant == "ref":
+        fn = ref.decode_attention_ref
+    else:
+        (bk,) = config
+        fn = functools.partial(_dec.decode_attention, block_k=bk,
+                               interpret=True)
+    return count_fn(fn, *_decode_args(**shape))
+
+
+def _decode_ops(b, s, h, d, **_) -> float:
+    return float(4 * b * h * s * d)
+
+
+def _ssd_args(b, s, h, p, n, **_):
+    import jax.numpy as jnp
+    x = jnp.zeros((b, s, h, p), jnp.float32)
+    dt = jnp.full((b, s, h), 0.1, jnp.float32)
+    a = -jnp.ones((h,), jnp.float32)
+    bm = jnp.zeros((b, s, n), jnp.float32)
+    return x, dt, a, bm, bm
+
+
+def _ssd_counts(variant: str, config, **shape) -> OpCounts:
+    from repro.kernels import ssd_scan as _ssd
+    if variant == "ref":
+        from repro.models.ssm import ssd_chunked_ref
+        fn = functools.partial(ssd_chunked_ref,
+                               chunk=SEARCH_SPACES["ssd_chunked"].default[0])
+    else:
+        (chunk,) = config
+        fn = functools.partial(_ssd.ssd_chunked, chunk=chunk, interpret=True)
+    return count_fn(fn, *_ssd_args(**shape))
+
+
+def _ssd_ops(b, s, h, p, n, **_) -> float:
+    # state update + output contraction per timestep
+    return float(4 * b * s * h * p * n)
+
+
+SEARCH_SPACES: Dict[str, SearchSpace] = {
+    "flash_attention": SearchSpace(
+        kernel="flash_attention",
+        configs=tuple((bq, bk) for bq in (128, 256, 512)
+                      for bk in (128, 256, 512)),
+        default=(512, 512),
+        shape={"b": 1, "s": 1024, "h": 4, "d": 64},
+        counts=_flash_counts, ops_per_call=_flash_ops),
+    "decode_attention": SearchSpace(
+        kernel="decode_attention",
+        configs=((128,), (256,), (512,), (1024,)),
+        default=(1024,),
+        shape={"b": 4, "s": 4096, "h": 4, "d": 64, "kvh": 1},
+        counts=_decode_counts, ops_per_call=_decode_ops),
+    "ssd_chunked": SearchSpace(
+        kernel="ssd_chunked",
+        configs=((64,), (128,), (256,)),
+        default=(256,),
+        shape={"b": 2, "s": 1024, "h": 4, "p": 64, "n": 64},
+        counts=_ssd_counts, ops_per_call=_ssd_ops),
+}
+
+
+def point_tag(operating_point, device=None) -> Optional[str]:
+    """Canonical tag for an operating point (None at nominal)."""
+    if operating_point is None:
+        return None
+    if isinstance(operating_point, str):
+        return operating_point
+    tag = getattr(operating_point, "tag", None)
+    if tag:
+        return tag
+    from repro.dvfs.interp import as_point
+    f, c = as_point(operating_point)
+    if c is None and device is not None:
+        c = float(device.chip.tdp_watts)
+    return f"f{f:g}c{c:g}" if c is not None else f"f{f:g}"
+
+
+# ---------------------------------------------------------------------------
+# Measurement: calibrate-style records, one per (candidate, protocol).
+# ---------------------------------------------------------------------------
+def _spec_id(kernel: str, variant: str, config, duration_s: float,
+             tag: Optional[str]) -> str:
+    cfg = "x".join(str(c) for c in config) if config else "ref"
+    suffix = f"@{tag}" if tag else ""
+    return f"kern:{kernel}:{variant}:{cfg}:d{duration_s:g}{suffix}"
+
+
+def _record_path(run_dir, spec_id: str) -> pathlib.Path:
+    return (pathlib.Path(run_dir) / "records"
+            / (spec_id.replace(":", "__") + ".json"))
+
+
+def _load_record(run_dir, spec_id: str) -> Optional[Dict[str, Any]]:
+    if run_dir is None:
+        return None
+    path = _record_path(run_dir, spec_id)
+    if not path.exists():
+        return None
+    rec = json.loads(path.read_text())
+    return rec if rec.get("record_version") == RECORD_VERSION else None
+
+
+def _save_record(run_dir, rec: Dict[str, Any]) -> None:
+    if run_dir is None:
+        return
+    path = _record_path(run_dir, rec["spec_id"])
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(rec, f, indent=1)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def measure_candidate(device: SimDevice, kernel: str, variant: str,
+                      config, counts: OpCounts, ops_per_call: float, *,
+                      duration_s: float, repeats: int,
+                      tag: Optional[str] = None,
+                      run_dir=None) -> KernelEntry:
+    """Measure one launch config to steady state; median over repeats.
+
+    Sensor noise draws from the same deterministic substreams the
+    calibration pipeline uses (``calib:{spec_id}:r{r}``), so records are
+    order-independent and an interrupted campaign resumes bit-identically.
+    """
+    spec_id = _spec_id(kernel, variant, config, duration_s, tag)
+    rec = _load_record(run_dir, spec_id)
+    if rec is None:
+        iters = device.iters_for_duration(counts, duration_s)
+        reps = []
+        for r in range(repeats):
+            run = device.run(Program(spec_id, counts, iters=iters),
+                             noise_key=f"calib:{spec_id}:r{r}")
+            reps.append({"total_j": measure_mod.total_energy(run),
+                         "duration_s": float(run.duration_s),
+                         "iters": int(run.iters)})
+        rec = {"record_version": RECORD_VERSION, "spec_id": spec_id,
+               "kernel": kernel, "variant": variant, "config": list(config),
+               "repeats": reps}
+        _save_record(run_dir, rec)
+    reps = rec["repeats"]
+    med = int(np.argsort([r["total_j"] for r in reps])[len(reps) // 2])
+    rep = reps[med]
+    iters = max(int(rep["iters"]), 1)
+    j_call = rep["total_j"] / iters
+    return KernelEntry(
+        kernel=kernel, variant=variant, config=tuple(config), point=tag,
+        j_per_op=j_call / max(ops_per_call, 1.0), j_per_call=j_call,
+        latency_s=rep["duration_s"] / iters, ops_per_call=ops_per_call,
+        energy_j=rep["total_j"], duration_s=rep["duration_s"], iters=iters,
+        spec_id=spec_id)
+
+
+# ---------------------------------------------------------------------------
+# The search.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class KernelTuneResult:
+    """What one tuning campaign found."""
+
+    kernel: str
+    winner: KernelEntry
+    default: KernelEntry               # the shipped default, same protocol
+    entries: List[KernelEntry]         # every final-round measurement
+    rounds: List[List[str]]            # spec ids surviving each round
+
+    @property
+    def improvement(self) -> float:
+        """Fractional J/op saving of the winner over the shipped default."""
+        return 1.0 - self.winner.j_per_op / max(self.default.j_per_op, 1e-300)
+
+
+def _rank_key(entry: KernelEntry, ceiling: Optional[float]):
+    infeasible = ceiling is not None and entry.latency_s > ceiling
+    return (infeasible, entry.j_per_op, entry.latency_s)
+
+
+def tune(kernel: str, device: SimDevice, *,
+         operating_point=None,
+         latency_ceiling_s: Optional[float] = None,
+         shape: Optional[Dict[str, int]] = None,
+         configs: Optional[Sequence[Tuple[int, ...]]] = None,
+         include_ref: bool = True,
+         exhaustive: bool = False,
+         durations: Sequence[float] = ROUND_DURATION_S,
+         repeats: Sequence[int] = ROUND_REPEATS,
+         run_dir=None) -> KernelTuneResult:
+    """Grid / successive-halving search minimizing measured J/op.
+
+    Every round re-measures the surviving candidates under a longer
+    protocol; ``exhaustive=True`` keeps all candidates through every round
+    (the oracle the halving path is validated against).  The shipped
+    default config is pinned into the final round regardless of earlier
+    ranking, so ``winner.j_per_op <= default.j_per_op`` holds by
+    construction under the shared protocol.
+    """
+    if kernel not in SEARCH_SPACES:
+        raise KeyError(f"unknown kernel {kernel!r}: "
+                       f"expected one of {sorted(SEARCH_SPACES)}")
+    space = SEARCH_SPACES[kernel]
+    shape = dict(space.shape, **(shape or {}))
+    grid = [tuple(c) for c in (configs if configs is not None
+                               else space.configs)]
+    if tuple(space.default) not in grid:
+        grid.append(tuple(space.default))
+    cands: List[Tuple[str, Tuple[int, ...]]] = [("pallas", c) for c in grid]
+    if include_ref:
+        cands.append(("ref", ()))
+    tag = point_tag(operating_point, device)
+    ops = space.ops_per_call(**shape)
+    counts = {c: space.counts(c[0], c[1], **shape) for c in cands}
+
+    restore = None
+    if operating_point is not None:
+        from repro.dvfs.interp import as_point
+        f, cap = as_point(operating_point)
+        restore = device.operating_point
+        device.set_operating_point(f, power_cap_w=cap)
+    try:
+        rounds: List[List[str]] = []
+        entries: Dict[Tuple[str, Tuple[int, ...]], KernelEntry] = {}
+        alive = list(cands)
+        for i, (dur, rep) in enumerate(zip(durations, repeats)):
+            final = i == len(durations) - 1
+            if final and ("pallas", tuple(space.default)) not in alive:
+                alive.append(("pallas", tuple(space.default)))
+            measured = {
+                c: measure_candidate(device, kernel, c[0], c[1], counts[c],
+                                     ops, duration_s=float(dur),
+                                     repeats=int(rep), tag=tag,
+                                     run_dir=run_dir)
+                for c in alive}
+            ranked = sorted(alive,
+                            key=lambda c: _rank_key(measured[c],
+                                                    latency_ceiling_s))
+            if final:
+                entries = measured
+            elif not exhaustive:
+                alive = ranked[:max(-(-len(ranked) // 2), 2)]
+            rounds.append([measured[c].spec_id for c in ranked])
+    finally:
+        if restore is not None:
+            device.set_operating_point(restore)
+
+    default = entries[("pallas", tuple(space.default))]
+    feasible = [e for e in entries.values()
+                if latency_ceiling_s is None
+                or e.latency_s <= latency_ceiling_s]
+    pool = feasible or [default]
+    winner = min(pool, key=lambda e: (e.j_per_op, e.latency_s))
+    return KernelTuneResult(kernel=kernel, winner=winner, default=default,
+                            entries=sorted(entries.values(),
+                                           key=lambda e: e.j_per_op),
+                            rounds=rounds)
+
+
+# ---------------------------------------------------------------------------
+# Persistence + the "auto" lookup used by repro.kernels.ops.
+# ---------------------------------------------------------------------------
+_ACTIVE: Optional[KernelEnergyTable] = None
+
+
+def set_active(ktable: Optional[KernelEnergyTable]) -> None:
+    """Install the process-level table ``block_config="auto"`` consults."""
+    global _ACTIVE
+    _ACTIVE = ktable
+
+
+def get_active() -> Optional[KernelEnergyTable]:
+    return _ACTIVE
+
+
+def load(system: str, store=None) -> Optional[KernelEnergyTable]:
+    """Load a system's persisted kernel table and make it active."""
+    if store is None:
+        from repro.core.store import default_store
+        store = default_store()
+    ktable = store.get_kernel_table(system)
+    if ktable is not None:
+        set_active(ktable)
+    return ktable
+
+
+def best_config(kernel: str, operating_point=None,
+                latency_ceiling_s: Optional[float] = None
+                ) -> Optional[Tuple[int, ...]]:
+    """The active table's best *pallas* config, or None (→ defaults).
+
+    This is the whole contract behind ``block_config="auto"``: with no
+    active table, no entry for the kernel, or a ref-variant-only table,
+    the caller falls back to the shipped defaults — building the exact
+    same jaxpr as an untuned call (bitwise).
+    """
+    if _ACTIVE is None:
+        return None
+    entry = _ACTIVE.best(kernel, point=point_tag(operating_point),
+                         latency_ceiling_s=latency_ceiling_s,
+                         variant="pallas")
+    return tuple(entry.config) if entry is not None else None
+
+
+def tune_and_store(kernel: str, device: SimDevice, system: str, *,
+                   store=None, **kwargs) -> KernelTuneResult:
+    """Tune, merge the measurements into the system's persisted table,
+    publish atomically, and activate the result for ``"auto"`` callers."""
+    if store is None:
+        from repro.core.store import default_store
+        store = default_store()
+    result = tune(kernel, device, **kwargs)
+    ktable = store.get_kernel_table(system) or KernelEnergyTable(system)
+    for e in result.entries:
+        ktable.put(e)
+    store.put_kernel_table(ktable)
+    set_active(ktable)
+    return result

@@ -62,7 +62,15 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     _, s, kvh, _ = k_cache.shape
     g = h // kvh
     block_k = min(block_k, s)
-    assert s % block_k == 0
+    # Non-divisible tails: zero-pad the cache to a block multiple.  Padded
+    # positions sit at k_pos >= s >= length, so the existing validity mask
+    # already excludes them; the divisible path is untouched (bitwise).
+    if s % block_k != 0:
+        s_pad = -(-s // block_k) * block_k
+        widths = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        s = s_pad
     qg = q.reshape(b, kvh, g, d)
     grid = (b, kvh)
     out = pl.pallas_call(

@@ -27,7 +27,8 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
                   causal: bool, window: Optional[int],
-                  softcap: Optional[float], block_k: int, q_offset_blocks: int):
+                  softcap: Optional[float], block_k: int, q_offset_blocks: int,
+                  kv_len: Optional[int] = None):
     """One (batch, head, q-block) program: stream K/V blocks."""
     bq, d = q_ref.shape[1], q_ref.shape[3]
     s = k_ref.shape[1]
@@ -53,6 +54,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
             mask &= k_pos <= q_pos
         if window is not None:
             mask &= k_pos > q_pos - window
+        if kv_len is not None:          # padded tail: positions >= kv_len
+            mask &= k_pos < kv_len
         scores = jnp.where(mask, scores, NEG_INF)
         m_cur = jnp.max(scores, axis=-1, keepdims=True)         # [BQ,1]
         m_new = jnp.maximum(m_prev, m_cur)
@@ -86,21 +89,36 @@ def flash_attention(q, k, v, *, causal: bool = True,
     b, s, h, d = q.shape
     block_q = min(block_q, s)
     block_k = min(block_k, s)
-    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
-    grid = (b, h, s // block_q)
+    # Non-divisible tails: pad S up to a common block multiple and mask the
+    # padded kv positions in-kernel.  The divisible path takes no pad branch
+    # and builds the exact same jaxpr as before (bitwise-preserving).
+    tile = math.lcm(block_q, block_k)
+    s_pad = s if s % tile == 0 else -(-s // tile) * tile
+    kv_len = None
+    if s_pad != s:
+        widths = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        kv_len = s
+    grid = (b, h, s_pad // block_q)
     kernel = functools.partial(
         _flash_kernel, sm_scale=1.0 / math.sqrt(d), causal=causal,
-        window=window, softcap=softcap, block_k=block_k, q_offset_blocks=0)
-    return pl.pallas_call(
+        window=window, softcap=softcap, block_k=block_k, q_offset_blocks=0,
+        kv_len=kv_len)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, i: (b_, i, h_, 0)),
-            pl.BlockSpec((1, s, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
-            pl.BlockSpec((1, s, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, s_pad, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, s_pad, 1, d), lambda b_, h_, i: (b_, 0, h_, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, 1, d),
                                lambda b_, h_, i: (b_, i, h_, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(q, k, v)
+    if s_pad != s:
+        out = out[:, :s]
+    return out

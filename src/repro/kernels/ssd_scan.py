@@ -91,6 +91,20 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None, *,
     the intra-chunk part; inter-chunk recurrence in XLA."""
     bsz, s, h, p = x.shape
     n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    # Non-divisible tails: zero-pad the sequence to a chunk multiple.  Every
+    # padded row carries dt = 0, so it contributes exp(0) = 1 decay and a
+    # zero dt-weighted update — the inter-chunk state and all real rows are
+    # exact, and the padded y rows are sliced off.  The divisible path takes
+    # no pad branch (bitwise-preserving).
+    s_out = s
+    if s % chunk != 0:
+        s = -(-s // chunk) * chunk
+        pz = s - s_out
+        x = jnp.pad(x, [(0, 0), (0, pz), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pz), (0, 0)])
+        b_mat = jnp.pad(b_mat, [(0, 0), (0, pz), (0, 0)])
+        c_mat = jnp.pad(c_mat, [(0, 0), (0, pz), (0, 0)])
     nc = s // chunk
     xc = x.reshape(bsz, nc, chunk, h, p)
     dtc = dt.reshape(bsz, nc, chunk, h)
@@ -129,4 +143,6 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None, *,
     y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
                        cc.astype(jnp.float32), prev, state_decay)
     y = (y_diag + y_off).reshape(bsz, s, h, p)
+    if s != s_out:
+        y = y[:, :s_out]
     return y, last

@@ -21,8 +21,9 @@ cheaper per sample — see ``benchmarks/telemetry_overhead.py``.
 Entry point: ``repro.api.EnergyModel.stream(...)`` /
 ``EnergyModel.monitor(live=...)``.
 """
-from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
-                                   align_trace, contiguous_markers,
+from repro.telemetry.align import (UNATTRIBUTED, AlignedWindow, Marker,
+                                   StreamAligner, align_trace,
+                                   contiguous_markers, subdivide_marker,
                                    window_tiling)
 from repro.telemetry.attrib import (DriftDetector, DriftState,
                                     OnlineAttributor, StepAttribution,
@@ -48,4 +49,5 @@ __all__ = [
     "StreamingIntegrator", "rolling_std", "trapezoid_energy",
     "DEFAULT_CHUNK", "iter_chunks", "TelemetryPlane", "Shard",
     "ShardSummary", "SharedSampleRing", "fleet_block", "window_tiling",
+    "subdivide_marker", "UNATTRIBUTED",
 ]

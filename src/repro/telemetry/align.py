@@ -39,6 +39,9 @@ from repro.telemetry.sampler import PowerSample
 _EPS = 1e-12
 
 
+UNATTRIBUTED = "__unattributed__"    # kernel-window filler for idle gaps
+
+
 @dataclasses.dataclass(frozen=True)
 class Marker:
     """One step/kernel window in the sampled trace's clock."""
@@ -47,6 +50,8 @@ class Marker:
     name: str
     t_start_s: float
     t_end_s: float
+    variant: str = ""           # kernel windows: implementation variant
+    config: tuple = ()          # kernel windows: block configuration
 
     def __post_init__(self):
         if self.t_end_s < self.t_start_s:
@@ -60,7 +65,15 @@ class Marker:
 
 @dataclasses.dataclass
 class AlignedWindow:
-    """Measured energy attributed to one marker."""
+    """Measured energy attributed to one marker.
+
+    A step window aligned with kernel sub-markers carries its per-launch
+    ``children`` (kernel windows plus the ``__unattributed__`` remainder);
+    its ``measured_j`` is then *defined* as the left-to-right sum of the
+    children's energies, so ``sum(c.measured_j for c in w.children)``
+    reproduces ``w.measured_j`` bitwise — the same guarantee class as step
+    windows tiling the run total.
+    """
 
     step: int
     name: str
@@ -70,6 +83,9 @@ class AlignedWindow:
     n_samples: int              # samples with t in [t_start, t_end)
     covered_s: float            # span actually backed by samples
     clipped: bool               # trace did not fully cover the window
+    variant: str = ""
+    config: tuple = ()
+    children: Optional[List["AlignedWindow"]] = None
 
     @property
     def duration_s(self) -> float:
@@ -83,6 +99,8 @@ class AlignedWindow:
 class _Accum:
     __slots__ = ("marker", "energy_j", "n_samples", "covered_s")
 
+    children = None             # plain windows have no sub-accumulators
+
     def __init__(self, marker: Marker):
         self.marker = marker
         self.energy_j = 0.0
@@ -95,7 +113,42 @@ class _Accum:
         return AlignedWindow(step=m.step, name=m.name, t_start_s=m.t_start_s,
                              t_end_s=m.t_end_s, measured_j=self.energy_j,
                              n_samples=self.n_samples,
-                             covered_s=self.covered_s, clipped=clipped)
+                             covered_s=self.covered_s, clipped=clipped,
+                             variant=m.variant, config=m.config)
+
+
+class _GroupAccum(_Accum):
+    """A step accumulator subdivided into kernel-window accumulators.
+
+    The children receive the actual split-trapezoid accumulation (the same
+    expressions, in the same order, as any top-level window); the parent's
+    totals are assembled from the finished children left to right, which is
+    what makes the kernel→step tiling exact by construction rather than
+    approximate by re-splitting.
+    """
+
+    __slots__ = ("children",)
+
+    def __init__(self, marker: Marker, children: Sequence[Marker]):
+        super().__init__(marker)
+        self.children = [_Accum(c) for c in children]
+
+    def finish(self) -> AlignedWindow:
+        kids = [c.finish() for c in self.children]
+        energy = 0.0
+        n_samples = 0
+        covered = 0.0
+        for k in kids:
+            energy += k.measured_j
+            n_samples += k.n_samples
+            covered += k.covered_s
+        m = self.marker
+        clipped = covered + 1e-9 < m.duration_s
+        return AlignedWindow(step=m.step, name=m.name, t_start_s=m.t_start_s,
+                             t_end_s=m.t_end_s, measured_j=energy,
+                             n_samples=n_samples, covered_s=covered,
+                             clipped=clipped, variant=m.variant,
+                             config=m.config, children=kids)
 
 
 class StreamAligner:
@@ -118,13 +171,44 @@ class StreamAligner:
         self._last_marker_end = -math.inf
 
     # -- inputs -------------------------------------------------------------
-    def add_marker(self, marker: Marker) -> None:
+    def add_marker(self, marker: Marker,
+                   children: Optional[Sequence[Marker]] = None) -> None:
+        """Register the next window; ``children`` subdivides it.
+
+        Child markers (per-launch kernel windows) must *exactly* tile the
+        parent span: the first child starts at the parent's start, each
+        child starts where the previous one ends (bit-for-bit — build them
+        with :func:`subdivide_marker`), and the last child ends at the
+        parent's end.  Gaps and overlaps are rejected; zero-duration
+        children are fine.
+        """
         if marker.t_start_s < self._last_marker_end - 1e-9:
             raise ValueError(
                 f"marker {marker.name!r} starts at {marker.t_start_s} "
                 f"inside the previous window (ends {self._last_marker_end}); "
                 f"markers must be time-ordered and non-overlapping")
-        self._active.append(_Accum(marker))
+        if children is not None:
+            kids = list(children)
+            if not kids:
+                raise ValueError(f"marker {marker.name!r}: children given "
+                                 "but empty; pass None for a plain window")
+            cursor = marker.t_start_s
+            for c in kids:
+                if c.t_start_s != cursor:
+                    raise ValueError(
+                        f"kernel windows must exactly tile their step "
+                        f"window: child {c.name!r} starts at {c.t_start_s!r}"
+                        f" but the tiling cursor is at {cursor!r} "
+                        f"(no gaps or overlaps)")
+                cursor = c.t_end_s
+            if cursor != marker.t_end_s:
+                raise ValueError(
+                    f"kernel windows must exactly tile their step window: "
+                    f"last child ends at {cursor!r}, step ends at "
+                    f"{marker.t_end_s!r}")
+            self._active.append(_GroupAccum(marker, kids))
+        else:
+            self._active.append(_Accum(marker))
         self._last_marker_end = marker.t_end_s
         self._horizon = max(self._horizon, marker.t_end_s)
         self._drain()
@@ -188,20 +272,25 @@ class StreamAligner:
     def _process(self, t: float, p: float) -> None:
         t0, p0 = self._t_prev, self._p_prev
         for acc in self._active:
-            m = acc.marker
-            if m.t_start_s > t:
+            if acc.marker.t_start_s > t:
                 break            # time-ordered: nothing later overlaps yet
-            if m.t_start_s <= t < m.t_end_s:
-                acc.n_samples += 1
-            if t0 is None:
-                continue
-            a = max(t0, m.t_start_s)
-            b = min(t, m.t_end_s)
-            if b - a > _EPS and t > t0:
-                pa = p0 + (p - p0) * (a - t0) / (t - t0)
-                pb = p0 + (p - p0) * (b - t0) / (t - t0)
-                acc.energy_j += 0.5 * (pa + pb) * (b - a)
-                acc.covered_s += b - a
+            # kernel-subdivided windows accumulate into their children
+            # (the parent is assembled from them at finalize time)
+            for sub in acc.children or (acc,):
+                m = sub.marker
+                if m.t_start_s > t:
+                    break        # children are time-ordered too
+                if m.t_start_s <= t < m.t_end_s:
+                    sub.n_samples += 1
+                if t0 is None:
+                    continue
+                a = max(t0, m.t_start_s)
+                b = min(t, m.t_end_s)
+                if b - a > _EPS and t > t0:
+                    pa = p0 + (p - p0) * (a - t0) / (t - t0)
+                    pb = p0 + (p - p0) * (b - t0) / (t - t0)
+                    sub.energy_j += 0.5 * (pa + pb) * (b - a)
+                    sub.covered_s += b - a
         while self._active and self._active[0].marker.t_end_s <= t:
             self._finalize(self._active.popleft())
         self._t_prev, self._p_prev = t, p
@@ -226,36 +315,39 @@ class StreamAligner:
         p0s, p1s = pp[:-1], pp[1:]
         t_last = float(t[-1])
         for acc in self._active:
-            m = acc.marker
-            if m.t_start_s > t_last:
+            if acc.marker.t_start_s > t_last:
                 break            # time-ordered: nothing later overlaps yet
-            acc.n_samples += int(
-                np.searchsorted(t, m.t_end_s, side="left")
-                - np.searchsorted(t, m.t_start_s, side="left"))
-            if not t0s.size:
-                continue
-            i0 = int(np.searchsorted(t1s, m.t_start_s, side="right"))
-            i1 = int(np.searchsorted(t0s, m.t_end_s, side="left"))
-            if i1 <= i0:
-                continue
-            seg_t0, seg_t1 = t0s[i0:i1], t1s[i0:i1]
-            a = np.maximum(seg_t0, m.t_start_s)
-            b = np.minimum(seg_t1, m.t_end_s)
-            dt = seg_t1 - seg_t0
-            mask = (b - a > _EPS) & (dt > 0)
-            if not mask.any():
-                continue
-            dt_safe = np.where(dt > 0, dt, 1.0)
-            seg_p0 = p0s[i0:i1]
-            dp = p1s[i0:i1] - seg_p0
-            pa = seg_p0 + dp * (a - seg_t0) / dt_safe
-            pb = seg_p0 + dp * (b - seg_t0) / dt_safe
-            areas = (0.5 * (pa + pb) * (b - a))[mask]
-            spans = (b - a)[mask]
-            acc.energy_j = float(np.cumsum(
-                np.concatenate(([acc.energy_j], areas)))[-1])
-            acc.covered_s = float(np.cumsum(
-                np.concatenate(([acc.covered_s], spans)))[-1])
+            for sub in acc.children or (acc,):
+                m = sub.marker
+                if m.t_start_s > t_last:
+                    break        # children are time-ordered too
+                sub.n_samples += int(
+                    np.searchsorted(t, m.t_end_s, side="left")
+                    - np.searchsorted(t, m.t_start_s, side="left"))
+                if not t0s.size:
+                    continue
+                i0 = int(np.searchsorted(t1s, m.t_start_s, side="right"))
+                i1 = int(np.searchsorted(t0s, m.t_end_s, side="left"))
+                if i1 <= i0:
+                    continue
+                seg_t0, seg_t1 = t0s[i0:i1], t1s[i0:i1]
+                a = np.maximum(seg_t0, m.t_start_s)
+                b = np.minimum(seg_t1, m.t_end_s)
+                dt = seg_t1 - seg_t0
+                mask = (b - a > _EPS) & (dt > 0)
+                if not mask.any():
+                    continue
+                dt_safe = np.where(dt > 0, dt, 1.0)
+                seg_p0 = p0s[i0:i1]
+                dp = p1s[i0:i1] - seg_p0
+                pa = seg_p0 + dp * (a - seg_t0) / dt_safe
+                pb = seg_p0 + dp * (b - seg_t0) / dt_safe
+                areas = (0.5 * (pa + pb) * (b - a))[mask]
+                spans = (b - a)[mask]
+                sub.energy_j = float(np.cumsum(
+                    np.concatenate(([sub.energy_j], areas)))[-1])
+                sub.covered_s = float(np.cumsum(
+                    np.concatenate(([sub.covered_s], spans)))[-1])
         while self._active and self._active[0].marker.t_end_s <= t_last:
             self._finalize(self._active.popleft())
         self._t_prev, self._p_prev = t_last, float(p[-1])
@@ -265,6 +357,41 @@ class StreamAligner:
         self.windows.append(win)
         if self._on_window is not None:
             self._on_window(win)
+
+
+def subdivide_marker(parent: Marker, spans) -> List[Marker]:
+    """Kernel child markers exactly tiling ``parent`` from launch spans.
+
+    ``spans`` is a sequence of launch timings with ``name``, ``variant``,
+    ``config``, ``frac_start``, ``frac_end`` attributes (fractions of the
+    parent window — e.g. ``RunRecord.launch_spans`` from the sim's
+    profiler).  Idle gaps between launches and the tail after the last one
+    become ``__unattributed__`` fillers, so the children partition the
+    parent span with bit-for-bit shared boundaries: each child's start *is*
+    the previous child's end (the same float object), which is what
+    ``StreamAligner.add_marker`` validates and the bitwise kernel→step
+    tiling rests on.
+    """
+    t0, t1 = parent.t_start_s, parent.t_end_s
+    dur = t1 - t0
+    out: List[Marker] = []
+    cursor = t0
+    for sp in spans:
+        start = t1 if sp.frac_start >= 1.0 else min(t0 + sp.frac_start * dur, t1)
+        end = t1 if sp.frac_end >= 1.0 else min(t0 + sp.frac_end * dur, t1)
+        if start > cursor:
+            out.append(Marker(parent.step, UNATTRIBUTED, cursor, start))
+            cursor = start
+        # guard float drift: chain from the cursor, never before it
+        start = cursor
+        if end < start:
+            end = start
+        out.append(Marker(parent.step, sp.name, start, end,
+                          variant=sp.variant, config=tuple(sp.config)))
+        cursor = end
+    if cursor < t1 or not out:
+        out.append(Marker(parent.step, UNATTRIBUTED, cursor, t1))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ JSON-exportable snapshot — what a fleet dashboard would poll.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import math
@@ -35,9 +36,9 @@ import numpy as np
 # module, and their startup must not pay for (or depend on) jax.
 from repro.core.counting import OpCounts
 from repro.core.predict import TablePredictor
-from repro.hw.device import Program, RunRecord, SimDevice
+from repro.hw.device import LaunchSpec, Program, RunRecord, SimDevice
 from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
-                                   contiguous_markers)
+                                   contiguous_markers, subdivide_marker)
 from repro.telemetry.attrib import DriftState, OnlineAttributor, mape_pct
 from repro.telemetry.attrib import rescale_table
 from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
@@ -155,6 +156,8 @@ class StreamSession:
         self.record: Optional[RunRecord] = None
         self.summary: Optional[StreamSummary] = None
         self._steps: List[_HostStep] = []
+        self._kernel_scopes: List[LaunchSpec] = []   # declared per iteration
+        self._scope_open: Optional[str] = None
         self._n = 0                  # marker windows (finish(steps=k) <= registered)
         self._group = 1.0            # device iterations per logical step
         self._group_counts = counts  # counts per marker window
@@ -215,6 +218,46 @@ class StreamSession:
         idx = step if step is not None else len(self._steps)
         self._steps.append(_HostStep(idx, duration_s, work_units, counters))
 
+    @contextlib.contextmanager
+    def kernel_scope(self, name: str, variant: str = "pallas",
+                     config=(), counts: Optional[OpCounts] = None):
+        """Declare one kernel launch inside each iteration of this workload.
+
+        The microscopy analogue of ``step``: where ``step`` marks the MTSM
+        sync points that subdivide the run, ``kernel_scope`` marks the
+        launches that subdivide each step.  The host wraps the kernel call::
+
+            with session.kernel_scope("flash_attention", config=(512, 512),
+                                      counts=model.profile(fn, *args).counts):
+                out = fn(*args)
+
+        ``counts`` is the launch's own per-call profile — the sim times the
+        launch with it (a real profiler would read launch timestamps off
+        the stream) and each step's aligned window subdivides into one
+        kernel window per scope plus the ``__unattributed__`` remainder,
+        tiling the step's measured joules bitwise.  Scopes are declarative
+        and uniform across steps; they must be entered before ``start()``
+        and must not nest or overlap.
+        """
+        if self.summary is not None:
+            raise RuntimeError("session already finished")
+        if self._aligner is not None:
+            raise RuntimeError("session already started; kernel scopes are "
+                               "fixed once sampling begins")
+        if self._scope_open is not None:
+            raise ValueError(
+                f"kernel scope {name!r} opened while scope "
+                f"{self._scope_open!r} is still active; kernel scopes must "
+                f"not overlap — close the previous scope first")
+        self._scope_open = name
+        try:
+            yield self
+            self._kernel_scopes.append(LaunchSpec(
+                name=name, counts=counts if counts is not None else OpCounts(),
+                variant=variant, config=tuple(config)))
+        finally:
+            self._scope_open = None
+
     @property
     def started(self) -> bool:
         return self._aligner is not None
@@ -262,17 +305,27 @@ class StreamSession:
             freq, cap = self.operating_point
             self.device.set_operating_point(freq, power_cap_w=cap)
         rec, sampler = DeviceSampler(self.device).run(
-            Program(self.name, self.counts, iters=iters))
+            Program(self.name, self.counts, iters=iters,
+                    launches=self._kernel_scopes or None))
         self.record = rec
         return rec, sampler
 
     def _arm(self, record: Optional[RunRecord], markers: List[Marker],
              sampler) -> None:
-        """Ingest half of ``start``: marker grid + chunk source."""
+        """Ingest half of ``start``: marker grid + chunk source.
+
+        Markers may be plain ``Marker``s or ``(marker, children)`` pairs —
+        the latter arm a kernel-subdivided step window.  The attached/shard
+        path always passes plain markers, so the sharded plane is
+        untouched by kernel microscopy.
+        """
         self.record = record
         self._aligner = StreamAligner(on_window=self._on_window)
         for m in markers:
-            self._aligner.add_marker(m)
+            if isinstance(m, tuple):
+                self._aligner.add_marker(m[0], m[1])
+            else:
+                self._aligner.add_marker(m)
         self._source = (iter_chunks(sampler, self.chunk_size)
                         if self.chunk_size else iter(sampler))
 
@@ -467,9 +520,17 @@ class StreamSession:
             markers.append(Marker(step=-1, name="__startup__",
                                   t_start_s=float(t[0]), t_end_s=t_act))
         bounds = np.linspace(t_act, t_end, n + 1)
-        markers.extend(contiguous_markers(
+        step_markers = contiguous_markers(
             bounds, names=[f"{self.name}[{h.step}]" for h in self._steps[:n]],
-            first_step=0))
+            first_step=0)
+        spans = getattr(rec, "launch_spans", None)
+        if spans:
+            # each step window spans _group uniform iterations, so the
+            # per-iteration launch fractions are the step's fractions too
+            markers.extend((m, subdivide_marker(m, spans))
+                           for m in step_markers)
+        else:
+            markers.extend(step_markers)
         return markers
 
     def _on_window(self, win: AlignedWindow) -> None:
@@ -534,6 +595,44 @@ class StreamSession:
 
     def _mape(self) -> float:
         return mape_pct(self.attributions)
+
+    # -- kernel microscopy -----------------------------------------------------
+    @property
+    def kernel_windows(self) -> List[AlignedWindow]:
+        """Every per-launch kernel window, in step order then launch order."""
+        out: List[AlignedWindow] = []
+        for w in self.windows:
+            if w.step >= 0 and w.children:
+                out.extend(w.children)
+        return out
+
+    def kernel_report(self) -> Dict[str, dict]:
+        """Aggregate measured kernel energy across steps; name -> stats.
+
+        Each step's kernel windows tile that step's measured joules
+        bitwise, so the report's energies (plus ``__unattributed__``) sum
+        to the attributed total.  ``launches`` counts actual device
+        launches (``iterations_per_step`` per window), so ``j_per_launch``
+        is a true per-call figure.
+        """
+        out: Dict[str, dict] = {}
+        for w in self.windows:
+            if w.step < 0 or not w.children:
+                continue
+            for c in w.children:
+                d = out.setdefault(c.name, {
+                    "name": c.name, "variant": c.variant,
+                    "config": list(c.config), "energy_j": 0.0,
+                    "duration_s": 0.0, "windows": 0, "launches": 0.0})
+                d["energy_j"] += c.measured_j
+                d["duration_s"] += c.duration_s
+                d["windows"] += 1
+                d["launches"] += self._group
+        for d in out.values():
+            n = max(d["launches"], 1.0)
+            d["j_per_launch"] = d["energy_j"] / n
+            d["s_per_launch"] = d["duration_s"] / n
+        return out
 
     # -- inspection ------------------------------------------------------------
     def snapshot(self) -> dict:

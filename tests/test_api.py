@@ -301,6 +301,55 @@ def test_evaluate_explicit_table_overrides_model():
 
 
 # ---------------------------------------------------------------------------
+# Kernel microscopy / autotuning facades.
+# ---------------------------------------------------------------------------
+def test_microscope_tiles_and_reports():
+    model = EnergyModel(_table())
+    prof = model.profile(_fn, *_ARGS)
+    rep = model.microscope([("matmul", prof), ("tanh", prof, "ref")],
+                           steps=3, recalibrate=None)
+    assert rep.tiling_exact
+    assert set(rep.kernels) >= {"matmul", "tanh"}
+    assert rep.kernels["tanh"]["variant"] == "ref"
+    assert rep.kernels["matmul"]["energy_j"] > 0
+    # per-kernel energies (plus the unattributed filler) recompose the
+    # attributed total — the microscope's whole point
+    assert sum(d["energy_j"] for d in rep.kernels.values()) == pytest.approx(
+        rep.attributed_j, rel=1e-9)
+    with pytest.raises(ValueError, match="at least one launch"):
+        model.microscope([])
+
+
+def test_microscope_dict_launches_and_step_counts():
+    model = EnergyModel(_table())
+    prof = model.profile(_fn, *_ARGS)
+    rep = model.microscope(
+        [{"name": "fa", "source": prof, "variant": "pallas",
+          "config": (256, 256)}],
+        steps=2, step_counts=prof, recalibrate=None)
+    assert rep.tiling_exact
+    assert rep.kernels["fa"]["config"] == [256, 256]
+
+
+def test_tune_kernel_facade_persists_and_activates(tmp_path):
+    from repro.kernels import autotune
+    store = TableStore(tmp_path)
+    model = EnergyModel(_table())
+    try:
+        res = model.tune_kernel("ssd_chunked", store=store,
+                                durations=(2.0, 4.0), repeats=(1, 1))
+        assert res.winner.j_per_op <= res.default.j_per_op
+        kt = store.get_kernel_table("sim-v5e-air")
+        assert kt is not None and kt.get(*res.winner.key) is not None
+        # measurement records land under the store, resumable by design
+        assert list((tmp_path / "runs" / "sim-v5e-air__kernels"
+                     / "records").glob("*.json"))
+        assert autotune.best_config("ssd_chunked") == res.winner.config
+    finally:
+        autotune.set_active(None)
+
+
+# ---------------------------------------------------------------------------
 # Deprecation shims.
 # ---------------------------------------------------------------------------
 def test_cached_table_shim_warns_and_uses_store(tmp_path, monkeypatch):

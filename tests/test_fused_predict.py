@@ -1,0 +1,119 @@
+"""The jit-fused predictor hot path vs the plain batch: bitwise totals.
+
+The fused kernel keeps every reduction that defines a ``Prediction`` total
+in numpy (pairwise, same order as the plain path) and pushes only
+elementwise IEEE work plus the bucket matmul into XLA — so ``total_j``,
+``dynamic_j``, ``coverage`` and the per-class energy vector must match the
+plain batch bit for bit, in both pred and direct modes, with and without
+profiled memory counters.  ``by_bucket`` is the one deliberate exception:
+the fused path gets it from one dgemm (different summation order), so it
+is float-close, not bitwise.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="the fused path needs jax")
+
+from repro.core import coverage, isa
+from repro.core.opcount import OpCounts
+from repro.core.predict import _FUSED_MIN_JOBS, TablePredictor
+from repro.core.table import EnergyTable
+
+SEED = 11
+
+
+def _table() -> EnergyTable:
+    rng = np.random.default_rng(SEED)
+    direct = {c.name: float(e) for c, e in
+              zip(isa.OP_CLASSES,
+                  rng.uniform(1e-12, 6e-11, len(isa.OP_CLASSES)))}
+    t = EnergyTable(system="fused-test", p_const=40.0, p_static=55.0,
+                    direct=direct)
+    coverage.compute_bucket_means(t)
+    return t
+
+
+def _programs(n, with_counters=False):
+    rng = np.random.default_rng(SEED + 1)
+    names = [c.name for c in isa.OP_CLASSES]
+    programs, durations, counters = [], [], []
+    for _ in range(n):
+        c = OpCounts()
+        for cls in rng.choice(names, size=rng.integers(8, 28),
+                              replace=False):
+            c.add(str(cls), float(rng.uniform(1e3, 1e9)))
+        c.boundary_read_bytes = float(rng.uniform(1e6, 1e10))
+        c.boundary_write_bytes = float(rng.uniform(1e6, 1e10))
+        c.fused_bytes = float(rng.uniform(1e6, 1e10))
+        c.naive_bytes = c.boundary_bytes + c.fused_bytes
+        programs.append(c)
+        durations.append(float(rng.uniform(0.5, 30.0)))
+        counters.append({"hbm_read_bytes": float(rng.uniform(1e6, 1e10)),
+                         "hbm_write_bytes": float(rng.uniform(1e6, 1e10)),
+                         "vmem_read_bytes": float(rng.uniform(1e5, 1e9)),
+                         "vmem_write_bytes": float(rng.uniform(1e5, 1e9))}
+                        if with_counters else None)
+    return programs, durations, counters
+
+
+@pytest.fixture(scope="module")
+def predictors():
+    plain = TablePredictor(_table())
+    fused = TablePredictor(_table(), fused=True)
+    plain.warm(), fused.warm()
+    if not fused.enable_fused():
+        pytest.skip("fused kernel unavailable on this host")
+    return plain, fused
+
+
+N = max(64, _FUSED_MIN_JOBS * 2)
+
+
+@pytest.mark.parametrize("mode", ["pred", "direct"])
+@pytest.mark.parametrize("with_counters", [False, True])
+def test_fused_totals_bitwise_identical(predictors, mode, with_counters):
+    plain, fused = predictors
+    programs, durations, counters = _programs(N, with_counters)
+    a = plain.predict_batch(programs, durations, counters, mode=mode)
+    b = fused.predict_batch(programs, durations, counters, mode=mode)
+    for pa, pb in zip(a, b):
+        assert pa.total_j == pb.total_j
+        assert pa.dynamic_j == pb.dynamic_j
+        assert pa.coverage == pb.coverage
+        assert pa.static_j == pb.static_j and pa.const_j == pb.const_j
+        np.testing.assert_array_equal(pa.class_energy_vec,
+                                      pb.class_energy_vec)
+
+
+def test_fused_by_bucket_float_close_and_consistent(predictors):
+    plain, fused = predictors
+    programs, durations, _ = _programs(N)
+    a = plain.predict_batch(programs, durations)
+    b = fused.predict_batch(programs, durations)
+    for pa, pb in zip(a, b):
+        assert set(pb.by_bucket) == set(pa.by_bucket)
+        for k, v in pa.by_bucket.items():
+            assert pb.by_bucket[k] == pytest.approx(v, rel=1e-12)
+        # buckets still recompose the total
+        assert sum(pb.by_bucket.values()) == pytest.approx(pb.total_j)
+
+
+def test_small_batches_silently_use_the_plain_path(predictors):
+    plain, fused = predictors
+    n = _FUSED_MIN_JOBS - 1
+    programs, durations, _ = _programs(n)
+    a = plain.predict_batch(programs, durations)
+    b = fused.predict_batch(programs, durations)
+    for pa, pb in zip(a, b):
+        assert pa.total_j == pb.total_j
+        assert pa.by_bucket == pb.by_bucket   # plain path: exact dict too
+    # single predicts never pay the dispatch either
+    pa = plain.predict(programs[0], durations[0])
+    pb = fused.predict(programs[0], durations[0])
+    assert pa.total_j == pb.total_j
+
+
+def test_fused_flag_and_default_off():
+    p = TablePredictor(_table())
+    assert p._fused_requested is False
+    assert p._ensure_fused() is None          # never built unless asked

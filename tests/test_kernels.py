@@ -99,6 +99,77 @@ def test_ssd_single_chunk_against_oracle():
                                rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Non-divisible tails: S need not be a multiple of the block sizes.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s", [130, 200])
+@pytest.mark.parametrize("feature", ["plain", "window", "softcap",
+                                     "noncausal"])
+def test_flash_attention_nondivisible_s(s, feature):
+    b, h, d = 1, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) for kk in ks)
+    kwargs = {"causal": feature != "noncausal"}
+    if feature == "window":
+        kwargs["window"] = 48
+    if feature == "softcap":
+        kwargs["softcap"] = 30.0
+    out = ops.flash_attention(q, k, v, interpret=True,
+                              block_config=(64, 64), **kwargs)
+    want = ref.flash_attention_ref(q, k, v, **kwargs)
+    assert out.shape == (b, s, h, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s", [700, 1000])
+def test_decode_attention_nondivisible_s(s):
+    kvh, g, d = 2, 3, 64
+    b, h = 2, kvh * g
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, kvh, d))
+    vc = jax.random.normal(ks[2], (b, s, kvh, d))
+    lengths = jnp.array([s // 3, s], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lengths, interpret=True,
+                               block_config=(256,))
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_nondivisible_s_matches_divisible_ref():
+    bsz, s, h, p, n = 2, 100, 2, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (bsz, s, n))
+    C = jax.random.normal(ks[4], (bsz, s, n))
+    # kernel pads 100 -> 128 internally; the chunking itself is exact, so a
+    # divisible-chunk reference is the oracle for both y and the final state
+    y1, st1 = ops.ssd_chunked(x, dt, a, B, C, chunk=32, interpret=True)
+    y2, st2 = ssd_chunked_ref(x, dt, a, B, C, 20)
+    assert y1.shape == (bsz, s, h, p)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_divisible_path_takes_no_pad_branch():
+    """At block-multiple S the tail machinery must stay out of the jaxpr —
+    the bitwise-preservation claim for every pre-existing call site."""
+    def fa(s):
+        shape = (1, s, 2, 64)
+        sd = jax.ShapeDtypeStruct(shape, jnp.float32)
+        return str(jax.make_jaxpr(
+            lambda q, k, v: ops.flash_attention(
+                q, k, v, interpret=True, block_config=(64, 64)))(sd, sd, sd))
+    assert "pad[" not in fa(128)
+    assert "pad[" in fa(130)
+
+
 def test_model_forward_with_pallas_attention():
     """attn_fn hook end-to-end: flash kernel inside the qwen2 smoke model."""
     import dataclasses

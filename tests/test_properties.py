@@ -187,3 +187,48 @@ def test_predict_batch_bitwise_equals_per_program_loop(jobs):
         assert a.dynamic_j == b.dynamic_j
         assert a.coverage == b.coverage
         assert a.by_class == b.by_class
+
+
+@given(st.lists(st.integers(min_value=1, max_value=41),
+                min_size=1, max_size=12),
+       st.integers(min_value=2, max_value=6))
+@settings(max_examples=40, deadline=None)
+def test_kernel_tiling_bitwise_under_random_chunking(chunk_sizes, n_kids):
+    """Kernel windows tile their step bitwise no matter how the sample
+    stream is chunked — including chunks that straddle child boundaries."""
+    from repro.telemetry import Marker, PowerSample, StreamAligner
+    from repro.hw.device import SensorTrace
+
+    n = 120
+    t = np.arange(n) / 10.0                     # t = 0 .. 11.9
+    p = 150.0 + 30.0 * np.sin(np.arange(n) / 5.0)
+    trace = SensorTrace(t, p, np.ones(n), np.full(n, 50.0))
+    parent = Marker(0, "step", 0.0, 10.0)
+    edges = np.linspace(0.0, 10.0, n_kids + 1)
+    kids = []
+    cursor = parent.t_start_s
+    for i in range(n_kids):                     # chain ends bit-for-bit
+        end = parent.t_end_s if i == n_kids - 1 else float(edges[i + 1])
+        kids.append(Marker(0, f"k{i}", cursor, end))
+        cursor = end
+
+    ref = StreamAligner()
+    ref.add_marker(parent, list(kids))
+    for ti, pi in zip(t, p):
+        ref.add_sample(PowerSample(float(ti), float(pi)))
+    (want,) = ref.close()
+    assert sum(c.measured_j for c in want.children) == want.measured_j
+
+    al = StreamAligner()
+    al.add_marker(parent, list(kids))
+    lo, i = 0, 0
+    while lo < n:
+        size = chunk_sizes[i % len(chunk_sizes)]
+        al.add_samples(t[lo:lo + size], p[lo:lo + size])
+        lo += size
+        i += 1
+    (got,) = al.close()
+    assert got.measured_j == want.measured_j
+    assert sum(c.measured_j for c in got.children) == got.measured_j
+    for a, b in zip(got.children, want.children):
+        assert a.measured_j == b.measured_j

@@ -323,6 +323,150 @@ def test_monitor_step_counts_default_and_validation(model):
         model.monitor(live=True)              # live needs a source
 
 
+# ---------------------------------------------------------------------------
+# Kernel microscopy: per-launch windows tile each step's energy bitwise.
+# ---------------------------------------------------------------------------
+def test_kernel_scope_windows_tile_steps_bitwise(model):
+    session = model.stream(_counts(), name="microscopy", recalibrate=None)
+    with session.kernel_scope("flash", config=(512, 512),
+                              counts=_counts().scaled(0.4)):
+        pass
+    with session.kernel_scope("decode", variant="ref",
+                              counts=_counts().scaled(0.2)):
+        pass
+    for i in range(6):
+        session.step(i)
+    summary = session.finish()
+
+    steps = [w for w in session.windows if w.step >= 0]
+    assert len(steps) == 6 and all(w.children for w in steps)
+    for w in steps:
+        # the headline guarantee: exact float equality, not approx
+        assert sum(c.measured_j for c in w.children) == w.measured_j
+        assert w.children[0].t_start_s == w.t_start_s
+        assert w.children[-1].t_end_s == w.t_end_s
+        for a, b in zip(w.children, w.children[1:]):
+            assert a.t_end_s == b.t_start_s          # shared boundary
+        names = [c.name for c in w.children]
+        assert "flash" in names and "decode" in names
+    # and the step windows still tile the run total, as without scopes
+    assert sum(w.measured_j for w in session.windows) == pytest.approx(
+        summary.measured_total_j, rel=1e-9)
+
+    rep = session.kernel_report()
+    assert rep["flash"]["variant"] == "pallas"
+    assert rep["flash"]["config"] == [512, 512]
+    assert rep["decode"]["variant"] == "ref"
+    flash_sum = sum(c.measured_j for w in steps for c in w.children
+                    if c.name == "flash")
+    assert rep["flash"]["energy_j"] == flash_sum
+    assert rep["flash"]["windows"] == 6
+    assert rep["flash"]["j_per_launch"] == pytest.approx(
+        flash_sum / rep["flash"]["launches"])
+    # report energies (incl. the unattributed filler) sum to the step total
+    assert sum(d["energy_j"] for d in rep.values()) == pytest.approx(
+        sum(w.measured_j for w in steps), rel=1e-12)
+
+
+def test_kernel_scope_lifecycle_and_overlap_rejected(model):
+    session = model.stream(_counts(), name="scopes", recalibrate=None)
+    with pytest.raises(ValueError, match="not overlap"):
+        with session.kernel_scope("outer"):
+            with session.kernel_scope("inner"):
+                pass
+    session.step(0)
+    session.start(steps=1)
+    with pytest.raises(RuntimeError, match="started"):
+        with session.kernel_scope("late"):
+            pass
+    session.finish()
+    with pytest.raises(RuntimeError, match="finished"):
+        with session.kernel_scope("done"):
+            pass
+
+
+def test_subdivide_marker_gaps_tail_and_zero_duration():
+    from types import SimpleNamespace as NS
+    from repro.telemetry.align import subdivide_marker
+    parent = Marker(3, "step", 10.0, 11.0)
+    spans = [NS(name="a", variant="pallas", config=(128,),
+                frac_start=0.1, frac_end=0.4),
+             NS(name="z", variant="pallas", config=(),
+                frac_start=0.4, frac_end=0.4),       # zero-duration launch
+             NS(name="b", variant="ref", config=(),
+                frac_start=0.7, frac_end=1.0)]
+    kids = subdivide_marker(parent, spans)
+    assert [k.name for k in kids] == ["__unattributed__", "a", "z",
+                                      "__unattributed__", "b"]
+    assert kids[0].t_start_s == parent.t_start_s
+    assert kids[-1].t_end_s == parent.t_end_s
+    for x, y in zip(kids, kids[1:]):
+        assert x.t_end_s == y.t_start_s              # bit-for-bit chained
+    assert kids[2].duration_s == 0.0
+    assert kids[1].variant == "pallas" and kids[1].config == (128,)
+    # an empty span list yields the pure-filler subdivision
+    (filler,) = subdivide_marker(parent, [])
+    assert filler.name == "__unattributed__"
+    assert (filler.t_start_s, filler.t_end_s) == (10.0, 11.0)
+
+
+def test_zero_duration_kernel_window_gets_zero_energy():
+    parent = Marker(0, "step", 0.0, 4.0)
+    kids = [Marker(0, "k0", 0.0, 2.0), Marker(0, "kz", 2.0, 2.0),
+            Marker(0, "k1", 2.0, 4.0)]
+    a = StreamAligner()
+    a.add_marker(parent, kids)
+    for s in TraceReplaySampler(_trace(np.full(5, 100.0), hz=1.0)):
+        a.add_sample(s)
+    (w,) = a.close()
+    z = {c.name: c for c in w.children}["kz"]
+    assert z.measured_j == 0.0 and z.n_samples == 0
+    assert sum(c.measured_j for c in w.children) == w.measured_j
+    assert w.measured_j == pytest.approx(400.0)
+
+
+def test_nontiling_children_rejected():
+    a = StreamAligner()
+    parent = Marker(0, "step", 0.0, 4.0)
+    with pytest.raises(ValueError, match="children given but empty"):
+        a.add_marker(parent, [])
+    with pytest.raises(ValueError, match="exactly tile"):
+        a.add_marker(parent, [Marker(0, "gap", 0.5, 4.0)])
+    with pytest.raises(ValueError, match="exactly tile"):
+        a.add_marker(parent, [Marker(0, "short", 0.0, 3.5)])
+    with pytest.raises(ValueError, match="exactly tile"):
+        a.add_marker(parent, [Marker(0, "x", 0.0, 2.0),
+                              Marker(0, "y", 1.5, 4.0)])
+
+
+def test_kernel_tiling_survives_chunk_boundaries():
+    """Chunked ingestion that splits mid-child matches the scalar path
+    bitwise, child by child, for every chunking."""
+    parent = Marker(0, "step", 0.0, 8.0)
+    kids = [Marker(0, "k0", 0.0, 3.3), Marker(0, "k1", 3.3, 5.7),
+            Marker(0, "k2", 5.7, 8.0)]
+    power = 150.0 + 30.0 * np.sin(np.arange(90) / 7.0)
+    trace = _trace(power, hz=10.0)            # t = 0 .. 8.9
+    ref = StreamAligner()
+    ref.add_marker(parent, list(kids))
+    for s in TraceReplaySampler(trace):
+        ref.add_sample(s)
+    (ref_win,) = ref.close()
+    assert sum(c.measured_j for c in ref_win.children) == ref_win.measured_j
+
+    t, p = trace.times_s, trace.power_w
+    for size in (1, 7, 33, 90):               # 7/33 straddle child edges
+        al = StreamAligner()
+        al.add_marker(parent, list(kids))
+        for lo in range(0, len(t), size):
+            al.add_samples(t[lo:lo + size], p[lo:lo + size])
+        (win,) = al.close()
+        assert win.measured_j == ref_win.measured_j
+        for got, want in zip(win.children, ref_win.children):
+            assert got.measured_j == want.measured_j
+        assert sum(c.measured_j for c in win.children) == win.measured_j
+
+
 def test_service_snapshot_round_trips(model):
     service = TelemetryService()
     session = model.stream(_counts(), name="svc", service=service,
