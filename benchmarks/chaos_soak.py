@@ -1,0 +1,207 @@
+"""Chaos soak — telemetry must degrade gracefully, never wrongly.
+
+Runs the full monitoring and serving paths behind the deterministic
+fault-injection layer at the ``heavy`` profile (>= 5% sample drops, NaN
+bursts, power spikes, duplicated/reordered timestamps, and one shard
+crash on the plane) and gates CI on the degradation contract:
+
+  1. every run completes without an unhandled exception;
+  2. per-step energies plus the startup span still tile the measured run
+     total (the gap estimate is folded in, never double-counted);
+  3. zero fault-induced recalibrations — low-coverage windows are flagged
+     low-confidence instead of steering the drift detector;
+  4. the shard supervisor restarts the crashed worker within its budget
+     and the merged fleet snapshot matches the crash-free run bitwise
+     (modulo the ``supervisor`` incident block);
+  5. with the fault layer *disabled* the wrapped run is bitwise-identical
+     to a bare one — the chaos path costs nothing when off.
+
+Emits JSON (``--out``, default ``results/BENCH_chaos_soak.json``) plus
+the repo's CSV line format on stdout.  All five gates always gate.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from benchmarks.common import record
+from repro.api import EnergyModel
+from repro.core.counting import OpCounts
+from repro.serve.scheduler import Request
+from repro.telemetry import ChaosPlan, SupervisorConfig
+
+SYSTEM = "sim-v5e-air"
+
+
+def _counts(i: int = 0) -> OpCounts:
+    c = OpCounts()
+    c.add("dot.bf16", 1e7 * (i + 1))
+    c.mxu_macs_total = c.mxu_macs_aligned = 1e7 * (i + 1)
+    c.add("add.f32", 2e5)
+    c.boundary_read_bytes = 2e5
+    c.boundary_write_bytes = 1e5
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+def _gate(ok: bool, what: str) -> None:
+    if not ok:
+        raise AssertionError(f"chaos soak gate failed: {what}")
+
+
+def _monitor_soak(chaos, steps: int):
+    """One monitored session under chaos; returns (snapshot, elapsed_s)."""
+    model = EnergyModel.from_store(SYSTEM)
+    t0 = time.perf_counter()
+    s = model.stream(_counts(), name="soak", chaos=chaos,
+                     min_duration_s=max(6.0, steps), chunk_size=512)
+    for i in range(steps):
+        s.step(i)
+    summary = s.finish()
+    elapsed = time.perf_counter() - t0
+
+    from repro.telemetry import window_tiling
+    tiling = window_tiling(s.windows)
+    total = tiling["startup_j"]
+    for j in tiling["step_j"]:
+        total += j
+    _gate(abs(total - summary.measured_total_j)
+          <= 1e-9 * abs(summary.measured_total_j),
+          f"tiling: windows sum {total!r} != measured "
+          f"{summary.measured_total_j!r}")
+    _gate(summary.recalibrations == [],
+          f"{len(summary.recalibrations)} fault-induced recalibrations")
+    if chaos is not None and chaos.stream_enabled:
+        _gate(summary.quarantined_samples > 0,
+              "heavy profile produced no quarantined samples")
+        _gate(summary.n_gaps > 0, "heavy profile produced no gaps")
+        _gate(0.0 <= summary.gap_j <= summary.measured_total_j,
+              f"gap estimate {summary.gap_j!r} outside the run total")
+    return s.snapshot(), elapsed
+
+
+def _serve_soak(chaos, requests: int):
+    model = EnergyModel.from_store(SYSTEM)
+    t0 = time.perf_counter()
+    reqs = [Request(f"r{i}", f"tenant-{i % 2}", 8, 4, arrival_step=i // 2)
+            for i in range(requests)]
+    report = model.serve(requests=reqs, chaos=chaos, min_phase_seconds=4.0)
+    elapsed = time.perf_counter() - t0
+    _gate(report.measured_total_j > 0, "serve measured no energy")
+    _gate(report.recalibrations == [],
+          f"{len(report.recalibrations)} fault-induced recalibrations "
+          f"in serve")
+    _gate(report.health.get("samples", 0) > 0,
+          "serve report carries no health counters")
+    return report, elapsed
+
+
+def _plane_soak(chaos, *, n_sessions: int = 3):
+    """Process-runner plane; returns (plane, elapsed_s) or (None, 0.0)
+    when the platform has no shared memory."""
+    try:
+        import multiprocessing.shared_memory  # noqa: F401
+    except ImportError:
+        return None, 0.0
+    model = EnergyModel.from_store(SYSTEM)
+    t0 = time.perf_counter()
+    plane = model.plane(2, runner="process", chaos=chaos,
+                        supervisor=SupervisorConfig(heartbeat_timeout_s=30.0,
+                                                    max_restarts=2,
+                                                    backoff_s=0.1))
+    for i in range(n_sessions):
+        s = model.stream(_counts(i), name=f"w{i}", recalibrate=None,
+                         chunk_size=512)
+        plane.register(s, f"dev{i}/w{i}")
+        for _ in range(3):
+            s.step()
+    plane.finish_all()
+    return plane, time.perf_counter() - t0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_chaos_soak.json")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--no-process", action="store_true",
+                    help="skip the process-runner shard-crash soak")
+    args = ap.parse_args(argv)
+
+    heavy = ChaosPlan.profile("heavy", seed=args.chaos_seed)
+
+    # 1+2+3: monitor under heavy faults
+    snap, mon_s = _monitor_soak(heavy, args.steps)
+    health = snap["health"]
+    record("chaos_monitor_soak", mon_s * 1e6,
+           f"quarantined={health['quarantined']} gaps={health['n_gaps']}")
+
+    # 5: disabled layer is free — bitwise identity against a bare run
+    bare, _ = _monitor_soak(None, args.steps)
+    wrapped, _ = _monitor_soak(ChaosPlan.profile("none"), args.steps)
+    _gate(json.dumps(bare, sort_keys=True)
+          == json.dumps(wrapped, sort_keys=True),
+          "disabled fault layer perturbed the snapshot")
+
+    # 1+3: serve under heavy faults
+    report, srv_s = _serve_soak(heavy, args.requests)
+    record("chaos_serve_soak", srv_s * 1e6,
+           f"requests={len(report.requests)} "
+           f"quarantined={report.health['quarantined']:.0f}")
+
+    # 4: shard crash -> supervised restart, bitwise-conserved merge
+    supervisor = {"skipped": True}
+    if not args.no_process:
+        crash = dataclasses.replace(ChaosPlan(), crash_shards=(0,),
+                                    crash_attempts=1)
+        ref_plane, _ = _plane_soak(None)
+        hit_plane, plane_s = _plane_soak(crash)
+        if hit_plane is not None:
+            _gate(hit_plane.restarts == 1,
+                  f"expected 1 supervised restart, saw "
+                  f"{hit_plane.restarts}")
+            got = hit_plane.snapshot()
+            sup = got.pop("supervisor", None)
+            _gate(sup is not None and sup["folded_shards"] == [],
+                  "crashed shard was folded instead of restarted")
+            _gate(json.dumps(ref_plane.snapshot(), sort_keys=True)
+                  == json.dumps(got, sort_keys=True),
+                  "restarted plane snapshot diverged from the "
+                  "crash-free run")
+            supervisor = {"skipped": False, "restarts": hit_plane.restarts,
+                          "events": sup["events"]}
+            record("chaos_plane_crash_soak", plane_s * 1e6,
+                   f"restarts={hit_plane.restarts}")
+
+    result = {
+        "benchmark": "chaos_soak",
+        "profile": "heavy",
+        "chaos_seed": args.chaos_seed,
+        "steps": args.steps,
+        "requests": args.requests,
+        "monitor": {"elapsed_s": mon_s, "health": health},
+        "serve": {"elapsed_s": srv_s, "health": report.health,
+                  "measured_total_j": report.measured_total_j},
+        "supervisor": supervisor,
+        "gates": {"completed": True, "tiling_exact": True,
+                  "zero_fault_recalibrations": True,
+                  "disabled_layer_bitwise": True,
+                  "supervised_restart_bitwise": not supervisor["skipped"]},
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1) + "\n")
+    print(f"chaos soak: monitor {mon_s:.1f}s, serve {srv_s:.1f}s, "
+          f"{health['quarantined']} samples quarantined, "
+          f"{health['n_gaps']} gaps accounted, all gates green")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

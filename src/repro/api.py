@@ -581,7 +581,8 @@ class EnergyModel:
 
     # -- streaming / evaluation ----------------------------------------------
     def monitor(self, live=False, step_counts=None, *,
-                telemetry_chunk=_UNSET, operating_point=None, **kwargs):
+                telemetry_chunk=_UNSET, operating_point=None, chaos=None,
+                **kwargs):
         """A fleet ``EnergyMonitor`` bound to this model's predictor.
 
         ``step_counts`` sets the default per-step profile (one profile per
@@ -601,6 +602,11 @@ class EnergyModel:
 
         ``operating_point`` pins the live session (and its attribution) at
         a calibrated/interpolated (freq_mhz, power_cap_w) point.
+
+        ``chaos`` (a ``telemetry.ChaosPlan``) runs the live session's
+        sampler behind the deterministic fault-injection layer — the
+        sanitizer/gap-accounting path is exercised and the session's
+        ``health()`` counters report exactly what was injected.
         """
         from repro.core.fleet import EnergyMonitor
         if step_counts is not None and not isinstance(step_counts, OpCounts):
@@ -618,6 +624,8 @@ class EnergyModel:
                 else {"chunk_size": telemetry_chunk}
             if operating_point is not None:
                 stream_kw["operating_point"] = operating_point
+            if chaos is not None:
+                stream_kw["chaos"] = chaos
             mon.live = self.stream(source, monitor=mon, **stream_kw)
         return mon
 
@@ -653,7 +661,8 @@ class EnergyModel:
             service.register(session)
         return session
 
-    def plane(self, n_shards: int = 2, *, runner: str = "thread"):
+    def plane(self, n_shards: int = 2, *, runner: str = "thread",
+              chaos=None, supervisor=None):
         """A sharded ``telemetry.TelemetryPlane`` — a drop-in
         ``TelemetryService`` whose registered sessions are partitioned
         across ``n_shards`` shards and whose snapshot is merged from
@@ -667,9 +676,15 @@ class EnergyModel:
         ``runner`` picks the drain substrate: ``"thread"`` (default),
         ``"serial"``, or ``"process"`` (spawned workers over
         shared-memory rings; a batch drain for unstarted sessions).
+
+        ``chaos`` sabotages shard workers per the plan's
+        ``crash_shards``/``hang_shards`` (process runner only);
+        ``supervisor`` tunes the heartbeat/restart policy
+        (``telemetry.SupervisorConfig``).
         """
         from repro.telemetry.plane import TelemetryPlane
-        return TelemetryPlane(n_shards, runner=runner)
+        return TelemetryPlane(n_shards, runner=runner, chaos=chaos,
+                              supervisor=supervisor)
 
     def serve(self, counts_fn=None, *, requests=None, **kwargs):
         """An energy-metered continuous-batching server on this model.

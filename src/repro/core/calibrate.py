@@ -50,6 +50,7 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 import numpy as np
 
 from repro.core import coverage, measure as measure_mod, microbench, solver
+from repro.core.store import quarantine_file
 from repro.core.table import EnergyTable
 from repro.core.transfer import TransferFit, hybrid_direct, sample_classes
 from repro.hw.device import Program, SimDevice
@@ -247,6 +248,8 @@ class RunLedger:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())       # survive a crash mid-campaign
             os.replace(tmp, path)
         finally:
             if os.path.exists(tmp):
@@ -270,13 +273,24 @@ class RunLedger:
         fp_path = self.run_dir / "plan.json"
         want = p.fingerprint()
         if fp_path.exists():
-            have = json.loads(fp_path.read_text())
+            try:
+                have = json.loads(fp_path.read_text())
+            except ValueError as e:
+                # a torn/corrupt fingerprint means the records' plan
+                # identity is gone — handled exactly like a plan mismatch
+                moved = quarantine_file(fp_path)
+                warnings.warn(
+                    f"quarantined corrupt calibration plan fingerprint "
+                    f"{fp_path} -> {moved}: {e}",
+                    RuntimeWarning, stacklevel=2)
+                have = None
             if have != want:
                 if resume and on_mismatch != "discard":
                     raise CalibrationError(
                         f"run directory {self.run_dir} holds records for a "
-                        f"different calibration plan; pass resume=False to "
-                        f"discard them or use a fresh run_dir")
+                        f"different calibration plan (or a corrupted "
+                        f"fingerprint); pass resume=False to discard them "
+                        f"or use a fresh run_dir")
                 if resume:
                     warnings.warn(
                         f"discarding calibration records in {self.run_dir}: "
@@ -291,10 +305,24 @@ class RunLedger:
             return
         for spec in p.specs:
             path = rdir / self._fname(spec.spec_id)
-            if path.exists():
+            if not path.exists():
+                continue
+            try:
                 rec = json.loads(path.read_text())
-                if rec.get("record_version") == RECORD_VERSION:
-                    self.records[spec.spec_id] = rec
+                if not isinstance(rec, dict):
+                    raise ValueError(f"expected a JSON object, got "
+                                     f"{type(rec).__name__}")
+            except ValueError as e:
+                # one bad record costs one re-measurement, nothing more:
+                # it is moved aside and ``missing()`` picks its spec up
+                moved = quarantine_file(path)
+                warnings.warn(
+                    f"quarantined corrupt calibration record {path} -> "
+                    f"{moved}: {e}; spec {spec.spec_id!r} will be "
+                    f"re-measured", RuntimeWarning, stacklevel=2)
+                continue
+            if rec.get("record_version") == RECORD_VERSION:
+                self.records[spec.spec_id] = rec
 
     # -- record io ----------------------------------------------------------
     def put(self, record: Dict[str, Any]) -> None:

@@ -30,14 +30,34 @@ import json
 import os
 import pathlib
 import re
-import tempfile
 import warnings
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.table import SCHEMA_VERSION, EnergyTable, TableSchemaError
+from repro.core.table import (SCHEMA_VERSION, EnergyTable, TableSchemaError,
+                              payload_checksum, write_json_atomic)
 
 _ENV_ROOT = "REPRO_TABLE_STORE"
 _KEY_RE = re.compile(r"^(?P<system>.+)__gen(?P<gen>\d+)__v(?P<ver>\d+)$")
+
+
+def quarantine_file(path) -> Optional[pathlib.Path]:
+    """Move a corrupt artifact aside (``<name>.corrupt[-N]``), never delete.
+
+    The bad bytes stay on disk as evidence while the original path frees
+    up for a fresh publish; returns the quarantine path (None if the move
+    itself failed — e.g. a concurrent reader already moved it).
+    """
+    p = pathlib.Path(path)
+    dst = p.with_name(p.name + ".corrupt")
+    n = 0
+    while dst.exists():
+        n += 1
+        dst = p.with_name(f"{p.name}.corrupt-{n}")
+    try:
+        os.replace(p, dst)
+    except OSError:
+        return None
+    return dst
 
 
 # ---------------------------------------------------------------------------
@@ -131,8 +151,10 @@ class TableStore:
                     {k: v for k, v in migrate_table_dict(d).items()
                      if k != "schema"}, origin=str(path))
             except (TableSchemaError, ValueError) as e:
-                warnings.warn(f"ignoring unmigratable energy table {path}: "
-                              f"{e}", RuntimeWarning, stacklevel=3)
+                moved = quarantine_file(path)
+                warnings.warn(f"quarantined unmigratable energy table "
+                              f"{path} -> {moved}: {e}",
+                              RuntimeWarning, stacklevel=3)
                 return None
             self.put(table)
             return table
@@ -150,9 +172,12 @@ class TableStore:
         try:
             return EnergyTable.load(path)
         except (TableSchemaError, ValueError) as e:
-            # a miss triggers a minutes-long retrain — never do that silently
-            warnings.warn(f"ignoring unreadable energy table {path}: {e}",
-                          RuntimeWarning, stacklevel=2)
+            # a miss triggers a minutes-long retrain — never do that
+            # silently, and never leave the bad bytes squatting on the
+            # publish path (the retrain's put() needs it free)
+            moved = quarantine_file(path)
+            warnings.warn(f"quarantined unreadable energy table {path} -> "
+                          f"{moved}: {e}", RuntimeWarning, stacklevel=2)
             return None
 
     def get_or_train(self, system: str,
@@ -183,16 +208,10 @@ class TableStore:
     def put(self, table: EnergyTable) -> pathlib.Path:
         path = self.path_for(table.system, table.isa_gen)
         self.root.mkdir(parents=True, exist_ok=True)
-        # atomic publish: a fleet node reading concurrently never sees a
-        # half-written table
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        os.close(fd)
-        try:
-            table.save(tmp)
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+        # EnergyTable.save is tmp + fsync + atomic rename (and stamps the
+        # content checksum), so a fleet node reading concurrently — or
+        # after a mid-write crash — never sees a half-written table
+        table.save(path)
         return path
 
     # -- kernel energy tier -------------------------------------------------
@@ -215,24 +234,25 @@ class TableStore:
             d = json.loads(path.read_text())
             if not isinstance(d, dict):
                 raise KernelTableError(f"{path}: not a JSON object")
+            checksum = d.pop("checksum", None)
+            if checksum is not None and checksum != payload_checksum(d):
+                raise KernelTableError(f"{path}: checksum mismatch — the "
+                                       f"file is corrupt")
             return KernelEnergyTable.from_dict(d)
         except (KernelTableError, ValueError, KeyError, TypeError) as e:
-            warnings.warn(f"ignoring unreadable kernel energy table {path}: "
-                          f"{e}", RuntimeWarning, stacklevel=2)
+            moved = quarantine_file(path)
+            warnings.warn(f"quarantined unreadable kernel energy table "
+                          f"{path} -> {moved}: {e}",
+                          RuntimeWarning, stacklevel=2)
             return None
 
     def put_kernel_table(self, ktable) -> pathlib.Path:
-        """Atomic publish, same discipline as ``put``."""
+        """Checksummed crash-safe publish, same discipline as ``put``."""
         path = self.kernel_table_path(ktable.system)
         self.root.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(ktable.to_dict(), f, indent=1, sort_keys=True)
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+        payload = ktable.to_dict()
+        payload["checksum"] = payload_checksum(payload)
+        write_json_atomic(path, payload)
         return path
 
     def evict(self, system: str, isa_gen: Optional[int] = None) -> bool:

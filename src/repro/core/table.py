@@ -15,8 +15,11 @@ automatically.
 """
 from __future__ import annotations
 
+import hashlib
 import json
+import os
 import pathlib
+import tempfile
 from typing import Any, Dict, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -55,6 +58,39 @@ _POINT_FIELDS = ("p_const", "p_static", "direct", "scaled", "bucket_means",
 
 class TableSchemaError(ValueError):
     """A serialized table does not match the current schema."""
+
+
+def payload_checksum(d: Mapping[str, Any]) -> str:
+    """sha256 over the canonical dump of a JSON payload.
+
+    The ``checksum`` key itself is excluded, so the digest can be stored
+    inside the payload it covers.  Canonical form is the same
+    ``indent=1, sort_keys=True`` rendering the writers use, so a digest
+    computed at save time matches one recomputed from the parsed file.
+    """
+    body = {k: v for k, v in d.items() if k != "checksum"}
+    blob = json.dumps(body, indent=1, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def write_json_atomic(path, payload: Mapping[str, Any]) -> None:
+    """Crash-safe JSON publish: tmp file + fsync + atomic rename.
+
+    A reader — this process after a crash, or a fleet node sharing the
+    directory — either sees the previous complete file or the new
+    complete file, never a torn write.
+    """
+    p = pathlib.Path(path)
+    fd, tmp = tempfile.mkstemp(dir=p.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 class ClassVecView(Mapping):
@@ -523,7 +559,9 @@ class EnergyTable:
     def save(self, path) -> None:
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(self.to_dict(), indent=1))
+        payload = self.to_dict()
+        payload["checksum"] = payload_checksum(payload)
+        write_json_atomic(p, payload)
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any],
@@ -546,10 +584,20 @@ class EnergyTable:
         if not isinstance(d, dict):
             raise TableSchemaError(f"{path}: expected a JSON object, "
                                    f"got {type(d).__name__}")
+        # verified *after* the structural checks, so a hand-edited file
+        # still gets the specific schema/field error it deserves; the
+        # digest then catches value-level corruption those checks can't
+        checksum = d.pop("checksum", None)   # absent in pre-checksum files
+        digest = payload_checksum(d) if checksum is not None else None
         version = d.pop("schema", None)
         if version != SCHEMA_VERSION:
             raise TableSchemaError(
                 f"{path}: schema version {version!r} does not match "
                 f"current version {SCHEMA_VERSION} — retrain or migrate "
                 f"the table (TableStore migrates v1/v2 files automatically)")
-        return cls.from_dict(d, origin=str(path))
+        table = cls.from_dict(d, origin=str(path))
+        if checksum is not None and checksum != digest:
+            raise TableSchemaError(
+                f"{path}: checksum mismatch — the file is corrupt (torn "
+                f"write, bit rot, or a hand edit without restamping)")
+        return table

@@ -92,7 +92,8 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
         min_phase_seconds: float = 4.0, verbose: bool = True,
         freq_mhz: Optional[float] = None, governor: bool = False,
         sla_tokens_per_s: Optional[float] = None,
-        telemetry_shards: Optional[int] = None):
+        telemetry_shards: Optional[int] = None,
+        chaos_profile: Optional[str] = None, chaos_seed: int = 0):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
     max_seq = 2 * prompt_len + 2 * max_new + 1   # covers the 2× draws
@@ -124,14 +125,23 @@ def run(arch: str, *, smoke: bool = True, tenants: int = 2,
     # sharded telemetry plane: billing, governor pane and the per-phase
     # sessions ride it exactly like the one-process service (the plane is
     # a drop-in TelemetryService with a merge-based snapshot)
-    plane = model.plane(telemetry_shards) if telemetry_shards else None
+    chaos = None
+    if chaos_profile and chaos_profile != "none":
+        from repro.telemetry.faults import ChaosPlan
+        chaos = ChaosPlan.profile(chaos_profile, seed=chaos_seed)
+        if verbose:
+            print(f"[chaos] profile {chaos_profile!r} seed={chaos_seed}: "
+                  f"telemetry runs behind the fault-injection layer")
+    plane = (model.plane(telemetry_shards, chaos=chaos)
+             if telemetry_shards else None)
     server = model.serve(
         model_counts_fn(cfg, params, max_seq=max_seq),
         policy=EnergyPolicy(max_batch=max_batch,
                             budget_j_per_token=budget_j_per_token),
         min_phase_seconds=min_phase_seconds,
         telemetry_chunk=telemetry_chunk, name=f"serve/{arch}",
-        operating_point=freq_mhz, governor=gov, service=plane)
+        operating_point=freq_mhz, governor=gov, service=plane,
+        chaos=chaos)
     workload = make_workload(tenants=tenants, requests=requests,
                              prompt_len=prompt_len, max_new=max_new,
                              seed=seed)
@@ -194,6 +204,12 @@ def main(argv=None) -> int:
     ap.add_argument("--telemetry-shards", type=int, default=None,
                     help="shard the telemetry plane across N workers "
                          "(0/None = single-process service)")
+    ap.add_argument("--chaos-profile", default=None,
+                    choices=["none", "light", "heavy"],
+                    help="run telemetry behind the deterministic "
+                         "fault-injection layer (soak/chaos testing)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos plan (same seed = same faults)")
     args = ap.parse_args(argv)
     report, _ = run(args.arch, smoke=args.smoke, tenants=args.tenants,
                     requests=args.requests, prompt_len=args.prompt_len,
@@ -202,7 +218,9 @@ def main(argv=None) -> int:
                     telemetry_chunk=args.telemetry_chunk or None,
                     freq_mhz=args.freq_mhz, governor=args.governor,
                     sla_tokens_per_s=args.sla_tokens_per_s,
-                    telemetry_shards=args.telemetry_shards or None)
+                    telemetry_shards=args.telemetry_shards or None,
+                    chaos_profile=args.chaos_profile,
+                    chaos_seed=args.chaos_seed)
     assert len(report.requests) == args.requests
     return 0
 

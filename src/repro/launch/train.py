@@ -45,6 +45,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         freq_mhz: Optional[float] = None, governor: bool = False,
         sla_tokens_per_s: Optional[float] = None,
         telemetry_shards: Optional[int] = None,
+        chaos_profile: Optional[str] = None, chaos_seed: int = 0,
         seed: int = 0, verbose: bool = True):
     cfg = cfgs.get_smoke_config(arch) if smoke else cfgs.get_config(arch)
     shape = ShapeSpec("run", seq_len, global_batch, "train")
@@ -104,13 +105,22 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                 lambda p: model.predict(counts, 1.0, operating_point=p)
                 .total_j / max(work, 1e-12))
             point = gov.propose()
+        chaos = None
+        if chaos_profile and chaos_profile != "none":
+            from repro.telemetry.faults import ChaosPlan
+            chaos = ChaosPlan.profile(chaos_profile, seed=chaos_seed)
+            if verbose:
+                print(f"[chaos] profile {chaos_profile!r} seed={chaos_seed}:"
+                      f" telemetry runs behind the fault-injection layer")
         monitor = model.monitor(live=True, step_counts=counts,
                                 telemetry_chunk=telemetry_chunk,
-                                operating_point=point, governor=gov)
+                                operating_point=point, governor=gov,
+                                chaos=chaos)
         # --telemetry-shards: the run's session rides a sharded telemetry
         # plane (plane-wide drains, merge-based snapshot) instead of
         # finishing stand-alone
-        plane = model.plane(telemetry_shards) if telemetry_shards else None
+        plane = (model.plane(telemetry_shards, chaos=chaos)
+                 if telemetry_shards else None)
         if plane is not None:
             monitor.bind(plane)
 
@@ -192,6 +202,12 @@ def main(argv=None) -> int:
     ap.add_argument("--telemetry-shards", type=int, default=None,
                     help="shard the telemetry plane across N workers "
                          "(0/None = single-process service)")
+    ap.add_argument("--chaos-profile", default=None,
+                    choices=["none", "light", "heavy"],
+                    help="run telemetry behind the deterministic "
+                         "fault-injection layer (soak/chaos testing)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos plan (same seed = same faults)")
     args = ap.parse_args(argv)
     _, losses, _ = run(args.arch, smoke=args.smoke, steps=args.steps,
                        seq_len=args.seq_len, global_batch=args.global_batch,
@@ -203,7 +219,9 @@ def main(argv=None) -> int:
                        telemetry_chunk=args.telemetry_chunk or None,
                        freq_mhz=args.freq_mhz, governor=args.governor,
                        sla_tokens_per_s=args.sla_tokens_per_s,
-                       telemetry_shards=args.telemetry_shards or None)
+                       telemetry_shards=args.telemetry_shards or None,
+                       chaos_profile=args.chaos_profile,
+                       chaos_seed=args.chaos_seed)
     ok = np.isfinite(losses).all() and losses[-1] < losses[0]
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if ok else 'check'})")

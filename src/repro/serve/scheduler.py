@@ -350,6 +350,7 @@ class ServeReport:
     overhead_j: float            # per-phase startup energy, outside the steps
     mape_pct: float
     recalibrations: List[float]
+    health: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def measured_total_j(self) -> float:
@@ -384,6 +385,7 @@ class ServeReport:
             "overhead_j": self.overhead_j,
             "mape_pct": self.mape_pct,
             "recalibrations": list(self.recalibrations),
+            "health": dict(self.health),
             "events": [{"step": e.step, "event": e.event,
                         "request": e.request_id, "detail": e.detail}
                        for e in self.events],
@@ -435,7 +437,9 @@ class EnergyServer:
                  telemetry_chunk: Optional[int] = None,
                  service=None,
                  operating_point=None,
-                 governor=None):
+                 governor=None,
+                 chaos=None,
+                 gap_threshold_s: Optional[float] = None):
         from repro.telemetry.attrib import OnlineAttributor
         from repro.telemetry.sampler import DEFAULT_CHUNK
         self.model = model
@@ -448,6 +452,8 @@ class EnergyServer:
         self.telemetry_chunk = (int(telemetry_chunk) if telemetry_chunk
                                 else DEFAULT_CHUNK)
         self.service = service
+        self.chaos = chaos               # ChaosPlan: phases run faulted
+        self.gap_threshold_s = gap_threshold_s
         self.attributor = OnlineAttributor(
             model.predictor, recalibrate=recalibrate, detector=detector)
         self._drift_flag = drift_flag or \
@@ -510,6 +516,9 @@ class EnergyServer:
         ledger = RequestLedger(self.ledger_policy)
         phases: List[PhaseSummary] = []
         overhead = 0.0
+        health = {"samples": 0, "quarantined": 0, "stale_suspects": 0,
+                  "n_gaps": 0, "gap_s": 0.0, "gap_j": 0.0,
+                  "low_confidence_windows": 0}
 
         while (phase := sched.next_phase()) is not None:
             counts = self._counts(phase.kind, phase.batch, phase.pad_tokens)
@@ -520,7 +529,9 @@ class EnergyServer:
                 attributor=self.attributor,
                 min_duration_s=self.min_phase_seconds,
                 chunk_size=self.telemetry_chunk,
-                operating_point=point)
+                operating_point=point,
+                chaos=self.chaos,
+                gap_threshold_s=self.gap_threshold_s)
             if self.service is not None:
                 self.service.register(session)
             for i in range(phase.n_steps):
@@ -537,6 +548,13 @@ class EnergyServer:
                     predicted_j=att.predicted_j, dynamic_frac=dyn_frac,
                     active=phase.shares(i), work_scale=group)
             overhead += summary.startup_j
+            health["samples"] += summary.n_samples
+            health["quarantined"] += summary.quarantined_samples
+            health["stale_suspects"] += summary.stale_suspects
+            health["n_gaps"] += summary.n_gaps
+            health["gap_s"] += summary.gap_s
+            health["gap_j"] += summary.gap_j
+            health["low_confidence_windows"] += summary.low_confidence_windows
             atts = session.attributions
             if self.governor is not None and point is not None:
                 # tokens the phase processed: per-step work × the device
@@ -570,7 +588,8 @@ class EnergyServer:
             name=self.name, requests=rows, billing=bill_tenants(ledger),
             ledger=ledger, phases=phases, events=sched.events,
             overhead_j=overhead, mape_pct=self.attributor.mape(),
-            recalibrations=list(self.attributor.recalibrations))
+            recalibrations=list(self.attributor.recalibrations),
+            health=health)
         if self.service is not None:
             snap = report.snapshot()
             self.service.register_billing(self.name, lambda: snap)

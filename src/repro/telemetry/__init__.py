@@ -10,6 +10,7 @@ The runtime layer between raw power sensors and the fleet monitor:
     service  — per-workload sessions + the multi-device aggregator
     shard    — mergeable per-shard summaries + the worker runtime
     plane    — the sharded service: N shards, one exactly-tiling snapshot
+    faults   — deterministic chaos injection + the stream sanitizer
 
 Every stage has two ingestion surfaces: the per-sample ``PowerSample``
 reference path and a chunked ndarray fast path (``chunks(n)`` samplers,
@@ -28,7 +29,9 @@ from repro.telemetry.align import (UNATTRIBUTED, AlignedWindow, Marker,
 from repro.telemetry.attrib import (DriftDetector, DriftState,
                                     OnlineAttributor, StepAttribution,
                                     rescale_table)
-from repro.telemetry.plane import TelemetryPlane
+from repro.telemetry.faults import (ChaosPlan, ChaosReport, FaultySampler,
+                                    StreamSanitizer)
+from repro.telemetry.plane import SupervisorConfig, TelemetryPlane
 from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
                                      FeedSampler, PowerSample, SampleRing,
                                      SharedSampleRing, TraceReplaySampler,
@@ -49,5 +52,6 @@ __all__ = [
     "StreamingIntegrator", "rolling_std", "trapezoid_energy",
     "DEFAULT_CHUNK", "iter_chunks", "TelemetryPlane", "Shard",
     "ShardSummary", "SharedSampleRing", "fleet_block", "window_tiling",
-    "subdivide_marker", "UNATTRIBUTED",
+    "subdivide_marker", "UNATTRIBUTED", "ChaosPlan", "ChaosReport",
+    "FaultySampler", "StreamSanitizer", "SupervisorConfig",
 ]

@@ -38,6 +38,14 @@ from repro.telemetry.sampler import PowerSample
 
 _EPS = 1e-12
 
+# Sampling-gap inference: the first _GAP_PROBE positive inter-sample dts
+# establish the sensor cadence; later segments longer than _GAP_FACTOR x
+# the median cadence are classified as gaps.  Probe segments themselves
+# are never classified — identically on the scalar and chunked paths, so
+# gap accounting stays bitwise chunk-layout-invariant.
+_GAP_PROBE = 64
+_GAP_FACTOR = 1.5
+
 
 UNATTRIBUTED = "__unattributed__"    # kernel-window filler for idle gaps
 
@@ -85,6 +93,13 @@ class AlignedWindow:
     clipped: bool               # trace did not fully cover the window
     variant: str = ""
     config: tuple = ()
+    # gap accounting: the part of measured_j that was *interpolated
+    # across* sampling gaps (segments longer than the gap threshold)
+    # rather than backed by dense samples.  measured_j itself is
+    # untouched — it still tiles the run total exactly; gap_j/gap_s
+    # report which portion of it is a gap estimate.
+    gap_j: float = 0.0
+    gap_s: float = 0.0
     children: Optional[List["AlignedWindow"]] = None
 
     @property
@@ -95,9 +110,25 @@ class AlignedWindow:
     def mean_power_w(self) -> float:
         return self.measured_j / max(self.duration_s, _EPS)
 
+    @property
+    def gap_fraction(self) -> float:
+        """Fraction of the window's span estimated across sampling gaps."""
+        return self.gap_s / max(self.duration_s, _EPS)
+
+    @property
+    def solid_coverage(self) -> float:
+        """Fraction of the span backed by dense (non-gap) samples."""
+        return (self.covered_s - self.gap_s) / max(self.duration_s, _EPS)
+
+    @property
+    def solid_j(self) -> float:
+        """Energy excluding the gap-interpolated portion (derived)."""
+        return self.measured_j - self.gap_j
+
 
 class _Accum:
-    __slots__ = ("marker", "energy_j", "n_samples", "covered_s")
+    __slots__ = ("marker", "energy_j", "n_samples", "covered_s",
+                 "gap_j", "gap_s")
 
     children = None             # plain windows have no sub-accumulators
 
@@ -106,6 +137,8 @@ class _Accum:
         self.energy_j = 0.0
         self.n_samples = 0
         self.covered_s = 0.0
+        self.gap_j = 0.0
+        self.gap_s = 0.0
 
     def finish(self) -> AlignedWindow:
         m = self.marker
@@ -114,7 +147,8 @@ class _Accum:
                              t_end_s=m.t_end_s, measured_j=self.energy_j,
                              n_samples=self.n_samples,
                              covered_s=self.covered_s, clipped=clipped,
-                             variant=m.variant, config=m.config)
+                             variant=m.variant, config=m.config,
+                             gap_j=self.gap_j, gap_s=self.gap_s)
 
 
 class _GroupAccum(_Accum):
@@ -138,17 +172,22 @@ class _GroupAccum(_Accum):
         energy = 0.0
         n_samples = 0
         covered = 0.0
+        gap_j = 0.0
+        gap_s = 0.0
         for k in kids:
             energy += k.measured_j
             n_samples += k.n_samples
             covered += k.covered_s
+            gap_j += k.gap_j
+            gap_s += k.gap_s
         m = self.marker
         clipped = covered + 1e-9 < m.duration_s
         return AlignedWindow(step=m.step, name=m.name, t_start_s=m.t_start_s,
                              t_end_s=m.t_end_s, measured_j=energy,
                              n_samples=n_samples, covered_s=covered,
                              clipped=clipped, variant=m.variant,
-                             config=m.config, children=kids)
+                             config=m.config, gap_j=gap_j, gap_s=gap_s,
+                             children=kids)
 
 
 class StreamAligner:
@@ -159,7 +198,8 @@ class StreamAligner:
     """
 
     def __init__(self,
-                 on_window: Optional[Callable[[AlignedWindow], None]] = None):
+                 on_window: Optional[Callable[[AlignedWindow], None]] = None,
+                 gap_threshold_s: Optional[float] = None):
         self.windows: List[AlignedWindow] = []
         self._on_window = on_window
         self._active: deque = deque()       # _Accum, by marker time order
@@ -169,6 +209,15 @@ class StreamAligner:
         self._t_prev: Optional[float] = None
         self._p_prev = 0.0
         self._last_marker_end = -math.inf
+        # gap accounting: None/0 auto-infers the threshold from the first
+        # _GAP_PROBE inter-sample dts (probe segments stay unclassified)
+        self.gap_threshold_s = (float(gap_threshold_s) if gap_threshold_s
+                                else None)
+        self._gap_probe: List[float] = []
+        self.gap_events = 0
+        self.gap_seconds = 0.0
+        self.gap_joules = 0.0
+        self.gaps: List[tuple] = []         # (t_start, t_end) per gap segment
 
     # -- inputs -------------------------------------------------------------
     def add_marker(self, marker: Marker,
@@ -269,8 +318,61 @@ class StreamAligner:
                 return
             self._process_chunk(t, p)
 
+    def _classify_gap(self, dt: float) -> bool:
+        """Gap-classify one positive segment dt (scalar path)."""
+        if self.gap_threshold_s is None:
+            self._gap_probe.append(float(dt))
+            if len(self._gap_probe) >= _GAP_PROBE:
+                self.gap_threshold_s = _GAP_FACTOR * float(
+                    np.median(self._gap_probe))
+            return False         # probe segments stay unclassified
+        return dt > self.gap_threshold_s
+
+    def _classify_gap_chunk(self, t0s: np.ndarray,
+                            t1s: np.ndarray) -> Optional[np.ndarray]:
+        """Vectorized ``_classify_gap`` over a chunk's segments.
+
+        Replicates the scalar path exactly: only positive dts feed the
+        probe, the segment that completes the probe stays unclassified,
+        and classification starts with the next segment.
+        """
+        if t0s.size == 0:
+            return None
+        dts = t1s - t0s
+        if self.gap_threshold_s is not None:
+            return dts > self.gap_threshold_s
+        out = np.zeros(dts.size, dtype=bool)
+        k = 0
+        while k < dts.size:
+            dt = float(dts[k])
+            k += 1
+            if dt > 0:
+                self._gap_probe.append(dt)
+                if len(self._gap_probe) >= _GAP_PROBE:
+                    self.gap_threshold_s = _GAP_FACTOR * float(
+                        np.median(self._gap_probe))
+                    break
+        if self.gap_threshold_s is not None and k < dts.size:
+            out[k:] = dts[k:] > self.gap_threshold_s
+        return out
+
+    def gap_report(self) -> dict:
+        """Stream-global gap accounting (JSON-safe)."""
+        return {"n_gaps": self.gap_events,
+                "gap_s": self.gap_seconds,
+                "gap_j": self.gap_joules,
+                "threshold_s": self.gap_threshold_s}
+
     def _process(self, t: float, p: float) -> None:
         t0, p0 = self._t_prev, self._p_prev
+        is_gap = False
+        if t0 is not None and t > t0:
+            is_gap = self._classify_gap(t - t0)
+            if is_gap:
+                self.gap_events += 1
+                self.gap_seconds += t - t0
+                self.gap_joules += 0.5 * (p0 + p) * (t - t0)
+                self.gaps.append((t0, t))
         for acc in self._active:
             if acc.marker.t_start_s > t:
                 break            # time-ordered: nothing later overlaps yet
@@ -289,8 +391,12 @@ class StreamAligner:
                 if b - a > _EPS and t > t0:
                     pa = p0 + (p - p0) * (a - t0) / (t - t0)
                     pb = p0 + (p - p0) * (b - t0) / (t - t0)
-                    sub.energy_j += 0.5 * (pa + pb) * (b - a)
+                    area = 0.5 * (pa + pb) * (b - a)
+                    sub.energy_j += area
                     sub.covered_s += b - a
+                    if is_gap:
+                        sub.gap_j += area
+                        sub.gap_s += b - a
         while self._active and self._active[0].marker.t_end_s <= t:
             self._finalize(self._active.popleft())
         self._t_prev, self._p_prev = t, p
@@ -313,6 +419,17 @@ class StreamAligner:
             tt, pp = t, p
         t0s, t1s = tt[:-1], tt[1:]
         p0s, p1s = pp[:-1], pp[1:]
+        gap_mask = self._classify_gap_chunk(t0s, t1s)
+        if gap_mask is not None and gap_mask.any():
+            g0, g1 = t0s[gap_mask], t1s[gap_mask]
+            gdt = g1 - g0
+            genergy = 0.5 * (p0s[gap_mask] + p1s[gap_mask]) * gdt
+            self.gap_events += int(np.count_nonzero(gap_mask))
+            self.gap_seconds = float(np.cumsum(
+                np.concatenate(([self.gap_seconds], gdt)))[-1])
+            self.gap_joules = float(np.cumsum(
+                np.concatenate(([self.gap_joules], genergy)))[-1])
+            self.gaps.extend(zip(g0.tolist(), g1.tolist()))
         t_last = float(t[-1])
         for acc in self._active:
             if acc.marker.t_start_s > t_last:
@@ -348,6 +465,13 @@ class StreamAligner:
                     np.concatenate(([sub.energy_j], areas)))[-1])
                 sub.covered_s = float(np.cumsum(
                     np.concatenate(([sub.covered_s], spans)))[-1])
+                if gap_mask is not None:
+                    gsel = gap_mask[i0:i1][mask]
+                    if gsel.any():
+                        sub.gap_j = float(np.cumsum(np.concatenate(
+                            ([sub.gap_j], areas[gsel])))[-1])
+                        sub.gap_s = float(np.cumsum(np.concatenate(
+                            ([sub.gap_s], spans[gsel])))[-1])
         while self._active and self._active[0].marker.t_end_s <= t_last:
             self._finalize(self._active.popleft())
         self._t_prev, self._p_prev = t_last, float(p[-1])

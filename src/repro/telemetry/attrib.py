@@ -55,6 +55,9 @@ class StepAttribution:
     predicted_dyn_j: float
     measured_class_vec: np.ndarray   # predicted shares × measured dyn J
     prediction: Prediction
+    # window backed by too little dense sampling (quarantine/gap holes):
+    # reported but excluded from drift statistics
+    low_confidence: bool = False
 
     @property
     def by_class_measured(self) -> Dict[str, float]:
@@ -225,15 +228,21 @@ class OnlineAttributor:
     def __init__(self, predictor: TablePredictor, *,
                  detector: Optional[DriftDetector] = None,
                  recalibrate: Union[str, Callable, None] = "rescale",
-                 store=None):
+                 store=None, min_solid_coverage: float = 0.5):
         self.predictor = predictor
         self.table = predictor.table
         self.detector = detector or DriftDetector()
         self.recalibrate = recalibrate
         self.store = store
+        # windows whose densely-sampled (non-gap) coverage falls below
+        # this fraction are attributed but flagged low-confidence and
+        # kept out of the drift detector — fault-induced outliers must
+        # not fire spurious recalibrations
+        self.min_solid_coverage = float(min_solid_coverage)
         self.attributions: List[StepAttribution] = []
         self.drift: DriftState = DriftState(False, 1.0, math.nan, 0, 0)
         self.recalibrations: List[float] = []   # applied ratios, in order
+        self.low_confidence_total = 0
         self._triggers = 0     # repair actions fired (any strategy)
 
     def attribute(self, window: AlignedWindow, counts: OpCounts,
@@ -298,14 +307,20 @@ class OnlineAttributor:
         meas_dyn = window.measured_j - overhead
         pred_dyn = max(pred.dynamic_j, _EPS)
         scale = meas_dyn / pred_dyn
+        low_conf = window.solid_coverage < self.min_solid_coverage
         att = StepAttribution(
             step=window.step, name=window.name,
             duration_s=window.duration_s, measured_j=window.measured_j,
             predicted_j=pred.total_j, measured_dyn_j=meas_dyn,
             predicted_dyn_j=pred.dynamic_j,
             measured_class_vec=pred.class_energy_vec * scale,
-            prediction=pred)
+            prediction=pred, low_confidence=low_conf)
         self.attributions.append(att)
+        if low_conf:
+            # too little dense sampling behind this window: report it,
+            # but never let a fault-shaped ratio steer recalibration
+            self.low_confidence_total += 1
+            return att
         self.drift = self.detector.update(att.dyn_ratio)
         if self.drift.drifting:
             self._trigger(self.drift)

@@ -1,0 +1,456 @@
+"""Deterministic fault injection + stream sanitization for telemetry.
+
+Real sensor feeds (NVML poll loops, SMC counters) are not the clean
+streams the sim produces: they drop samples, return NaN or railed power
+readings, repeat stale values, deliver duplicated or reordered
+timestamps, and arrive in delayed bursts when the host stalls.  This
+module provides both halves of hardening against that:
+
+``ChaosPlan`` / ``FaultySampler``
+    A seedable wrapper around any sampler that injects those faults
+    *deterministically*: faults are laid out per fixed-size granule
+    (``plan.granularity`` samples) with a per-granule
+    ``np.random.default_rng((seed, granule))``, so the faulted stream is
+    byte-identical regardless of the consumer's chunk size — the
+    scalar-vs-chunked bitwise invariant survives chaos.  With every
+    fault fraction at zero the wrapper is an identity pass-through
+    (bitwise: it yields the inner sampler's own chunks).  Injected
+    counts are tallied exactly in a ``ChaosReport``.
+
+``StreamSanitizer``
+    The ingest-side defense: rejects non-finite and railed ("spike")
+    power readings and non-monotonic timestamps, counts repeated-value
+    stale suspects, and keeps exact quarantine counters.  The monotonic
+    filter is vectorized via a prefix-max: a sample rejected for
+    ``t <= running max`` can never raise that max, so "accept iff
+    ``t_i > max(carry, cummax of prior valid t)``" reproduces the
+    sequential filter exactly — the chunked and per-sample paths make
+    bitwise-identical accept decisions.  Clean chunks are returned as
+    the *original* array objects (zero-copy, bitwise pass-through).
+
+Shard-level faults (worker crash/hang) are carried on the same plan but
+acted on by the ``TelemetryPlane`` supervisor, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.telemetry.sampler import DEFAULT_CHUNK, PowerSample, iter_chunks
+
+#: Default quarantine bound for |power| readings — far above any real
+#: device (railed/garbage sensor values sit at 1e5+ W), far below the
+#: injected spike magnitude.
+SENSOR_MAX_W = 1e4
+
+
+# ---------------------------------------------------------------------------
+# Plan + report.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChaosPlan:
+    """A deterministic fault-injection schedule.
+
+    Stream faults (everything except ``crash_*``/``hang_*``) are applied
+    by ``FaultySampler`` per granule; shard faults are read by the
+    telemetry plane's supervisor.  ``fraction`` fields are per-sample
+    probabilities realized as exact per-granule counts
+    (``round(fraction * granule)``), so injected totals are reproducible
+    and countable, not merely expected values.
+    """
+
+    seed: int = 0
+    # -- stream faults ------------------------------------------------------
+    drop_fraction: float = 0.0     # samples deleted (gaps)
+    nan_fraction: float = 0.0      # samples with NaN power
+    nan_burst: int = 1             # NaNs arrive in runs of this length
+    spike_fraction: float = 0.0    # samples with railed power
+    spike_w: float = 1e6
+    stale_fraction: float = 0.0    # samples repeating the previous power
+    stale_run: int = 1
+    dup_fraction: float = 0.0      # samples duplicating the previous sample
+    swap_fraction: float = 0.0     # adjacent timestamp swaps
+    coalesce_every: int = 0        # deliver chunks in bursts of this many
+    granularity: int = DEFAULT_CHUNK
+    # -- shard faults (plane supervisor) ------------------------------------
+    crash_shards: Tuple[int, ...] = ()
+    crash_attempts: int = 1        # crash the first N attempts, then succeed
+    hang_shards: Tuple[int, ...] = ()
+    hang_s: float = 120.0
+
+    @property
+    def stream_enabled(self) -> bool:
+        return (self.drop_fraction > 0 or self.nan_fraction > 0
+                or self.spike_fraction > 0 or self.stale_fraction > 0
+                or self.dup_fraction > 0 or self.swap_fraction > 0
+                or self.coalesce_every > 1)
+
+    @property
+    def shard_enabled(self) -> bool:
+        return bool(self.crash_shards) or bool(self.hang_shards)
+
+    @property
+    def enabled(self) -> bool:
+        return self.stream_enabled or self.shard_enabled
+
+    @classmethod
+    def profile(cls, name: str, seed: int = 0) -> "ChaosPlan":
+        """Named presets: ``none``, ``light``, ``heavy``."""
+        if name == "none":
+            return cls(seed=seed)
+        if name == "light":
+            return cls(seed=seed, drop_fraction=0.01, nan_fraction=0.005,
+                       spike_fraction=0.002, stale_fraction=0.002,
+                       dup_fraction=0.001, swap_fraction=0.001)
+        if name == "heavy":
+            return cls(seed=seed, drop_fraction=0.06, nan_fraction=0.02,
+                       nan_burst=8, spike_fraction=0.01,
+                       stale_fraction=0.01, stale_run=4,
+                       dup_fraction=0.005, swap_fraction=0.005,
+                       coalesce_every=3, crash_shards=(0,),
+                       crash_attempts=1)
+        raise ValueError(f"unknown chaos profile {name!r}; "
+                         "expected none|light|heavy")
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=indent,
+                          sort_keys=True)
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Exact injected-fault tallies, accumulated per granule.
+
+    ``drop_events`` counts maximal runs of dropped samples that sit
+    *between* two delivered samples (leading/trailing runs shift the
+    stream edge but open no gap), so on a regular-dt trace with a
+    drops-only plan it equals the aligner's gap-segment count exactly.
+    """
+
+    granules: int = 0
+    samples_in: int = 0
+    samples_out: int = 0
+    dropped: int = 0
+    drop_events: int = 0
+    nan_samples: int = 0
+    nan_events: int = 0
+    spikes: int = 0
+    stale_samples: int = 0
+    stale_events: int = 0
+    dup_samples: int = 0
+    swapped_pairs: int = 0
+
+    @property
+    def expected_quarantine(self) -> dict:
+        """What a ``StreamSanitizer`` must report for this stream."""
+        return {"nonfinite": self.nan_samples,
+                "spikes": self.spikes,
+                "out_of_order": self.dup_samples + self.swapped_pairs}
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=indent,
+                          sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Injection.
+# ---------------------------------------------------------------------------
+def _n_events(fraction: float, m: int, run: int) -> int:
+    return int(round(fraction * m / max(run, 1)))
+
+
+class FaultySampler:
+    """Wraps any sampler, injecting ``plan``'s stream faults.
+
+    Exposes the standard sampler surface (``chunks(n)`` / ``__iter__``)
+    and yields the *same* faulted sample sequence on both — faults are
+    laid out per ``plan.granularity``-sized granule, independent of the
+    consumer's chunk size.  Single-pass: the stream (and its
+    ``report``) is consumed once.
+    """
+
+    def __init__(self, inner, plan: ChaosPlan):
+        self.inner = inner
+        self.plan = plan
+        self.report = ChaosReport()
+        self._emitted_any = False    # a sample has been delivered
+        self._pending_gap = False    # drops seen since the last delivery
+        self._consumed = False
+
+    # -- sampler surface ----------------------------------------------------
+    def chunks(self, n: int = DEFAULT_CHUNK):
+        if not self.plan.stream_enabled:
+            yield from iter_chunks(self.inner, n)   # identity, bitwise
+            return
+        burst = max(int(self.plan.coalesce_every), 1)
+        target = burst * n     # delayed delivery: hold, then burst
+        parts: List[tuple] = []
+        held = 0
+        for arrs in self._granules():
+            if arrs[0].size == 0:
+                continue
+            parts.append(arrs)
+            held += arrs[0].size
+            while held >= target:
+                t, p, u, c = (np.concatenate([q[i] for q in parts])
+                              for i in range(4))
+                yield t[:target], p[:target], u[:target], c[:target]
+                rest = (t[target:], p[target:], u[target:], c[target:])
+                parts = [rest] if rest[0].size else []
+                held -= target
+        if held:
+            yield tuple(np.concatenate([q[i] for q in parts])
+                        for i in range(4))
+
+    def __iter__(self) -> Iterator[PowerSample]:
+        if not self.plan.stream_enabled:
+            yield from iter(self.inner)
+            return
+        for t, p, u, c in self._granules():
+            for i in range(t.size):
+                yield PowerSample(float(t[i]), float(p[i]), float(u[i]),
+                                  float(c[i]))
+
+    # -- internals ----------------------------------------------------------
+    def _granules(self):
+        if self._consumed:
+            raise RuntimeError("FaultySampler is single-pass; wrap the "
+                               "source again for another run")
+        self._consumed = True
+        for idx, (t, p, u, c) in enumerate(
+                iter_chunks(self.inner, self.plan.granularity)):
+            yield self._fault(idx, t, p, u, c)
+
+    def _fault(self, idx: int, t, p, u, c):
+        plan, rep = self.plan, self.report
+        t = np.array(t, dtype=float)
+        p = np.array(p, dtype=float)
+        u = np.array(u, dtype=float)
+        c = np.array(c, dtype=float)
+        m = int(t.size)
+        rep.granules += 1
+        rep.samples_in += m
+        if m == 0:
+            return t, p, u, c
+        rng = np.random.default_rng((plan.seed, idx))
+        used = np.zeros(m, dtype=bool)
+
+        def scan(count, valid, apply):
+            done = 0
+            if count <= 0:
+                return
+            for i in rng.permutation(m):
+                if done >= count:
+                    return
+                i = int(i)
+                if valid(i):
+                    apply(i)
+                    done += 1
+
+        # Categories draw disjoint index sets (``used``) in a fixed
+        # order, so every injected fault survives to reach the sanitizer
+        # and the report's tallies match quarantine counters exactly.
+        burst = max(int(plan.nan_burst), 1)
+
+        def nan_ok(i):
+            j = min(i + burst, m)
+            return not used[i:j].any()
+
+        def nan_do(i):
+            j = min(i + burst, m)
+            p[i:j] = np.nan
+            used[i:j] = True
+            rep.nan_samples += j - i
+            rep.nan_events += 1
+
+        scan(_n_events(plan.nan_fraction, m, burst), nan_ok, nan_do)
+
+        def spike_do(i):
+            p[i] = plan.spike_w
+            used[i] = True
+            rep.spikes += 1
+
+        scan(_n_events(plan.spike_fraction, m, 1),
+             lambda i: not used[i], spike_do)
+
+        run = max(int(plan.stale_run), 1)
+
+        def stale_ok(i):
+            j = min(i + run, m)
+            return i >= 1 and not used[i - 1:j].any()
+
+        def stale_do(i):
+            j = min(i + run, m)
+            p[i:j] = p[i - 1]         # sensor repeats its last reading
+            used[i - 1:j] = True      # keep the source value pristine
+            rep.stale_samples += j - i
+            rep.stale_events += 1
+
+        scan(_n_events(plan.stale_fraction, m, run), stale_ok, stale_do)
+
+        def dup_do(i):
+            t[i], p[i], u[i], c[i] = t[i - 1], p[i - 1], u[i - 1], c[i - 1]
+            used[i - 1:i + 1] = True
+            rep.dup_samples += 1
+
+        scan(_n_events(plan.dup_fraction, m, 1),
+             lambda i: i >= 1 and not used[i - 1:i + 1].any(), dup_do)
+
+        def swap_do(i):
+            for a in (t, p, u, c):
+                a[i], a[i + 1] = a[i + 1], a[i]
+            used[i:i + 2] = True
+            rep.swapped_pairs += 1
+
+        scan(_n_events(plan.swap_fraction, m, 1),
+             lambda i: i + 1 < m and not used[i:i + 2].any(), swap_do)
+
+        drop = np.zeros(m, dtype=bool)
+
+        def drop_do(i):
+            drop[i] = True
+            used[i] = True
+            rep.dropped += 1
+
+        scan(_n_events(plan.drop_fraction, m, 1),
+             lambda i: not used[i], drop_do)
+
+        keep = np.flatnonzero(~drop)
+        if keep.size:
+            if self._pending_gap or (self._emitted_any and keep[0] > 0):
+                rep.drop_events += 1
+            rep.drop_events += int(np.count_nonzero(np.diff(keep) > 1))
+            self._emitted_any = True
+            self._pending_gap = bool(m - 1 - keep[-1] > 0)
+        elif self._emitted_any:
+            self._pending_gap = True
+        rep.samples_out += int(keep.size)
+        if keep.size < m:
+            t, p, u, c = t[keep], p[keep], u[keep], c[keep]
+        return t, p, u, c
+
+
+# ---------------------------------------------------------------------------
+# Sanitization.
+# ---------------------------------------------------------------------------
+class StreamSanitizer:
+    """Quarantines invalid samples with exact counters.
+
+    Rejection precedence per sample: non-finite ``t``/``p`` first, then
+    ``|p| > power_bound_w`` (railed/spiked reading), then non-monotonic
+    timestamp (``t`` must strictly exceed the last accepted ``t``).
+    ``util``/``temp`` are auxiliary and may legitimately be NaN.
+    Accepted samples whose power exactly repeats the previous accepted
+    power increment ``stale_suspects`` — a heuristic counter only (a
+    quantized sensor produces genuine repeats); nothing is rejected for
+    staleness.
+
+    ``chunk`` returns the original array objects untouched when every
+    sample is accepted, so clean streams pass through zero-copy and
+    bitwise-identical.  The chunked and per-sample paths make identical
+    accept decisions (prefix-max equivalence; see module docstring).
+    """
+
+    def __init__(self, power_bound_w: float = SENSOR_MAX_W):
+        self.power_bound_w = float(power_bound_w)
+        self.total_in = 0
+        self.quarantined_nonfinite = 0
+        self.quarantined_spike = 0
+        self.quarantined_out_of_order = 0
+        self.stale_suspects = 0
+        self._last_t = -math.inf
+        self._last_p = math.nan     # NaN: first sample never a stale suspect
+
+    @property
+    def quarantined(self) -> int:
+        return (self.quarantined_nonfinite + self.quarantined_spike
+                + self.quarantined_out_of_order)
+
+    # -- chunked path -------------------------------------------------------
+    def chunk(self, t, p, u, c):
+        ta = np.asarray(t)
+        pa = np.asarray(p)
+        m = int(ta.size)
+        self.total_in += m
+        if m == 0:
+            return t, p, u, c
+        finite = np.isfinite(ta) & np.isfinite(pa)
+        spike = finite & (np.abs(pa) > self.power_bound_w)
+        valid = finite & ~spike
+        self.quarantined_nonfinite += m - int(np.count_nonzero(finite))
+        self.quarantined_spike += int(np.count_nonzero(spike))
+        all_valid = bool(valid.all())
+        idx = None if all_valid else np.flatnonzero(valid)
+        tv = ta if all_valid else ta[idx]
+        if tv.size == 0:
+            return ta[:0], pa[:0], np.asarray(u)[:0], np.asarray(c)[:0]
+        cm = np.maximum.accumulate(tv)
+        prev = np.empty_like(cm)
+        prev[0] = self._last_t
+        np.maximum(cm[:-1], self._last_t, out=prev[1:])
+        accept = tv > prev
+        self._last_t = max(self._last_t, float(cm[-1]))
+        n_ooo = int(tv.size) - int(np.count_nonzero(accept))
+        self.quarantined_out_of_order += n_ooo
+        if all_valid and n_ooo == 0:
+            self._count_stale(pa)
+            return t, p, u, c           # clean: original objects, zero-copy
+        final = (np.flatnonzero(accept) if idx is None
+                 else idx[np.flatnonzero(accept)])
+        p2 = pa[final]
+        self._count_stale(p2)
+        return ta[final], p2, np.asarray(u)[final], np.asarray(c)[final]
+
+    def _count_stale(self, p_accepted: np.ndarray) -> None:
+        if p_accepted.size == 0:
+            return
+        prev = np.empty_like(p_accepted)
+        prev[0] = self._last_p
+        prev[1:] = p_accepted[:-1]
+        self.stale_suspects += int(np.count_nonzero(p_accepted == prev))
+        self._last_p = float(p_accepted[-1])
+
+    # -- per-sample path ----------------------------------------------------
+    def sample(self, s: PowerSample) -> bool:
+        """Accept/reject one sample; mirrors ``chunk`` bitwise."""
+        self.total_in += 1
+        if not (math.isfinite(s.t_s) and math.isfinite(s.power_w)):
+            self.quarantined_nonfinite += 1
+            return False
+        if abs(s.power_w) > self.power_bound_w:
+            self.quarantined_spike += 1
+            return False
+        if not s.t_s > self._last_t:
+            self.quarantined_out_of_order += 1
+            return False
+        if s.power_w == self._last_p:
+            self.stale_suspects += 1
+        self._last_t = s.t_s
+        self._last_p = s.power_w
+        return True
+
+    # -- state --------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"power_bound_w": self.power_bound_w,
+                "total_in": self.total_in,
+                "quarantined_nonfinite": self.quarantined_nonfinite,
+                "quarantined_spike": self.quarantined_spike,
+                "quarantined_out_of_order": self.quarantined_out_of_order,
+                "stale_suspects": self.stale_suspects,
+                "last_t": self._last_t, "last_p": self._last_p}
+
+    def load_state(self, state: dict) -> "StreamSanitizer":
+        self.power_bound_w = float(state["power_bound_w"])
+        self.total_in = int(state["total_in"])
+        self.quarantined_nonfinite = int(state["quarantined_nonfinite"])
+        self.quarantined_spike = int(state["quarantined_spike"])
+        self.quarantined_out_of_order = int(
+            state["quarantined_out_of_order"])
+        self.stale_suspects = int(state["stale_suspects"])
+        self._last_t = float(state["last_t"])
+        self._last_p = float(state["last_p"])
+        return self

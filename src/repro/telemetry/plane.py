@@ -28,31 +28,65 @@ sessions are rehomed to the survivors, its finished history is frozen as a
 ``ShardSummary`` that keeps merging into every later snapshot, so a shard
 loss never loses a joule (``train.elastic.fold_shard_loss`` wraps this for
 the checkpoint-restart path).
+
+The process runner is supervised: every worker heartbeats before doing
+work, and the parent enforces a heartbeat timeout (hung worker), a result
+timeout (stuck drain) and pipe EOF (crashed worker).  A failed attempt is
+restarted with exponential backoff up to ``SupervisorConfig.max_restarts``
+times — safe because workers only read the shared rings and the drain is
+deterministic, so a relaunch reproduces the lost attempt and results are
+adopted exactly once.  A shard whose every attempt fails is drained
+in-parent from the published rings and then folded out of the live plane
+via the ``detach_shard``/``fold_shard_loss`` path, so even a permanently
+failing worker never loses a joule.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, List, Optional
 
+import numpy as np
+
+from repro.telemetry.faults import ChaosPlan
 from repro.telemetry.service import StreamSession, TelemetryService
 from repro.telemetry.shard import Shard, ShardSummary, export_session
 
 RUNNERS = ("serial", "thread", "process")
 
 
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Shard-worker supervision knobs (process runner)."""
+
+    heartbeat_timeout_s: float = 30.0   # worker must heartbeat this fast
+    result_timeout_s: float = 300.0     # ... and deliver results this fast
+    max_restarts: int = 2               # relaunches per shard before fold
+    backoff_s: float = 0.25             # base restart delay (doubles)
+
+
 class TelemetryPlane(TelemetryService):
     """A ``TelemetryService`` partitioned into mergeable shards."""
 
-    def __init__(self, n_shards: int = 2, *, runner: str = "thread"):
+    def __init__(self, n_shards: int = 2, *, runner: str = "thread",
+                 chaos: Optional[ChaosPlan] = None,
+                 supervisor: Optional[SupervisorConfig] = None):
         super().__init__()
         if n_shards < 1:
             raise ValueError(f"need >= 1 shard, got {n_shards}")
         if runner not in RUNNERS:
             raise ValueError(f"unknown runner {runner!r} (one of {RUNNERS})")
         self.runner = runner
+        # shard-level chaos (worker crash/hang injection); stream-level
+        # faults ride each session's own plan
+        self.chaos = chaos
+        self.supervisor = supervisor or SupervisorConfig()
+        self.restarts = 0                       # worker relaunches, total
         self.shards: List[Shard] = [Shard(i) for i in range(n_shards)]
         self._retired: List[ShardSummary] = []
         self._assignment: Dict[str, Shard] = {}
+        self._supervisor_events: List[dict] = []
+        self._folded: List[int] = []            # shards folded after failure
         self._delegated = False        # process runner already dispatched
         self._pool = None
 
@@ -115,7 +149,7 @@ class TelemetryPlane(TelemetryService):
         return self._pool
 
     def _drain_remote(self) -> int:
-        """Dispatch every shard's pending sessions to spawned workers.
+        """Dispatch every shard's pending sessions to supervised workers.
 
         Sessions that were already started in this process (their pipeline
         state lives here) drain locally; unstarted ones are exported —
@@ -123,6 +157,11 @@ class TelemetryPlane(TelemetryService):
         shared ring, and the worker runs the ingest half.  One shot per
         plane: the process runner is a batch drain, not an incremental
         poll.
+
+        Each worker is supervised (heartbeat, timeouts, pipe EOF); failed
+        attempts restart with backoff, and a shard whose every attempt
+        fails falls back to an in-parent drain from the published rings,
+        then folds out of the live plane — see the module docstring.
         """
         import multiprocessing as mp
 
@@ -143,6 +182,7 @@ class TelemetryPlane(TelemetryService):
         # registration order).
         per_shard: Dict[int, list] = {}
         jobs = []
+        failed = []
         try:
             for key, s in self._sessions.items():
                 if s.summary is not None or s.started or not s._steps:
@@ -162,32 +202,31 @@ class TelemetryPlane(TelemetryService):
                 for spec, _, s in exported:
                     tables.setdefault(spec["table_ref"],
                                       s.predictor.table.to_dict())
-                parent_conn, child_conn = ctx.Pipe(duplex=False)
-                proc = ctx.Process(
-                    target=_worker_main,
-                    args=(sh.id, class_names, tables, specs, child_conn),
-                    daemon=True)
-                proc.start()
-                child_conn.close()
-                jobs.append((sh, specs, rings, parent_conn, proc))
-            for sh, specs, rings, conn, proc in jobs:
-                if not conn.poll(300.0):
-                    proc.terminate()
-                    raise RuntimeError(
-                        f"telemetry shard {sh.id} worker timed out")
-                reply = conn.recv()       # before join: avoid pipe deadlock
-                proc.join()
-                if not reply["ok"]:
-                    raise RuntimeError(
-                        f"telemetry shard {sh.id} worker failed:\n"
-                        f"{reply['error']}")
+                proc, conn = self._launch_worker(ctx, class_names, sh.id,
+                                                 tables, specs, attempt=0)
+                jobs.append([sh, specs, rings, tables, conn, proc])
+            for job in jobs:
+                sh, specs, rings, tables = job[0], job[1], job[2], job[3]
+                reply = self._supervise(ctx, class_names, sh, tables,
+                                        specs, job)
+                if reply is None:
+                    # every attempt failed: rebuild the ingest half here,
+                    # from the rings the parent already published — the
+                    # worker never delivered, so nothing was adopted and
+                    # this local drain is the exactly-once accounting
+                    total += self._fallback_local(sh, specs, rings)
+                    failed.append(sh)
+                    continue
                 for spec in specs:
                     result = reply["results"][spec["key"]]
                     sh.sessions[spec["key"]].adopt_remote(result)
                     total += int(result["samples_drained"])
         finally:
-            for _, _, _, conn, _ in jobs:
-                conn.close()
+            for job in jobs:
+                try:
+                    job[4].close()
+                except Exception:
+                    pass
             for exported in per_shard.values():
                 for _, ring, _ in exported:
                     ring.close()
@@ -196,7 +235,118 @@ class TelemetryPlane(TelemetryService):
         # still drains here
         for sh in self.shards:
             total += sh.drain()
+        # fold permanently-failed shards out of the live plane (their
+        # now-finished history freezes into a retired summary that every
+        # later snapshot still merges — exact accounting survives)
+        for sh in failed:
+            if any(x.id != sh.id for x in self.shards):
+                from repro.train.elastic import fold_shard_loss
+                fold_shard_loss(self, sh.id)
+                self._folded.append(sh.id)
         return total
+
+    # -- worker supervision ---------------------------------------------------
+    def _sabotage(self, shard_id: int, attempt: int):
+        """Chaos hook: should this launch attempt be sabotaged, and how?"""
+        plan = self.chaos
+        if plan is None or attempt >= max(plan.crash_attempts, 0):
+            return None, 0.0
+        if shard_id in plan.hang_shards:
+            return "hang", plan.hang_s
+        if shard_id in plan.crash_shards:
+            return "crash", 0.0
+        return None, 0.0
+
+    def _launch_worker(self, ctx, class_names, shard_id, tables, specs,
+                       attempt: int):
+        sabotage, hang_s = self._sabotage(shard_id, attempt)
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        proc = ctx.Process(
+            target=_worker_main,
+            args=(shard_id, class_names, tables, specs, child_conn,
+                  sabotage, hang_s),
+            daemon=True)
+        proc.start()
+        child_conn.close()
+        return proc, parent_conn
+
+    @staticmethod
+    def _await_worker(conn, sup: SupervisorConfig):
+        """Wait for heartbeat then results; (reply, None) or (None, cause)."""
+        try:
+            if not conn.poll(sup.heartbeat_timeout_s):
+                return None, "heartbeat-timeout"
+            msg = conn.recv()
+            if msg.get("hb"):
+                if not conn.poll(sup.result_timeout_s):
+                    return None, "result-timeout"
+                reply = conn.recv()
+            else:
+                reply = msg            # worker skipped the heartbeat
+        except EOFError:
+            return None, "crashed"
+        if reply.get("ok"):
+            return reply, None
+        return None, "worker-error: " + str(reply.get("error", ""))[:500]
+
+    def _supervise(self, ctx, class_names, sh, tables, specs, job):
+        """Await one shard's worker, restarting failed attempts.
+
+        Returns the successful reply, or ``None`` once
+        ``SupervisorConfig.max_restarts`` relaunches have also failed.
+        ``job[4]``/``job[5]`` track the live conn/proc so cleanup in the
+        caller always sees the current attempt.
+        """
+        import time
+
+        sup = self.supervisor
+        attempt = 0
+        while True:
+            conn, proc = job[4], job[5]
+            reply, cause = self._await_worker(conn, sup)
+            if reply is not None:
+                proc.join()
+                return reply
+            # tear down the failed attempt
+            try:
+                proc.terminate()
+                proc.join()
+            except Exception:
+                pass
+            try:
+                conn.close()
+            except Exception:
+                pass
+            attempt += 1
+            self._supervisor_events.append(
+                {"shard": sh.id, "attempt": attempt, "cause": cause})
+            if attempt > sup.max_restarts:
+                return None
+            self.restarts += 1
+            time.sleep(sup.backoff_s * (2 ** (attempt - 1)))
+            proc, conn = self._launch_worker(ctx, class_names, sh.id,
+                                             tables, specs, attempt)
+            job[4], job[5] = conn, proc
+
+    def _fallback_local(self, sh, specs, rings) -> int:
+        """Permanent worker failure: drain the shard in-parent.
+
+        The device half already ran (the traces sit in the published
+        rings); only the ingest half is rebuilt, around a private copy of
+        each trace.  Chaos plans still apply — ``_arm`` wraps the replay
+        sampler — so the fallback reproduces exactly what the worker
+        would have computed.
+        """
+        from repro.hw.device import SensorTrace
+        from repro.telemetry.sampler import TraceReplaySampler
+
+        for spec, ring in zip(specs, rings):
+            s = sh.sessions[spec["key"]]
+            if s.summary is not None or s.started:
+                continue
+            trace = SensorTrace(*[np.array(v) for v in ring.views()])
+            s._arm(s.record, spec["markers"], TraceReplaySampler(trace))
+        return sh.drain()
 
     # -- snapshots ------------------------------------------------------------
     def shard_summaries(self) -> List[ShardSummary]:
@@ -216,6 +366,14 @@ class TelemetryPlane(TelemetryService):
         if self._governors:
             out["governors"] = {k: g.snapshot()
                                 for k, g in self._governors.items()}
+        if self.restarts or self._folded:
+            # only when the supervisor actually intervened — clean runs
+            # stay bitwise-identical to the unsharded service snapshot
+            out["supervisor"] = {
+                "restarts": self.restarts,
+                "folded_shards": list(self._folded),
+                "events": list(self._supervisor_events),
+            }
         return out
 
     # -- elastic membership ---------------------------------------------------
@@ -254,7 +412,9 @@ class TelemetryPlane(TelemetryService):
         return final
 
 
-def _worker_main(shard_id, class_names, tables, specs, conn):
+def _worker_main(shard_id, class_names, tables, specs, conn,
+                 sabotage=None, hang_s=0.0):
     """Top-level spawn target (bound methods don't pickle across spawn)."""
     from repro.telemetry.shard import run_shard_worker
-    run_shard_worker(shard_id, class_names, tables, specs, conn)
+    run_shard_worker(shard_id, class_names, tables, specs, conn,
+                     sabotage=sabotage, hang_s=hang_s)

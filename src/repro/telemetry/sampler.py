@@ -100,13 +100,19 @@ class SampleRing:
         """
         t = np.asarray(times_s, dtype=float)
         n = int(t.size)
-        if n == 0:
-            return 0
         p = np.asarray(power_w, dtype=float)
         u = (np.full(n, math.nan) if util is None
              else np.asarray(util, dtype=float))
         c = (np.full(n, math.nan) if temp_c is None
              else np.asarray(temp_c, dtype=float))
+        if p.size != n or u.size != n or c.size != n:
+            # a shorter array would raise an opaque broadcast error mid
+            # copy; a scalar would broadcast *silently* — fail loud instead
+            raise ValueError(
+                f"chunk field lengths disagree: times={n} power={p.size} "
+                f"util={u.size} temp={c.size}")
+        if n == 0:
+            return 0
         cap = self.capacity
         self.dropped += max(self._count + n - cap, 0)
         self.total += n

@@ -41,6 +41,7 @@ from repro.telemetry.align import (AlignedWindow, Marker, StreamAligner,
                                    contiguous_markers, subdivide_marker)
 from repro.telemetry.attrib import DriftState, OnlineAttributor, mape_pct
 from repro.telemetry.attrib import rescale_table
+from repro.telemetry.faults import ChaosPlan, FaultySampler, StreamSanitizer
 from repro.telemetry.sampler import (DEFAULT_CHUNK, DeviceSampler,
                                      SampleRing, TraceReplaySampler,
                                      iter_chunks)
@@ -84,15 +85,29 @@ def fleet_block(per: Dict[str, dict], anomalies: int) -> dict:
     keys = sorted(per)
     measured_j = 0.0
     samples = 0
+    quarantined = 0
+    n_gaps = 0
+    gap_s = 0.0
+    gap_j = 0.0
+    low_conf = 0
     for k in keys:
         measured_j += per[k]["measured_j"]
         samples += per[k]["samples"]
+        h = per[k].get("health") or {}
+        quarantined += h.get("quarantined", 0)
+        n_gaps += h.get("n_gaps", 0)
+        gap_s += h.get("gap_s", 0.0)
+        gap_j += h.get("gap_j", 0.0)
+        low_conf += h.get("low_confidence_windows", 0)
     return {
         "n_sessions": len(per),
         "measured_j": measured_j,
         "samples": samples,
         "drifting": sorted(k for k in keys if per[k]["drifting"]),
         "anomalies": anomalies,
+        "health": {"quarantined": quarantined, "n_gaps": n_gaps,
+                   "gap_s": gap_s, "gap_j": gap_j,
+                   "low_confidence_windows": low_conf},
     }
 
 
@@ -112,6 +127,13 @@ class StreamSummary:
     host_duration_s: Optional[float]   # summed host wall-clock, when reported
     n_samples: int
     dropped_samples: int
+    # health accounting (defaults keep older pickled summaries loadable)
+    quarantined_samples: int = 0       # rejected by the stream sanitizer
+    stale_suspects: int = 0            # repeated-value readings (heuristic)
+    n_gaps: int = 0                    # sampling-gap segments seen
+    gap_s: float = 0.0                 # span estimated across gaps
+    gap_j: float = 0.0                 # energy interpolated across gaps
+    low_confidence_windows: int = 0    # windows below solid-coverage floor
 
     @property
     def attributed_j(self) -> float:
@@ -128,7 +150,8 @@ class StreamSession:
                  recalibrate="rescale", store=None,
                  detector=None, attributor: Optional[OnlineAttributor] = None,
                  chunk_size: Optional[int] = DEFAULT_CHUNK,
-                 operating_point=None):
+                 operating_point=None, chaos: Optional[ChaosPlan] = None,
+                 gap_threshold_s: Optional[float] = None):
         self.predictor = predictor
         self.device = device
         self.counts = counts
@@ -143,6 +166,12 @@ class StreamSession:
         # positive n ingests n-sample ndarray chunks through the whole
         # pipeline (ring, integrator, plateau, aligner, batch attribution)
         self.chunk_size = int(chunk_size) if chunk_size else None
+        # fault injection (None/disabled: the sampler is used as-is) and
+        # the always-on ingest sanitizer — on clean streams it is a
+        # zero-copy, bitwise pass-through with counters
+        self.chaos = chaos
+        self.sanitizer = StreamSanitizer()
+        self._gap_threshold_s = gap_threshold_s
         self.ring = SampleRing(ring_capacity)
         self.integrator = StreamingIntegrator()
         self.plateau = OnlineSteadyState()
@@ -320,12 +349,15 @@ class StreamSession:
         untouched by kernel microscopy.
         """
         self.record = record
-        self._aligner = StreamAligner(on_window=self._on_window)
+        self._aligner = StreamAligner(on_window=self._on_window,
+                                      gap_threshold_s=self._gap_threshold_s)
         for m in markers:
             if isinstance(m, tuple):
                 self._aligner.add_marker(m[0], m[1])
             else:
                 self._aligner.add_marker(m)
+        if self.chaos is not None and self.chaos.stream_enabled:
+            sampler = FaultySampler(sampler, self.chaos)
         self._source = (iter_chunks(sampler, self.chunk_size)
                         if self.chunk_size else iter(sampler))
 
@@ -338,7 +370,9 @@ class StreamSession:
                  operating_point=None, monitor=None,
                  ring_capacity: int = 4096, recalibrate="rescale",
                  store=None, detector=None, attributor=None,
-                 chunk_size: Optional[int] = DEFAULT_CHUNK
+                 chunk_size: Optional[int] = DEFAULT_CHUNK,
+                 chaos: Optional[ChaosPlan] = None,
+                 gap_threshold_s: Optional[float] = None
                  ) -> "StreamSession":
         """A session armed around an externally produced trace.
 
@@ -355,7 +389,8 @@ class StreamSession:
         self = cls(predictor, dev, counts, name, monitor=monitor,
                    ring_capacity=ring_capacity, recalibrate=recalibrate,
                    store=store, detector=detector, attributor=attributor,
-                   chunk_size=chunk_size, operating_point=None)
+                   chunk_size=chunk_size, operating_point=None,
+                   chaos=chaos, gap_threshold_s=gap_threshold_s)
         # already resolved by the launching session — adopt verbatim
         # (re-resolving could round differently than the parent did)
         self.operating_point = operating_point
@@ -407,6 +442,8 @@ class StreamSession:
         self.attributor.recalibrations.extend(result["recalibrations"])
         self.samples_drained = int(result["samples_drained"])
         self.chunks_drained = int(result["chunks_drained"])
+        if "sanitizer" in result:
+            self.sanitizer.load_state(result["sanitizer"])
         self._remote_snapshot = dict(result["snapshot"])
         self._source = None
         return self.summary
@@ -439,16 +476,20 @@ class StreamSession:
                 if chunk is None:
                     self._close()
                     break
-                t, p, u, c = chunk
-                self.ring.extend(t, p, u, c)
-                self.integrator.extend(t, p)
-                self.plateau.update_chunk(t, p)
-                self._aligner.add_samples(t, p)
-                self._flush_pending()
-                size = int(np.asarray(t).size)
-                ingested += size
+                raw_size = int(np.asarray(chunk[0]).size)
+                # sanitize first: quarantined samples never reach the
+                # pipeline (on clean chunks this returns the original
+                # arrays — zero-copy, bitwise pass-through)
+                t, p, u, c = self.sanitizer.chunk(*chunk)
+                if int(np.asarray(t).size):
+                    self.ring.extend(t, p, u, c)
+                    self.integrator.extend(t, p)
+                    self.plateau.update_chunk(t, p)
+                    self._aligner.add_samples(t, p)
+                    self._flush_pending()
+                ingested += raw_size
                 self.chunks_drained += 1
-                self.samples_drained += size
+                self.samples_drained += raw_size
         else:
             n_before = ingested
             for _ in range(max_chunks * DEFAULT_CHUNK):
@@ -456,11 +497,13 @@ class StreamSession:
                 if s is None:
                     self._close()
                     break
+                ingested += 1
+                if not self.sanitizer.sample(s):
+                    continue     # quarantined (counted, never ingested)
                 self.ring.append(s)
                 self.integrator.add(s.t_s, s.power_w)
                 self.plateau.update(s.t_s, s.power_w)
                 self._aligner.add_sample(s)
-                ingested += 1
             got = ingested - n_before
             self.samples_drained += got
             # per-sample path: account in reference chunk units, rounding
@@ -497,7 +540,13 @@ class StreamSession:
             recalibrations=list(self.recalibrations),
             host_duration_s=float(sum(host_dts)) if host_dts else None,
             n_samples=self.integrator.n_samples,
-            dropped_samples=self.ring.dropped)
+            dropped_samples=self.ring.dropped,
+            quarantined_samples=self.sanitizer.quarantined,
+            stale_suspects=self.sanitizer.stale_suspects,
+            n_gaps=self._aligner.gap_events,
+            gap_s=self._aligner.gap_seconds,
+            gap_j=self._aligner.gap_joules,
+            low_confidence_windows=self._low_confidence())
 
     # -- internals -----------------------------------------------------------
     def _markers(self, rec: RunRecord, n: int) -> List[Marker]:
@@ -596,6 +645,36 @@ class StreamSession:
     def _mape(self) -> float:
         return mape_pct(self.attributions)
 
+    def _low_confidence(self) -> int:
+        """This session's low-confidence windows (shared-attributor safe)."""
+        return sum(1 for a in self.attributions if a.low_confidence)
+
+    def health(self) -> dict:
+        """Exact degradation counters for this session (JSON-safe).
+
+        ``raw_samples`` counts everything the sampler delivered;
+        ``quarantined`` (split by cause) is what the sanitizer rejected;
+        the ``gap_*`` block is the aligner's sampling-gap accounting —
+        ``gap_j`` is energy *included* in ``measured_j`` but interpolated
+        across gaps rather than densely sampled.
+        """
+        san = self.sanitizer
+        al = self._aligner
+        return {
+            "raw_samples": san.total_in,
+            "quarantined": san.quarantined,
+            "nonfinite": san.quarantined_nonfinite,
+            "spikes": san.quarantined_spike,
+            "out_of_order": san.quarantined_out_of_order,
+            "stale_suspects": san.stale_suspects,
+            "n_gaps": al.gap_events if al is not None else 0,
+            "gap_s": al.gap_seconds if al is not None else 0.0,
+            "gap_j": al.gap_joules if al is not None else 0.0,
+            "gap_threshold_s": (al.gap_threshold_s if al is not None
+                                else None),
+            "low_confidence_windows": self._low_confidence(),
+        }
+
     # -- kernel microscopy -----------------------------------------------------
     @property
     def kernel_windows(self) -> List[AlignedWindow]:
@@ -666,6 +745,7 @@ class StreamSession:
             "drifting": self.attributor.drift.drifting,
             "recalibrations": list(self.recalibrations),
             "finished": self.summary is not None,
+            "health": self.health(),
         }
         if self.summary is not None:
             out["startup_j"] = self.summary.startup_j

@@ -244,6 +244,11 @@ def export_session(key: str, session: StreamSession):
         "recalibrate": session.attributor.recalibrate,
         "detector": session.attributor.detector.state_dict(),
         "table_ref": id(session.predictor.table),
+        # chaos plan + gap threshold travel with the spec: the worker
+        # injects the same deterministic faults the parent would have,
+        # so in-process and sharded runs see identical faulted streams
+        "chaos": session.chaos,
+        "gap_threshold_s": session._gap_threshold_s,
     }
     return spec, ring
 
@@ -290,7 +295,9 @@ def drain_shard_in_process(shard_id: int, class_names: List[str],
                 operating_point=spec["session_point"],
                 ring_capacity=spec["ring_capacity"],
                 recalibrate=spec["recalibrate"], detector=detector,
-                chunk_size=spec["chunk_size"])
+                chunk_size=spec["chunk_size"],
+                chaos=spec.get("chaos"),
+                gap_threshold_s=spec.get("gap_threshold_s"))
             shard.add(spec["key"], session)
             sessions[spec["key"]] = session
             del trace        # keep no loose views into the shared segment
@@ -307,6 +314,7 @@ def drain_shard_in_process(shard_id: int, class_names: List[str],
                 "recalibrations": list(s.recalibrations),
                 "samples_drained": s.samples_drained,
                 "chunks_drained": s.chunks_drained,
+                "sanitizer": s.sanitizer.state_dict(),
             }
         return results
     finally:
@@ -323,9 +331,26 @@ def drain_shard_in_process(shard_id: int, class_names: List[str],
 
 def run_shard_worker(shard_id: int, class_names: List[str],
                      tables: Dict[int, dict], specs: List[dict],
-                     conn) -> None:
-    """Spawned-process entry point: drain one shard, send results back."""
+                     conn, sabotage: Optional[str] = None,
+                     hang_s: float = 0.0) -> None:
+    """Spawned-process entry point: drain one shard, send results back.
+
+    The worker heartbeats (``{"hb": True}``) before doing any work so the
+    plane's supervisor can distinguish a hung worker from a slow one.
+    ``sabotage`` is the chaos hook: ``"hang"`` sleeps *before* the
+    heartbeat (tripping the supervisor's heartbeat timeout), ``"crash"``
+    hard-exits after it (tripping the pipe-EOF path).  Restarting is safe:
+    the shared rings are read-only to workers and the drain pipeline is
+    deterministic, so a relaunched attempt reproduces the lost one.
+    """
     try:
+        if sabotage == "hang":
+            import time
+            time.sleep(hang_s)
+        conn.send({"hb": True, "shard": int(shard_id)})
+        if sabotage == "crash":
+            import os
+            os._exit(3)          # a hard crash: no reply, just pipe EOF
         results = drain_shard_in_process(shard_id, class_names, tables,
                                          specs)
         conn.send({"ok": True, "results": results})

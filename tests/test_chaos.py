@@ -1,0 +1,385 @@
+"""Chaos-hardened telemetry: fault injection, degradation, supervision.
+
+Acceptance criteria covered here:
+  (a) a disabled fault layer is a bitwise identity: a session run behind
+      ``FaultySampler(plan=none)`` snapshots byte-identically to a bare
+      sampler session;
+  (b) injected fault counts are *exact*: the sanitizer's quarantine
+      counters equal the ``ChaosReport``'s ``expected_quarantine`` and a
+      drops-only plan's ``drop_events`` equals the aligner's gap count;
+  (c) the same chaos seed reproduces a byte-identical ``ChaosReport``;
+      the faulted stream is chunk-layout invariant (scalar vs chunked
+      ingestion see the same faults and agree bitwise);
+  (d) graceful degradation: under a heavy fault profile a monitored run
+      and a serving run complete without exception, per-step energies
+      plus the reported gap estimate still tile the run total, and no
+      fault-induced recalibration fires;
+  (e) the telemetry plane's shard supervisor restarts a crashed or hung
+      worker (result bitwise-identical to the crash-free run) and folds a
+      permanently failed shard without losing a joule;
+  (f) corrupt store/calibration artifacts are quarantined aside with a
+      clear error, and a calibrate resume re-measures only the bad
+      record.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import EnergyModel
+from repro.core.counting import OpCounts
+from repro.hw.device import SensorTrace
+from repro.telemetry import (ChaosPlan, ChaosReport, FaultySampler,
+                             StreamSanitizer, SupervisorConfig,
+                             TelemetryPlane, window_tiling)
+from repro.telemetry.align import StreamAligner
+from repro.telemetry.sampler import TraceReplaySampler
+
+SYSTEM = "sim-v5e-air"
+
+
+def _counts() -> OpCounts:
+    c = OpCounts()
+    c.add("dot.bf16", 1e7)
+    c.mxu_macs_total = c.mxu_macs_aligned = 1e7
+    c.add("add.f32", 2e5)
+    c.boundary_read_bytes = 2e5
+    c.boundary_write_bytes = 1e5
+    c.max_buffer_bytes = 4e6
+    c.dispatch_count = 3
+    return c
+
+
+def _regular_trace(n: int = 5000, dt: float = 0.01) -> SensorTrace:
+    """Strictly increasing t and p: any repeat/reorder is injected."""
+    t = dt * np.arange(1, n + 1)
+    p = 100.0 + 1e-4 * np.arange(n)
+    return SensorTrace(t, p, np.full(n, 0.5), np.full(n, 40.0))
+
+
+def _session_snapshot(chaos, *, chunk_size=512, steps=6):
+    """One monitored run on a fresh model (fresh device noise stream)."""
+    model = EnergyModel.from_store(SYSTEM)
+    s = model.stream(_counts(), name="chaos", chaos=chaos,
+                     min_duration_s=6.0, chunk_size=chunk_size)
+    for i in range(steps):
+        s.step(i)
+    s.finish()
+    return s.snapshot(), s
+
+
+# ---------------------------------------------------------------------------
+# (a) identity when disabled
+# ---------------------------------------------------------------------------
+def test_disabled_fault_layer_is_bitwise_identity():
+    bare, _ = _session_snapshot(None)
+    wrapped, _ = _session_snapshot(ChaosPlan.profile("none", seed=123))
+    assert json.dumps(bare, sort_keys=True) == \
+        json.dumps(wrapped, sort_keys=True)
+
+
+def test_disabled_plan_chunks_are_the_inner_chunks():
+    sampler = TraceReplaySampler(_regular_trace(100))
+    fs = FaultySampler(sampler, ChaosPlan())
+    ref = TraceReplaySampler(_regular_trace(100))
+    for (t, p, u, c), (rt, rp, ru, rc) in zip(fs.chunks(32), ref.chunks(32)):
+        np.testing.assert_array_equal(t, rt)
+        np.testing.assert_array_equal(p, rp)
+
+
+# ---------------------------------------------------------------------------
+# (b) exact counters
+# ---------------------------------------------------------------------------
+def test_quarantine_counters_match_injected_exactly():
+    plan = ChaosPlan(seed=11, nan_fraction=0.01, nan_burst=3,
+                     spike_fraction=0.005, stale_fraction=0.004,
+                     stale_run=2, dup_fraction=0.003, swap_fraction=0.003,
+                     granularity=1000)
+    fs = FaultySampler(TraceReplaySampler(_regular_trace()), plan)
+    san = StreamSanitizer()
+    kept = 0
+    for t, p, u, c in fs.chunks(256):
+        t2, *_ = san.chunk(t, p, u, c)
+        kept += int(np.asarray(t2).size)
+    rep = fs.report
+    assert rep.samples_in == 5000 and rep.granules == 5
+    want = rep.expected_quarantine
+    assert san.quarantined_nonfinite == want["nonfinite"] > 0
+    assert san.quarantined_spike == want["spikes"] > 0
+    assert san.quarantined_out_of_order == want["out_of_order"] > 0
+    assert san.quarantined == sum(want.values())
+    assert kept == rep.samples_out - san.quarantined
+    # trace power is strictly increasing, so every repeat is injected
+    assert san.stale_suspects == rep.stale_samples > 0
+
+
+def test_drop_events_match_aligner_gap_count_exactly():
+    dt = 0.01
+    plan = ChaosPlan(seed=5, drop_fraction=0.05, granularity=1000)
+    fs = FaultySampler(TraceReplaySampler(_regular_trace(dt=dt)), plan)
+    aligner = StreamAligner(gap_threshold_s=1.5 * dt)
+    for t, p, u, c in fs.chunks(512):
+        aligner.add_samples(t, p)
+    aligner.close()
+    rep = fs.report
+    assert rep.dropped > 0
+    assert aligner.gap_events == rep.drop_events > 0
+    # every gap spans exactly (run length + 1) regular steps
+    assert aligner.gap_seconds == pytest.approx(
+        dt * (rep.dropped + rep.drop_events), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# (c) determinism + chunk-layout invariance
+# ---------------------------------------------------------------------------
+def test_same_seed_byte_identical_report():
+    plan = ChaosPlan.profile("heavy", seed=42)
+
+    def run(chunk):
+        fs = FaultySampler(TraceReplaySampler(_regular_trace()), plan)
+        for _ in fs.chunks(chunk):
+            pass
+        return fs.report.to_json()
+
+    assert run(256) == run(256)
+    assert run(256) == run(64)          # granule layout, not consumer chunk
+    other = FaultySampler(TraceReplaySampler(_regular_trace()),
+                          dataclasses.replace(plan, seed=43))
+    for _ in other.chunks(256):
+        pass
+    assert other.report.to_json() != run(256)
+
+
+def test_faulty_sampler_is_single_pass():
+    fs = FaultySampler(TraceReplaySampler(_regular_trace(100)),
+                       ChaosPlan(seed=0, drop_fraction=0.1))
+    for _ in fs.chunks(64):
+        pass
+    with pytest.raises(RuntimeError, match="single-pass"):
+        for _ in fs.chunks(64):
+            pass
+
+
+def test_scalar_and_chunked_ingestion_agree_under_chaos():
+    plan = ChaosPlan(seed=9, drop_fraction=0.03, nan_fraction=0.01,
+                     spike_fraction=0.005, dup_fraction=0.002,
+                     swap_fraction=0.002, granularity=1000)
+    chunked, _ = _session_snapshot(plan, chunk_size=512)
+    scalar, _ = _session_snapshot(plan, chunk_size=None)
+    assert json.dumps(chunked, sort_keys=True) == \
+        json.dumps(scalar, sort_keys=True)
+
+
+def test_sanitizer_scalar_chunk_same_decisions():
+    t = np.array([1.0, 2.0, np.nan, 3.0, 2.5, 4.0, 4.0, 5.0])
+    p = np.array([100.0, 1e7, 101.0, 102.0, 103.0, 104.0, 104.0, 104.0])
+    a = StreamSanitizer()
+    ta, *_ = a.chunk(t, p, np.full(8, np.nan), np.full(8, np.nan))
+    b = StreamSanitizer()
+    kept = [s for i, s in enumerate(t)
+            if b.sample(type("S", (), {"t_s": t[i], "power_w": p[i],
+                                       "util": np.nan, "temp_c": np.nan})())]
+    assert list(ta) == kept == [1.0, 3.0, 4.0, 5.0]
+    assert a.state_dict() == b.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# (d) graceful degradation
+# ---------------------------------------------------------------------------
+def test_heavy_chaos_monitor_completes_and_tiles():
+    plan = ChaosPlan.profile("heavy", seed=7)
+    snap, s = _session_snapshot(plan, steps=8)
+    summary = s.summary
+    # conservation: windows (including the gap estimate folded into them)
+    # still tile the stream total
+    tiling = window_tiling(s.windows)
+    assert tiling["startup_j"] + sum(tiling["step_j"]) == pytest.approx(
+        summary.measured_total_j, rel=1e-9)
+    # the gap portion is accounted, never double-counted
+    assert sum(w.gap_j for w in s.windows) <= summary.gap_j + 1e-9
+    h = snap["health"]
+    assert h["quarantined"] > 0
+    assert h["quarantined"] == s.sanitizer.quarantined
+    assert 0.0 <= h["gap_j"] <= summary.measured_total_j
+    # faults must degrade confidence, never trigger a table rewrite
+    assert summary.recalibrations == []
+
+
+def test_heavy_chaos_serve_completes_with_health():
+    model = EnergyModel.from_store(SYSTEM)
+    from repro.serve.scheduler import Request
+    report = model.serve(
+        requests=[Request("r0", "a", 8, 4), Request("r1", "b", 8, 4)],
+        chaos=ChaosPlan.profile("heavy", seed=1),
+        min_phase_seconds=4.0)
+    assert report.measured_total_j > 0
+    h = report.health
+    assert h["samples"] > 0
+    assert set(h) >= {"quarantined", "gap_j", "gap_s", "n_gaps",
+                      "low_confidence_windows"}
+    assert report.recalibrations == []
+    assert report.snapshot()["health"] == h
+
+
+def test_low_coverage_windows_skip_drift():
+    from repro.telemetry.align import AlignedWindow
+    from repro.telemetry.attrib import OnlineAttributor
+    model = EnergyModel.from_store(SYSTEM)
+    att = OnlineAttributor(model.predictor)
+    w = AlignedWindow(step=0, name="w", t_start_s=0.0, t_end_s=1.0,
+                      measured_j=100.0, n_samples=3, covered_s=1.0,
+                      clipped=False, gap_j=80.0, gap_s=0.8)
+    assert w.solid_coverage < att.min_solid_coverage
+    out = att.attribute(w, _counts())
+    assert out.low_confidence
+    assert att.low_confidence_total == 1
+    assert att.detector._n == 0         # never fed the drift detector
+    solid = AlignedWindow(step=1, name="w", t_start_s=1.0, t_end_s=2.0,
+                          measured_j=100.0, n_samples=50, covered_s=1.0,
+                          clipped=False)
+    out2 = att.attribute(solid, _counts())
+    assert not out2.low_confidence
+    assert att.detector._n == 1
+
+
+# ---------------------------------------------------------------------------
+# (e) shard supervisor
+# ---------------------------------------------------------------------------
+def _plane_run(chaos, *, n_shards=2, max_restarts=2,
+               heartbeat_timeout_s=15.0):
+    """Three sessions on a process-runner plane, workers do the ingest.
+
+    A fresh model per call: bitwise-comparable runs need a fresh sim
+    device (its sensor-noise RNG is a device-lifetime stream)."""
+    pytest.importorskip("multiprocessing.shared_memory")
+    model = EnergyModel.from_store(SYSTEM)
+    plane = model.plane(
+        n_shards, runner="process", chaos=chaos,
+        supervisor=SupervisorConfig(heartbeat_timeout_s=heartbeat_timeout_s,
+                                    max_restarts=max_restarts,
+                                    backoff_s=0.05))
+    for i in range(3):
+        s = model.stream(_counts(), name=f"w{i}", recalibrate=None,
+                         chunk_size=512)
+        plane.register(s, f"dev{i}/w{i}")
+        for _ in range(3):
+            s.step()
+    plane.finish_all()
+    return plane
+
+
+def test_supervisor_restarts_crashed_worker_bitwise():
+    crash = dataclasses.replace(ChaosPlan(), crash_shards=(0,),
+                                crash_attempts=1)
+    ref = _plane_run(None)
+    hit = _plane_run(crash)
+    assert hit.restarts == 1
+    assert [e["cause"] for e in hit._supervisor_events] == ["crashed"]
+    snap = hit.snapshot()
+    sup = snap.pop("supervisor")
+    assert sup["restarts"] == 1 and sup["folded_shards"] == []
+    assert json.dumps(ref.snapshot(), sort_keys=True) == \
+        json.dumps(snap, sort_keys=True)
+
+
+def test_supervisor_times_out_hung_worker():
+    hang = dataclasses.replace(ChaosPlan(), hang_shards=(1,),
+                               crash_attempts=1, hang_s=60.0)
+    plane = _plane_run(hang, heartbeat_timeout_s=1.0)
+    assert plane.restarts == 1
+    assert plane._supervisor_events[0]["cause"] == "heartbeat-timeout"
+    assert plane.snapshot()["fleet"]["measured_j"] > 0
+
+
+def test_permanent_shard_failure_folds_without_losing_joules():
+    dead = dataclasses.replace(ChaosPlan(), crash_shards=(0,),
+                               crash_attempts=99)
+    ref = _plane_run(None, max_restarts=1)
+    hit = _plane_run(dead, max_restarts=1)
+    assert hit._folded == [0]
+    assert [sh.id for sh in hit.shards] == [1]
+    snap = hit.snapshot()
+    sup = snap.pop("supervisor")
+    assert sup["folded_shards"] == [0] and len(sup["events"]) == 2
+    # the in-parent fallback drain preserves exact accounting: the fleet
+    # block (and every session) matches the crash-free run bitwise
+    assert json.dumps(ref.snapshot(), sort_keys=True) == \
+        json.dumps(snap, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# (f) store / calibration corruption
+# ---------------------------------------------------------------------------
+def test_truncated_table_quarantined_and_retrained_path_free(tmp_path):
+    from repro.core.store import TableStore
+    model = EnergyModel.from_store(SYSTEM)
+    store = TableStore(tmp_path)
+    path = store.put(model.table)
+    raw = path.read_text()
+    path.write_text(raw[:len(raw) // 2])        # torn write / truncation
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        assert store.get(SYSTEM) is None
+    assert not path.exists()                    # publish path freed
+    assert path.with_name(path.name + ".corrupt").exists()
+
+
+def test_value_corruption_caught_by_checksum(tmp_path):
+    from repro.core.table import EnergyTable, TableSchemaError
+    model = EnergyModel.from_store(SYSTEM)
+    path = tmp_path / "t.json"
+    model.table.save(path)
+    d = json.loads(path.read_text())
+    assert "checksum" in d
+    d["p_const"] = d["p_const"] + 1.0           # silent value-level rot
+    path.write_text(json.dumps(d))
+    with pytest.raises(TableSchemaError, match="checksum mismatch"):
+        EnergyTable.load(path)
+    # a round trip with an intact checksum still loads
+    model.table.save(path)
+    assert EnergyTable.load(path) == model.table
+
+
+def test_corrupt_calibration_record_remeasured_alone(tmp_path):
+    from repro.core import calibrate as cal
+    p = cal.plan(SYSTEM, duration_s=2.0, repeats=1)
+    ledger = cal.RunLedger(tmp_path / "run")
+    ledger.bind(p)
+    cal.run_measurements(p, ledger, limit=3)
+    done = sorted(ledger.records)
+    assert len(done) == 3
+    victim = done[0]
+    rec_path = (tmp_path / "run" / "records"
+                / cal.RunLedger._fname(victim))
+    rec_path.write_text("{ not json")
+    fresh = cal.RunLedger(tmp_path / "run")
+    with pytest.warns(RuntimeWarning, match="re-measured"):
+        fresh.bind(p)
+    missing = {s.spec_id for s in fresh.missing(p)}
+    assert victim in missing                    # the bad record, and
+    for ok in done[1:]:                         # ONLY the bad record,
+        assert ok not in missing                # gets re-measured
+    assert rec_path.with_name(rec_path.name + ".corrupt").exists()
+
+
+def test_corrupt_plan_fingerprint_is_loud(tmp_path):
+    from repro.core import calibrate as cal
+    p = cal.plan(SYSTEM, duration_s=2.0, repeats=1)
+    ledger = cal.RunLedger(tmp_path / "run")
+    ledger.bind(p)
+    (tmp_path / "run" / "plan.json").write_text("xx{")
+    fresh = cal.RunLedger(tmp_path / "run")
+    with pytest.warns(RuntimeWarning, match="quarantined corrupt"):
+        with pytest.raises(cal.CalibrationError, match="corrupted"):
+            fresh.bind(p)
+
+
+def test_chaos_plan_json_round_trip():
+    plan = ChaosPlan.profile("heavy", seed=3)
+    d = json.loads(plan.to_json())
+    d["crash_shards"] = tuple(d["crash_shards"])
+    d["hang_shards"] = tuple(d["hang_shards"])
+    assert ChaosPlan(**d) == plan
+    assert not ChaosPlan.profile("none").enabled
+    report = ChaosReport()
+    assert json.loads(report.to_json())["dropped"] == 0

@@ -232,3 +232,83 @@ def test_kernel_tiling_bitwise_under_random_chunking(chunk_sizes, n_kids):
     assert sum(c.measured_j for c in got.children) == got.measured_j
     for a, b in zip(got.children, want.children):
         assert a.measured_j == b.measured_j
+
+
+# ---------------------------------------------------------------------------
+# chaos layer: injected faults vs reported counters, seed determinism
+# ---------------------------------------------------------------------------
+from repro.hw.device import SensorTrace                          # noqa: E402
+from repro.telemetry.faults import (ChaosPlan, FaultySampler,    # noqa: E402
+                                    StreamSanitizer)
+from repro.telemetry.sampler import TraceReplaySampler           # noqa: E402
+
+
+def _chaos_trace(n):
+    """Strictly increasing t and p (p well under the sensor bound), so
+    every repeat, reorder, or non-finite value is injected, not native."""
+    t = 0.01 * np.arange(1, n + 1)
+    p = 100.0 + 1e-4 * np.arange(n)
+    return SensorTrace(t, p, np.full(n, 0.5), np.full(n, 40.0))
+
+
+_plans = st.builds(
+    ChaosPlan,
+    seed=st.integers(0, 2**32 - 1),
+    drop_fraction=st.floats(0.0, 0.1),
+    nan_fraction=st.floats(0.0, 0.05),
+    nan_burst=st.integers(1, 4),
+    spike_fraction=st.floats(0.0, 0.05),
+    stale_fraction=st.floats(0.0, 0.05),
+    stale_run=st.integers(1, 3),
+    dup_fraction=st.floats(0.0, 0.02),
+    swap_fraction=st.floats(0.0, 0.02),
+    granularity=st.sampled_from([256, 1000, 4096]),
+)
+
+
+@given(_plans, st.integers(500, 4000), st.sampled_from([64, 256, 1024]))
+@settings(max_examples=25, deadline=None)
+def test_sanitizer_counters_match_chaos_report_exactly(plan, n, chunk):
+    fs = FaultySampler(TraceReplaySampler(_chaos_trace(n)), plan)
+    san = StreamSanitizer()
+    kept = 0
+    for t, p, u, c in fs.chunks(chunk):
+        t2, *_ = san.chunk(t, p, u, c)
+        kept += int(np.asarray(t2).size)
+    rep = fs.report
+    assert rep.samples_in == n
+    assert san.total_in == rep.samples_out == n - rep.dropped
+    want = rep.expected_quarantine
+    assert san.quarantined_nonfinite == want["nonfinite"]
+    assert san.quarantined_spike == want["spikes"]
+    assert san.quarantined_out_of_order == want["out_of_order"]
+    assert kept == rep.samples_out - san.quarantined
+    assert san.stale_suspects == rep.stale_samples
+
+
+@given(_plans, st.integers(500, 2000))
+@settings(max_examples=15, deadline=None)
+def test_chaos_report_deterministic_in_seed(plan, n):
+    def one(chunk):
+        fs = FaultySampler(TraceReplaySampler(_chaos_trace(n)), plan)
+        sink = [np.asarray(t).copy() for t, _, _, _ in fs.chunks(chunk)]
+        return fs.report.to_json(), sink
+    ra, sa = one(128)
+    rb, sb = one(512)
+    assert ra == rb                       # identical report, byte for byte
+    np.testing.assert_array_equal(np.concatenate(sa) if sa else np.empty(0),
+                                  np.concatenate(sb) if sb else np.empty(0))
+
+
+@given(st.integers(1, 4000), st.sampled_from([32, 256, 4096]))
+@settings(max_examples=25, deadline=None)
+def test_disabled_fault_layer_passthrough_bitwise(n, chunk):
+    tr = _chaos_trace(n)
+    fs = FaultySampler(TraceReplaySampler(tr), ChaosPlan.profile("none"))
+    out = list(fs.chunks(chunk))
+    ref = list(TraceReplaySampler(tr).chunks(chunk))
+    assert len(out) == len(ref)
+    for got, want in zip(out, ref):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert fs.report.samples_in == 0      # identity path: nothing counted

@@ -1,0 +1,171 @@
+"""SampleRing / SharedSampleRing edge cases: bulk-extend accounting.
+
+``extend`` must match ``append`` called per sample *exactly* — same
+visible window, same ``total``, same ``dropped`` — for every edge the
+chaos layer can produce: empty chunks, chunks that exactly fill the
+ring, overflow bursts larger than capacity, and arbitrary interleavings
+of the two paths starting from any head position.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.telemetry.sampler import PowerSample, SampleRing
+
+try:
+    from repro.telemetry.sampler import SharedSampleRing
+except ImportError:                                  # platform without shm
+    SharedSampleRing = None
+
+
+def _chunk(n, start=0.0, dt=0.01):
+    t = start + dt * np.arange(1, n + 1)
+    return t, 100.0 + t, 0.5 * np.ones(n), 40.0 * np.ones(n)
+
+
+def _reference(capacity, chunks):
+    """Ground truth: the per-sample append path."""
+    ring = SampleRing(capacity)
+    for t, p, u, c in chunks:
+        for i in range(len(t)):
+            ring.append(PowerSample(t[i], p[i], u[i], c[i]))
+    return ring
+
+
+def _assert_same(a: SampleRing, b: SampleRing):
+    assert a.total == b.total
+    assert a.dropped == b.dropped
+    assert len(a) == len(b)
+    ta, pa = a.arrays()
+    tb, pb = b.arrays()
+    np.testing.assert_array_equal(ta, tb)
+    np.testing.assert_array_equal(pa, pb)
+
+
+def test_zero_length_extend_is_a_noop():
+    ring = SampleRing(8)
+    ring.extend(*_chunk(3))
+    before = (ring.total, ring.dropped, len(ring))
+    assert ring.extend([], []) == 0
+    assert ring.extend(np.empty(0), np.empty(0),
+                       np.empty(0), np.empty(0)) == 0
+    assert (ring.total, ring.dropped, len(ring)) == before
+    t, p = ring.arrays()
+    assert t.size == 3
+
+
+def test_mismatched_field_lengths_fail_loud():
+    ring = SampleRing(8)
+    with pytest.raises(ValueError, match="lengths disagree"):
+        ring.extend([1.0, 2.0], [100.0])             # short power
+    with pytest.raises(ValueError, match="lengths disagree"):
+        ring.extend([1.0, 2.0], [100.0, 101.0], util=[0.5])
+    with pytest.raises(ValueError, match="lengths disagree"):
+        ring.extend([1.0], [100.0], temp_c=[40.0, 41.0])
+    # a scalar power would otherwise broadcast silently
+    with pytest.raises(ValueError, match="lengths disagree"):
+        ring.extend([1.0, 2.0], 100.0)
+    assert ring.total == 0 and ring.dropped == 0     # nothing half-applied
+
+
+def test_exact_fill_then_single_overflow():
+    cap = 16
+    ring = SampleRing(cap)
+    assert ring.extend(*_chunk(cap)) == cap
+    assert ring.total == cap and ring.dropped == 0 and len(ring) == cap
+    ring.extend(*_chunk(1, start=1.0))
+    assert ring.dropped == 1 and len(ring) == cap
+    t, _ = ring.arrays()
+    assert t[0] == pytest.approx(0.02)               # oldest rolled off
+
+
+@pytest.mark.parametrize("burst", [16, 17, 30, 31, 32, 100])
+def test_overflow_burst_larger_than_capacity(burst):
+    cap = 16
+    chunks = [_chunk(5), _chunk(burst, start=10.0)]
+    ring = SampleRing(cap)
+    for ch in chunks:
+        ring.extend(*ch)
+    _assert_same(ring, _reference(cap, chunks))
+    assert ring.total == 5 + burst
+    assert ring.dropped == 5 + burst - cap
+    # only the burst's tail is visible, oldest first
+    t, _ = ring.arrays()
+    np.testing.assert_array_equal(t, chunks[1][0][-cap:])
+
+
+def test_burst_from_nonzero_head_position():
+    cap = 8
+    for pre in range(1, cap + 1):                    # every head offset
+        chunks = [_chunk(pre), _chunk(3 * cap + 1, start=50.0)]
+        ring = SampleRing(cap)
+        for ch in chunks:
+            ring.extend(*ch)
+        _assert_same(ring, _reference(cap, chunks))
+
+
+def test_randomized_interleavings_match_per_sample_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        cap = int(rng.integers(2, 40))
+        ring = SampleRing(cap)
+        chunks, t0 = [], 0.0
+        for _ in range(int(rng.integers(1, 12))):
+            n = int(rng.integers(0, 3 * cap))
+            ch = _chunk(n, start=t0)
+            t0 += 0.01 * (n + 1)
+            chunks.append(ch)
+            ring.extend(*ch)
+        _assert_same(ring, _reference(cap, chunks))
+
+
+def test_extend_defaults_util_temp_to_nan():
+    ring = SampleRing(8)
+    ring.extend([1.0, 2.0], [100.0, 101.0])
+    tr = ring.to_trace()
+    assert np.isnan(tr.util).all() and np.isnan(tr.temp_c).all()
+    s = ring.latest()
+    assert s.t_s == 2.0 and math.isnan(s.util)
+
+
+# ---------------------------------------------------------------------------
+# shared-memory ring: same accounting through the shm-backed subclass
+# ---------------------------------------------------------------------------
+def _shared(capacity):
+    pytest.importorskip("multiprocessing.shared_memory")
+    return SharedSampleRing.create(capacity)
+
+
+def test_shared_ring_overflow_burst_and_attach_views():
+    ring = _shared(8)
+    try:
+        chunks = [_chunk(3), _chunk(20, start=5.0)]
+        for ch in chunks:
+            ring.extend(*ch)
+        _assert_same(ring, _reference(8, chunks))
+        assert ring.dropped == 15
+        other = SharedSampleRing.attach(ring.shm.name)
+        try:
+            # header counters travel through the segment, not pickling
+            assert other.total == 23 and other.dropped == 15
+            t_mine, _ = ring.arrays()
+            t_theirs, _ = other.arrays()
+            np.testing.assert_array_equal(t_mine, t_theirs)
+        finally:
+            other.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shared_ring_zero_length_and_mismatch():
+    ring = _shared(4)
+    try:
+        assert ring.extend([], []) == 0
+        with pytest.raises(ValueError, match="lengths disagree"):
+            ring.extend([1.0, 2.0], [100.0])
+        assert ring.total == 0
+    finally:
+        ring.close()
+        ring.unlink()
